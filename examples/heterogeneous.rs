@@ -1,0 +1,67 @@
+//! Heterogeneous-cluster selection (Sec. 4.1 Remark + Fig. 20): provision
+//! the 12-workload App table on V100 (p3.2xlarge) and T4 (g4dn.xlarge)
+//! pools, replicate workloads that cannot fit a single T4, and adopt the
+//! cheapest plan.
+//!
+//!   cargo run --release --example heterogeneous
+
+use igniter::gpu::GpuKind;
+use igniter::provisioner::{heterogeneous, ProfiledSystem};
+use igniter::util::table::{pct, Table};
+use igniter::workload::app_workloads;
+
+fn sys(kind: GpuKind) -> ProfiledSystem {
+    let (hw, wls) = igniter::profiler::profile_all(kind, 42);
+    ProfiledSystem {
+        hw,
+        coeffs: igniter::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    }
+}
+
+fn main() {
+    let specs = app_workloads();
+    let systems = [sys(GpuKind::V100), sys(GpuKind::T4)];
+    let plans = heterogeneous::select_cheapest(&systems, &specs);
+
+    let mut t = Table::new(
+        "candidate plans (cheapest first; paper: 15x T4 $7.89/h vs 6x V100 $18.36/h)",
+        &["gpu", "instances", "$/h", "expanded workloads"],
+    );
+    for tp in &plans {
+        t.row(&[
+            tp.plan.gpu.clone(),
+            tp.plan.num_gpus().to_string(),
+            format!("{:.2}", tp.plan.cost_per_hour()),
+            tp.replicated.specs.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let winner = &plans[0];
+    println!("selected {}:", winner.plan.gpu);
+    let mut d = Table::new(
+        "winning plan detail",
+        &["gpu", "workload", "resources", "batch"],
+    );
+    for (g, a) in winner.plan.all() {
+        d.row(&[
+            format!("GPU{}", g + 1),
+            winner.replicated.specs[a.workload].name.clone(),
+            pct(a.resources),
+            a.batch.to_string(),
+        ]);
+    }
+    println!("{}", d.render());
+
+    // replication report (the paper's "2+ g4dn.xlarge for W7/W8/W10/W12")
+    for w in 0..specs.len() {
+        let n = winner.replicated.origin.iter().filter(|&&o| o == w).count();
+        if n > 1 {
+            println!(
+                "  {} split into {n} rate-sharing replicas ({} r/s each)",
+                specs[w].name,
+                specs[w].rate_rps / n as f64
+            );
+        }
+    }
+}

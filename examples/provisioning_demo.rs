@@ -1,0 +1,71 @@
+//! Provisioning walkthrough (the paper's Sec.-2.3 illustrative example):
+//! the Table-1 trio A(15 ms, 500 r/s) / R(40 ms, 400 r/s) / V(60 ms,
+//! 200 r/s) provisioned by all five strategies, with predicted latencies
+//! against the half-SLO budget.
+//!
+//!   cargo run --release --example provisioning_demo
+
+use igniter::gpu::GpuKind;
+use igniter::provisioner::{ffd, gpulets, gslice, igniter as ig, Plan, ProfiledSystem};
+use igniter::util::table::{f, pct, Table};
+use igniter::workload::table1_workloads;
+
+fn main() {
+    let (hw, wls) = igniter::profiler::profile_all(GpuKind::V100, 42);
+    let sys = ProfiledSystem {
+        hw,
+        coeffs: igniter::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    };
+    let specs = table1_workloads();
+
+    println!("Theorem-1 derived quantities (Eq. 17 / Eq. 18):");
+    let derived = ig::derive_all(&sys, &specs);
+    for (w, d) in derived.iter().enumerate() {
+        let d = d.unwrap();
+        println!(
+            "  {}: b_appr = {}, r_lower = {}",
+            specs[w].name,
+            d.batch,
+            pct(d.r_lower)
+        );
+    }
+    println!();
+
+    let plans: Vec<Plan> = vec![
+        ig::provision(&sys, &specs),
+        ffd::provision_ffd(&sys, &specs),
+        ffd::provision_ffd_pp(&sys, &specs),
+        gslice::provision_gslice(&sys, &specs),
+        gpulets::provision_gpulets(&sys, &specs),
+    ];
+
+    let mut t = Table::new(
+        "Table-1 example: plans + predicted latency vs. half-SLO",
+        &["strategy", "gpus", "$/h", "workload", "r", "batch", "pred_ms", "half_slo", "ok"],
+    );
+    for plan in &plans {
+        for (w, t_inf, _) in ig::predict_plan(&sys, &specs, plan) {
+            let (g, a) = plan.find(w).unwrap();
+            let _ = g;
+            t.row(&[
+                plan.strategy.clone(),
+                plan.num_gpus().to_string(),
+                format!("{:.2}", plan.cost_per_hour()),
+                specs[w].name.clone(),
+                pct(a.resources),
+                a.batch.to_string(),
+                f(t_inf, 2),
+                f(specs[w].slo_ms / 2.0, 1),
+                (t_inf <= specs[w].slo_ms / 2.0 + 1e-9).to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    let ig_plan = &plans[0];
+    println!(
+        "iGniter fits all three on {} GPU(s) — paper Table 1: \
+         A(10%,4) R(30%,8) V(37.5%,6) on one GPU, no violations.",
+        ig_plan.num_gpus()
+    );
+}

@@ -1,0 +1,40 @@
+//! Quickstart: load one AOT-compiled model, verify its numerics against the
+//! Python golden, and serve a few real batched requests through PJRT.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use igniter::runtime::{Engine, Manifest};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&dir)?;
+    println!("artifact zoo: {:?}", manifest.names());
+
+    let mut engine = Engine::new(manifest)?;
+
+    // 1. Numerics: the compiled HLO must reproduce the Python forward pass.
+    let err = engine.verify_golden("resnet50", 1e-3)?;
+    println!("resnet50 golden check: max |err| = {err:.2e}");
+
+    // 2. Serve a batch of 8 synthetic requests.
+    engine.load_variant("resnet50", 8)?;
+    let lv = engine.variant("resnet50", 8).unwrap();
+    let per_req: usize = lv.variant.input_len() / 8;
+    let input: Vec<f32> = (0..8 * per_req).map(|i| (i % 255) as f32 / 255.0).collect();
+    let t0 = std::time::Instant::now();
+    let logits = lv.execute(&input)?;
+    println!(
+        "batch-8 inference: {} logits in {:.2} ms (wall clock, CPU PJRT)",
+        logits.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // 3. Partial batch with padding (what the dynamic batcher does).
+    let three = lv.execute_padded(&input[..3 * per_req], 3)?;
+    println!("padded batch-3: {} logits", three.len());
+    assert_eq!(three.len(), 3 * logits.len() / 8);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,141 @@
+"""AOT lowering: JAX model zoo -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Outputs (under --out-dir, default ../artifacts):
+  <model>_b<batch>.hlo.txt   one executable per (model, batch-size) variant
+  golden_<model>.json        input/output pair at batch=1 for Rust numerics tests
+  manifest.json              registry the Rust runtime loads at startup
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
+                                           [--models a,b,..] [--batches 1,4,..]
+Python runs ONCE at build time (make artifacts); it is never on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import MODEL_NAMES, get_model, make_input
+
+# Batch-size variants compiled per model.  The coordinator's dynamic batcher
+# rounds a queue up to the nearest compiled variant (padding the batch), so
+# this ladder bounds padding waste at 2x in the worst case.
+DEFAULT_BATCHES = (1, 2, 4, 8, 16, 32)
+
+GOLDEN_BATCH = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked-in model weights MUST round-trip
+    # through the text format (the default elides big literals as "{...}",
+    # which parses back as garbage on the Rust side).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(name: str, batch: int):
+    """Lower one zoo model at one batch size; returns (hlo_text, out_shape)."""
+    fwd, hwc, _ = get_model(name)
+    spec = jax.ShapeDtypeStruct((batch, *hwc), np.float32)
+    lowered = jax.jit(fwd).lower(spec)
+    out_shape = lowered.out_info.shape
+    return to_hlo_text(lowered), tuple(out_shape)
+
+
+def build_artifacts(out_dir: str, models, batches, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "models": []}
+
+    for name in models:
+        fwd, hwc, nparams = get_model(name)
+        entry = {
+            "name": name,
+            "input_hwc": list(hwc),
+            "param_count": nparams,
+            "variants": [],
+        }
+        for batch in batches:
+            t0 = time.time()
+            hlo, out_shape = lower_model(name, batch)
+            fname = f"{name}_b{batch}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            entry["variants"].append(
+                {
+                    "batch": batch,
+                    "file": fname,
+                    "input_shape": [batch, *hwc],
+                    "output_shape": list(out_shape),
+                }
+            )
+            if verbose:
+                print(
+                    f"  {fname}: {len(hlo) / 1e6:.2f} MB HLO text "
+                    f"out={list(out_shape)} ({time.time() - t0:.1f}s)",
+                    flush=True,
+                )
+
+        # Golden input/output for the Rust numerics integration test.
+        x = make_input(name, GOLDEN_BATCH, seed=0)
+        y = np.asarray(fwd(x))
+        golden = {
+            "model": name,
+            "batch": GOLDEN_BATCH,
+            "input_shape": list(x.shape),
+            "output_shape": list(y.shape),
+            "input": [float(v) for v in x.reshape(-1)],
+            "output": [float(v) for v in y.reshape(-1)],
+        }
+        gname = f"golden_{name}.json"
+        with open(os.path.join(out_dir, gname), "w") as f:
+            json.dump(golden, f)
+        entry["golden"] = gname
+        manifest["models"].append(entry)
+        if verbose:
+            print(f"  {gname}: |out| mean {np.abs(y).mean():.4f}", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--models", default=",".join(MODEL_NAMES))
+    ap.add_argument("--batches", default=",".join(str(b) for b in DEFAULT_BATCHES))
+    args = ap.parse_args()
+
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    batches = [int(b) for b in args.batches.split(",") if b.strip()]
+    for m in models:
+        if m not in MODEL_NAMES:
+            print(f"unknown model {m!r}; zoo: {MODEL_NAMES}", file=sys.stderr)
+            return 2
+
+    t0 = time.time()
+    print(f"AOT-lowering {models} x batches {batches} -> {args.out_dir}")
+    build_artifacts(args.out_dir, models, batches)
+    print(f"done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

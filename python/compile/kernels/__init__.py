@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels (interpret=True) and their pure-jnp oracles."""
+
+from .matmul import matmul, vmem_footprint_bytes, mxu_utilization_estimate
+from .conv2d import conv2d, conv_output_shape
+from .conv_direct import conv2d_direct
+from .pooling import maxpool2d, global_avgpool
+from . import ref
+
+__all__ = [
+    "matmul",
+    "conv2d",
+    "conv_output_shape",
+    "conv2d_direct",
+    "maxpool2d",
+    "global_avgpool",
+    "vmem_footprint_bytes",
+    "mxu_utilization_estimate",
+    "ref",
+]

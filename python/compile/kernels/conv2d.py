@@ -1,0 +1,88 @@
+"""Layer-1: 2-D convolution lowered to the Pallas matmul kernel via im2col.
+
+The paper's workloads (AlexNet / ResNet-50 / VGG-19 / SSD) are convolution
+dominated; TensorRT lowers their convolutions to implicit-GEMM CUDA kernels.
+The TPU-idiomatic equivalent is explicit im2col (patch extraction is a cheap
+gather that XLA fuses) feeding the MXU-shaped tiled matmul in ``matmul.py``,
+so the hot FLOPs stay inside the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    activation: Optional[str] = None,
+    bm: int = 2048,
+    bn: int = 128,
+    bk: int = 2048,
+) -> jnp.ndarray:
+    """NHWC conv: x (B, H, W, Cin), w (KH, KW, Cin, Cout) -> (B, HO, WO, Cout).
+
+    Patch extraction (im2col) reshapes the problem to a
+    ``(B*HO*WO, KH*KW*Cin) @ (KH*KW*Cin, Cout)`` matmul executed by the
+    Pallas kernel, with bias + activation fused into its epilogue.
+
+    Tile defaults (see EXPERIMENTS.md §Perf): conv matmuls are tall and
+    skinny (M = B*HO*WO up to ~32k, K <= ~1k, N <= 128), so the M tile is
+    large (512) and K/N are taken whole.  This keeps the Pallas grid — and
+    hence pipeline depth — small: per-step VMEM is
+    ``512*K*4 + K*128*4 + 512*128*4`` ≈ 2.3 MB at K = 864, comfortably
+    inside a 16 MB VMEM with double buffering, while the deep-grid
+    alternative (128³ tiles) costs ~40x more wall time under the
+    interpret-mode while-loop lowering.
+    """
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d expects NHWC x and KHWIO w, got {x.shape}, {w.shape}")
+    b, h, wid, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    if cin != cin2:
+        raise ValueError(f"channel mismatch: x has {cin}, w has {cin2}")
+
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (wid + 2 * padding - kw) // stride + 1
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty output for x={x.shape} w={w.shape} "
+                         f"stride={stride} padding={padding}")
+
+    # im2col: (B, HO, WO, KH*KW*Cin).  conv_general_dilated_patches returns
+    # feature dimension ordered as (Cin, KH, KW) for NHWC inputs, so the
+    # weight matrix below is transposed to match.
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    cols = patches.reshape(b * ho * wo, cin * kh * kw)
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+
+    out = matmul(cols, wmat, bias, activation=activation, bm=bm, bn=bn, bk=bk)
+    return out.reshape(b, ho, wo, cout)
+
+
+def conv_output_shape(
+    x_shape: Tuple[int, int, int, int],
+    w_shape: Tuple[int, int, int, int],
+    stride: int,
+    padding: int,
+) -> Tuple[int, int, int, int]:
+    """Static shape helper mirrored by the Rust model zoo."""
+    b, h, w, _ = x_shape
+    kh, kw, _, cout = w_shape
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    return (b, ho, wo, cout)

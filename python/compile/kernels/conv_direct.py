@@ -1,0 +1,117 @@
+"""Layer-1 alternative schedule: *direct* (weight-stationary) convolution.
+
+Where ``conv2d.py`` lowers convolution to one big im2col matmul (activation-
+stationary: patches are materialized, weights stream through the MXU), this
+kernel keeps the weights resident in VMEM and accumulates KH*KW shifted
+``(HO*WO, Cin) @ (Cin, Cout)`` contractions per image — the classic direct
+schedule.  Grid = (B,): one image per step, so per-step VMEM is the padded
+image + the full filter bank + the output tile (all small for the zoo's
+shapes).
+
+Trade-off vs. im2col (measured in python/tests/test_conv_direct.py and
+discussed in EXPERIMENTS.md §Perf): direct avoids the KH*KW-fold patch
+blow-up in HBM traffic, but issues KH*KW smaller MXU contractions whose
+inner dimension is only Cin — poor MXU utilization for the zoo's shallow
+layers (Cin 3..96), which is why im2col remains the default everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _activation(x: jnp.ndarray, kind: Optional[str]) -> jnp.ndarray:
+    if kind is None or kind == "none":
+        return x
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation: {kind}")
+
+
+def _direct_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, kh: int,
+                   kw: int, ho: int, wo: int, activation: Optional[str]):
+    """x block: (1, Hp, Wp, Cin) padded; w: (KH, KW, Cin, Cout)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    cout = w.shape[-1]
+    acc = jnp.zeros((1, ho, wo, cout), dtype=jnp.float32)
+    # Static KH x KW loop: each term is a strided spatial shift contracted
+    # over Cin — the weight tile w[i, j] stays resident across the image.
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (0, i, j, 0),
+                (1, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, x.shape[3]),
+                (1, stride, stride, 1),
+            )  # (1, HO, WO, Cin)
+            acc = acc + jnp.einsum(
+                "bhwc,cd->bhwd", patch, w[i, j], preferred_element_type=jnp.float32
+            )
+    acc = acc + b_ref[...].astype(jnp.float32)
+    o_ref[...] = _activation(acc, activation)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "activation"))
+def conv2d_direct(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    activation: Optional[str] = None,
+) -> jnp.ndarray:
+    """NHWC direct convolution; same contract as ``conv2d.conv2d``."""
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d_direct expects NHWC x and KHWIO w, got {x.shape}, {w.shape}")
+    b, h, wid, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    if cin != cin2:
+        raise ValueError(f"channel mismatch: {cin} vs {cin2}")
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (wid + 2 * padding - kw) // stride + 1
+    if ho <= 0 or wo <= 0:
+        raise ValueError("empty output")
+
+    xp = jnp.pad(
+        x.astype(jnp.float32),
+        ((0, 0), (padding, padding), (padding, padding), (0, 0)),
+    )
+    hp, wp = xp.shape[1], xp.shape[2]
+    bvec = (bias if bias is not None else jnp.zeros(cout)).astype(jnp.float32)
+
+    kernel = functools.partial(
+        _direct_kernel,
+        stride=stride,
+        kh=kh,
+        kw=kw,
+        ho=ho,
+        wo=wo,
+        activation=activation,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cout), jnp.float32),
+        interpret=True,
+    )(xp, w.astype(jnp.float32), bvec)
+
+
+def vmem_footprint_direct(hp: int, wp: int, cin: int, kh: int, kw: int,
+                          cout: int, ho: int, wo: int) -> int:
+    """Per-step VMEM bytes: padded image + filters + f32 accumulator."""
+    return 4 * (hp * wp * cin + kh * kw * cin * cout + ho * wo * cout)

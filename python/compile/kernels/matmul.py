@@ -1,0 +1,186 @@
+"""Layer-1 Pallas kernels: tiled matmul with optional fused bias + activation.
+
+This is the compute hot-spot of every network in the zoo (convolutions are
+lowered to matmul via im2col in ``conv2d.py``, dense layers call it directly).
+
+Hardware adaptation (the paper targeted CUDA/TensorRT): instead of porting
+threadblock tiling, the kernel is tiled for a VMEM-style scratchpad —
+``BlockSpec`` expresses the HBM<->VMEM schedule, the MXU-friendly inner tile
+is an ``(bm, bk) @ (bk, bn)`` contraction accumulated across the K grid
+dimension (the Pallas pipeline emitter overlaps the HBM loads of grid step
+k+1 with the compute of step k, which is the double-buffering the paper's
+CUDA kernels do by hand).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO so the Rust
+runtime can run the resulting module anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-friendly tile sizes.  128x128 matches the MXU systolic array;
+# for the tiny models in this repo the wrapper clamps tiles to the (padded)
+# problem size so the grid never degenerates.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _activation(x: jnp.ndarray, kind: Optional[str]) -> jnp.ndarray:
+    if kind is None or kind == "none":
+        return x
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation: {kind}")
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nsteps_k: int,
+                   activation: Optional[str]):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis.
+
+    The f32 output tile doubles as the accumulator: zeroed at k == 0,
+    accumulated across K steps, activated at the last step.  This keeps the
+    kernel portable across interpret-mode backends (no scratch semantics to
+    worry about) at the cost of the activation being a separate pass over
+    the tile — negligible next to the MXU contraction.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    if activation not in (None, "none"):
+        @pl.when(pl.program_id(2) == nsteps_k - 1)
+        def _act():
+            o_ref[...] = _activation(o_ref[...], activation)
+
+
+def _matmul_bias_kernel(x_ref, y_ref, b_ref, o_ref, *, nsteps_k: int,
+                        activation: Optional[str]):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nsteps_k - 1)
+    def _finish():
+        out = o_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        o_ref[...] = _activation(out, activation)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk"))
+def matmul(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    activation: Optional[str] = None,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jnp.ndarray:
+    """``activation(x @ y + bias)`` as a tiled Pallas kernel.
+
+    ``x``: (M, K), ``y``: (K, N), ``bias``: (N,) or None.  Inputs are padded
+    up to tile multiples (zero padding is exact for matmul + bias +
+    relu/sigmoid on the rows/cols that survive the final slice) and the
+    result is sliced back to (M, N).  Output dtype is float32.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+
+    # Clamp tiles to the padded problem so tiny layers get a small grid
+    # instead of wasting a 128-wide tile on an 8-wide matrix.
+    bm_ = min(bm, _ceil_to(m, 8))
+    bn_ = min(bn, _ceil_to(n, 8))
+    bk_ = min(bk, _ceil_to(k, 8))
+
+    mp, np_, kp = _ceil_to(m, bm_), _ceil_to(n, bn_), _ceil_to(k, bk_)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    nsteps_k = grid[2]
+
+    if bias is not None:
+        if bias.shape != (n,):
+            raise ValueError(f"bias shape {bias.shape} != ({n},)")
+        bp = jnp.pad(bias.astype(jnp.float32), (0, np_ - n))
+        kernel = functools.partial(
+            _matmul_bias_kernel, nsteps_k=nsteps_k, activation=activation
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+                pl.BlockSpec((bn_,), lambda i, j, kk: (j,)),
+            ],
+            out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, yp, bp)
+    else:
+        kernel = functools.partial(
+            _matmul_kernel, nsteps_k=nsteps_k, activation=activation
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, yp)
+
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Estimated per-step VMEM residency of the kernel (double-buffered
+    input tiles + f32 output/accumulator tile).  Used by DESIGN.md §Perf
+    and the kernel-shape sweep in python/tests."""
+    x_tile = bm * bk * itemsize
+    y_tile = bk * bn * itemsize
+    out = bm * bn * 4
+    return 2 * (x_tile + y_tile) + out
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int,
+                             bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                             bk: int = DEFAULT_BK) -> float:
+    """Fraction of MXU issue slots doing useful work = useful MACs over
+    MACs issued for the padded problem.  1.0 when all dims divide tiles."""
+    bm_ = min(bm, _ceil_to(m, 8))
+    bn_ = min(bn, _ceil_to(n, 8))
+    bk_ = min(bk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm_), _ceil_to(n, bn_), _ceil_to(k, bk_)
+    return (m * n * k) / float(mp * np_ * kp)

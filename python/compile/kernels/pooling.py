@@ -1,0 +1,55 @@
+"""Layer-1: Pallas max-pooling kernel (window = stride, the only case the
+model zoo needs) plus a global-average-pool helper.
+
+Pooling is bandwidth bound, so the BlockSpec keeps whole (batch-row, W, C)
+stripes resident and reduces in-register; each grid step handles one batch
+element's output row stripe.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k: int):
+    """x block: (1, H, W, C) -> o block: (1, H/k, W/k, C)."""
+    x = x_ref[...]
+    _, h, w, c = x.shape
+    # (1, H/k, k, W/k, k, C): reduce the two window axes.
+    xr = x.reshape(1, h // k, k, w // k, k, c)
+    o_ref[...] = jnp.max(xr, axis=(2, 4))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def maxpool2d(x: jnp.ndarray, k: int = 2) -> jnp.ndarray:
+    """NHWC max pool with square window ``k`` and stride ``k``.
+
+    Requires H and W divisible by ``k`` (the model zoo pads upstream).
+    Grid = (B,): one whole image per step — pooling is bandwidth bound and
+    the per-image VMEM stripe is tiny (<= H*W*C*4 ≈ 100 KB for the zoo),
+    so a shallow grid wins over per-row stripes (see EXPERIMENTS.md §Perf:
+    the (B, H/k) grid cost ~6x more wall time under the interpret-mode
+    while-loop lowering).
+    """
+    b, h, w, c = x.shape
+    if h % k or w % k:
+        raise ValueError(f"maxpool2d: H, W must divide k={k}, got {x.shape}")
+    ho, wo = h // k, w // k
+
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, k=k),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def global_avgpool(x: jnp.ndarray) -> jnp.ndarray:
+    """NHWC -> (B, C) mean over spatial dims (pure jnp; XLA fuses it)."""
+    return jnp.mean(x, axis=(1, 2))

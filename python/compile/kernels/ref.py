@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+pytest (``python/tests``) asserts ``assert_allclose(kernel, ref)`` across a
+hypothesis-driven sweep of shapes and parameters; the Rust integration tests
+compare the AOT-compiled HLO modules against golden outputs produced through
+these same oracles.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _activation(x: jnp.ndarray, kind: Optional[str]) -> jnp.ndarray:
+    if kind is None or kind == "none":
+        return x
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation: {kind}")
+
+
+def ref_matmul(x, y, bias=None, *, activation=None):
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return _activation(out, activation)
+
+
+def ref_conv2d(x, w, bias=None, *, stride=1, padding=0, activation=None):
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return _activation(out, activation)
+
+
+def ref_maxpool2d(x, k=2):
+    init = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min
+    return jax.lax.reduce_window(
+        x,
+        init,
+        jax.lax.max,
+        window_dimensions=(1, k, k, 1),
+        window_strides=(1, k, k, 1),
+        padding="VALID",
+    )
+
+
+def ref_global_avgpool(x):
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,221 @@
+"""Layer-2: the DNN model zoo in JAX, built on the Layer-1 Pallas kernels.
+
+The paper evaluates four networks (AlexNet, ResNet-50, VGG-19, SSD).  Full
+ImageNet-scale TensorRT engines are not reproducible on this CPU-only
+testbed, so the zoo contains architecturally-faithful scaled-down variants
+("tiny_*") whose *relative* compute cost preserves the paper's ordering
+(Table 3: 0.77 / 4.14 / 19.77 / 62.82 GFLOPs):
+
+  tiny_alexnet : conv-pool stack + 2 FC heads          (lightest)
+  tiny_resnet  : residual blocks + global-avg-pool head
+  tiny_vgg     : doubled 3x3 conv blocks, FC head      (conv heavy)
+  tiny_ssd     : conv backbone + multi-scale loc/cls detection heads (heaviest)
+
+Every convolution / dense layer executes inside the Pallas matmul kernel
+(``kernels.conv2d`` im2cols into it), every pool inside the Pallas pooling
+kernel, so the whole forward pass lowers into one HLO module with the
+Pallas pipeline inlined.  Weights are deterministic (seeded) and baked into
+the module as constants: the Rust serving path ships *only* the input batch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import conv2d, global_avgpool, matmul, maxpool2d
+
+# ---------------------------------------------------------------------------
+# Deterministic parameter construction
+
+
+class _ParamFactory:
+    """He-initialised deterministic weights; tracks parameter count."""
+
+    def __init__(self, seed: int):
+        self._rng = np.random.RandomState(seed)
+        self.param_count = 0
+
+    def conv(self, kh: int, kw: int, cin: int, cout: int):
+        fan_in = kh * kw * cin
+        w = self._rng.randn(kh, kw, cin, cout).astype(np.float32)
+        w *= np.sqrt(2.0 / fan_in)
+        b = np.zeros(cout, dtype=np.float32)
+        self.param_count += w.size + b.size
+        return jnp.asarray(w), jnp.asarray(b)
+
+    def dense(self, din: int, dout: int):
+        w = self._rng.randn(din, dout).astype(np.float32) * np.sqrt(2.0 / din)
+        b = np.zeros(dout, dtype=np.float32)
+        self.param_count += w.size + b.size
+        return jnp.asarray(w), jnp.asarray(b)
+
+
+# ---------------------------------------------------------------------------
+# Networks (NHWC, f32).  Classifiers take (B, 32, 32, 3) -> (B, 10) logits;
+# tiny_ssd takes (B, 64, 64, 3) -> (B, anchors, 4 + classes).
+
+NUM_CLASSES = 10
+CLS_INPUT = (32, 32, 3)
+SSD_INPUT = (64, 64, 3)
+SSD_CLASSES = 8
+SSD_ANCHORS_PER_CELL = 2
+
+
+def _flatten(x: jnp.ndarray) -> jnp.ndarray:
+    return x.reshape(x.shape[0], -1)
+
+
+def build_tiny_alexnet() -> Tuple[Callable, int]:
+    p = _ParamFactory(seed=11)
+    w1, b1 = p.conv(3, 3, 3, 16)     # 32x32x3 -> 16x16x16 (stride 2)
+    w2, b2 = p.conv(3, 3, 16, 32)    # 8x8x16 -> 8x8x32 (after pool)
+    w3, b3 = p.conv(3, 3, 32, 48)    # 4x4x32 -> 4x4x48 (after pool)
+    wf1, bf1 = p.dense(4 * 4 * 48, 96)
+    wf2, bf2 = p.dense(96, NUM_CLASSES)
+
+    def fwd(x: jnp.ndarray) -> jnp.ndarray:
+        x = conv2d(x, w1, b1, stride=2, padding=1, activation="relu")
+        x = maxpool2d(x, 2)
+        x = conv2d(x, w2, b2, stride=1, padding=1, activation="relu")
+        x = maxpool2d(x, 2)
+        x = conv2d(x, w3, b3, stride=1, padding=1, activation="relu")
+        x = matmul(_flatten(x), wf1, bf1, activation="relu")
+        return matmul(x, wf2, bf2)
+
+    return fwd, p.param_count
+
+
+def build_tiny_resnet() -> Tuple[Callable, int]:
+    p = _ParamFactory(seed=23)
+    ws, bs = p.conv(3, 3, 3, 16)               # stem
+
+    def res_block(cin: int, cout: int, stride: int):
+        w1, b1 = p.conv(3, 3, cin, cout)
+        w2, b2 = p.conv(3, 3, cout, cout)
+        if stride != 1 or cin != cout:
+            wsc, bsc = p.conv(1, 1, cin, cout)
+        else:
+            wsc = bsc = None
+
+        def block(x: jnp.ndarray) -> jnp.ndarray:
+            y = conv2d(x, w1, b1, stride=stride, padding=1, activation="relu")
+            y = conv2d(y, w2, b2, stride=1, padding=1)
+            sc = x if wsc is None else conv2d(x, wsc, bsc, stride=stride, padding=0)
+            return jnp.maximum(y + sc, 0.0)
+
+        return block
+
+    blocks = [
+        res_block(16, 16, 1),
+        res_block(16, 32, 2),
+        res_block(32, 32, 1),
+        res_block(32, 64, 2),
+    ]
+    wf, bf = p.dense(64, NUM_CLASSES)
+
+    def fwd(x: jnp.ndarray) -> jnp.ndarray:
+        x = conv2d(x, ws, bs, stride=1, padding=1, activation="relu")
+        for blk in blocks:
+            x = blk(x)
+        x = global_avgpool(x)
+        return matmul(x, wf, bf)
+
+    return fwd, p.param_count
+
+
+def build_tiny_vgg() -> Tuple[Callable, int]:
+    p = _ParamFactory(seed=37)
+
+    def vgg_block(cin: int, cout: int):
+        w1, b1 = p.conv(3, 3, cin, cout)
+        w2, b2 = p.conv(3, 3, cout, cout)
+
+        def block(x: jnp.ndarray) -> jnp.ndarray:
+            x = conv2d(x, w1, b1, stride=1, padding=1, activation="relu")
+            x = conv2d(x, w2, b2, stride=1, padding=1, activation="relu")
+            return maxpool2d(x, 2)
+
+        return block
+
+    blocks = [vgg_block(3, 24), vgg_block(24, 48), vgg_block(48, 96)]
+    wf1, bf1 = p.dense(4 * 4 * 96, 192)
+    wf2, bf2 = p.dense(192, NUM_CLASSES)
+
+    def fwd(x: jnp.ndarray) -> jnp.ndarray:
+        for blk in blocks:
+            x = blk(x)
+        x = matmul(_flatten(x), wf1, bf1, activation="relu")
+        return matmul(x, wf2, bf2)
+
+    return fwd, p.param_count
+
+
+def build_tiny_ssd() -> Tuple[Callable, int]:
+    """SSD-style single-shot detector: conv backbone, two feature maps
+    (16x16 and 8x8), per-cell loc (4) + cls (SSD_CLASSES) predictions for
+    SSD_ANCHORS_PER_CELL anchors, concatenated over scales.
+
+    Output: (B, 16*16*A + 8*8*A, 4 + SSD_CLASSES).
+    """
+    p = _ParamFactory(seed=41)
+    w1, b1 = p.conv(3, 3, 3, 24)     # 64 -> 32 (stride 2)
+    w2, b2 = p.conv(3, 3, 24, 48)    # 32 -> 16 (stride 2) => feature map 1
+    w3, b3 = p.conv(3, 3, 48, 96)    # 16 -> 8 (stride 2)  => feature map 2
+    a, c = SSD_ANCHORS_PER_CELL, SSD_CLASSES
+    wl1, bl1 = p.conv(3, 3, 48, a * 4)
+    wc1, bc1 = p.conv(3, 3, 48, a * c)
+    wl2, bl2 = p.conv(3, 3, 96, a * 4)
+    wc2, bc2 = p.conv(3, 3, 96, a * c)
+
+    def head(fm: jnp.ndarray, wl, bl, wc, bc) -> jnp.ndarray:
+        b_ = fm.shape[0]
+        loc = conv2d(fm, wl, bl, stride=1, padding=1)
+        cls = conv2d(fm, wc, bc, stride=1, padding=1)
+        loc = loc.reshape(b_, -1, 4)
+        cls = cls.reshape(b_, -1, c)
+        return jnp.concatenate([loc, cls], axis=-1)
+
+    def fwd(x: jnp.ndarray) -> jnp.ndarray:
+        x = conv2d(x, w1, b1, stride=2, padding=1, activation="relu")
+        f1 = conv2d(x, w2, b2, stride=2, padding=1, activation="relu")
+        f2 = conv2d(f1, w3, b3, stride=2, padding=1, activation="relu")
+        d1 = head(f1, wl1, bl1, wc1, bc1)
+        d2 = head(f2, wl2, bl2, wc2, bc2)
+        return jnp.concatenate([d1, d2], axis=1)
+
+    return fwd, p.param_count
+
+
+# ---------------------------------------------------------------------------
+# Zoo registry — names must match rust/src/models/zoo.rs.
+
+ZOO: Dict[str, dict] = {
+    "alexnet": {"build": build_tiny_alexnet, "input": CLS_INPUT},
+    "resnet50": {"build": build_tiny_resnet, "input": CLS_INPUT},
+    "vgg19": {"build": build_tiny_vgg, "input": CLS_INPUT},
+    "ssd": {"build": build_tiny_ssd, "input": SSD_INPUT},
+}
+
+MODEL_NAMES: List[str] = list(ZOO.keys())
+
+
+@functools.lru_cache(maxsize=None)
+def get_model(name: str) -> Tuple[Callable, Tuple[int, int, int], int]:
+    """Return (forward_fn, input_hwc, param_count) for a zoo model."""
+    if name not in ZOO:
+        raise KeyError(f"unknown model {name!r}; zoo has {MODEL_NAMES}")
+    entry = ZOO[name]
+    fwd, nparams = entry["build"]()
+    return fwd, entry["input"], nparams
+
+
+def make_input(name: str, batch: int, seed: int = 0) -> np.ndarray:
+    """Deterministic synthetic input batch (pixel values are irrelevant to
+    latency; the golden-output tests fix seed=0)."""
+    _, hwc, _ = get_model(name)
+    rng = np.random.RandomState(seed + 1000)
+    return rng.rand(batch, *hwc).astype(np.float32)

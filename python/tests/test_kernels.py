@@ -1,0 +1,162 @@
+"""Layer-1 correctness: Pallas kernels vs. pure-jnp oracles.
+
+Hypothesis sweeps shapes, tile sizes, and activations; every case asserts
+assert_allclose(kernel, ref) — the core numerics signal of the build path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    conv2d,
+    conv_output_shape,
+    global_avgpool,
+    matmul,
+    maxpool2d,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels import ref
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def rand(shape, seed):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    act=st.sampled_from([None, "relu", "sigmoid"]),
+    bias=st.booleans(),
+    seed=st.integers(0, 2**20),
+)
+def test_matmul_matches_ref(m, k, n, act, bias, seed):
+    x = rand((m, k), seed)
+    y = rand((k, n), seed + 1)
+    b = rand((n,), seed + 2) if bias else None
+    out = matmul(jnp.array(x), jnp.array(y), None if b is None else jnp.array(b),
+                 activation=act, bm=32, bn=32, bk=32)
+    expect = ref.ref_matmul(x, y, b, activation=act)
+    assert out.shape == (m, n)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("tiles", [(8, 8, 8), (16, 32, 8), (64, 64, 64), (128, 128, 128)])
+def test_matmul_tile_invariance(tiles):
+    """Output must be independent of the BlockSpec tiling."""
+    bm, bn, bk = tiles
+    x, y, b = rand((70, 50), 0), rand((50, 90), 1), rand((90,), 2)
+    base = ref.ref_matmul(x, y, b, activation="relu")
+    out = matmul(jnp.array(x), jnp.array(y), jnp.array(b),
+                 activation="relu", bm=bm, bn=bn, bk=bk)
+    assert_allclose(np.asarray(out), np.asarray(base), rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((3, 4)), jnp.zeros((5,)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3, 4)), jnp.zeros((3, 4)))
+
+
+def test_matmul_bad_activation():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((4, 4)), jnp.zeros((4, 4)), activation="tanh")
+
+
+def test_vmem_and_mxu_helpers():
+    # 128^2 f32 tiles: 2*(64KB+64KB) + 64KB = 320 KB
+    assert vmem_footprint_bytes(128, 128, 128) == 2 * (65536 + 65536) + 65536
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(100, 100, 100) < 1.0
+    assert mxu_utilization_estimate(100, 100, 100) > 0.2
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(4, 14),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from([0, 1]),
+    act=st.sampled_from([None, "relu"]),
+    seed=st.integers(0, 2**20),
+)
+def test_conv2d_matches_ref(b, h, cin, cout, k, stride, padding, act, seed):
+    if h + 2 * padding < k:
+        return
+    x = rand((b, h, h, cin), seed)
+    w = rand((k, k, cin, cout), seed + 1)
+    bias = rand((cout,), seed + 2)
+    out = conv2d(jnp.array(x), jnp.array(w), jnp.array(bias),
+                 stride=stride, padding=padding, activation=act, bm=32, bn=32, bk=32)
+    expect = ref.ref_conv2d(x, w, bias, stride=stride, padding=padding, activation=act)
+    assert out.shape == tuple(expect.shape)
+    assert out.shape == conv_output_shape(x.shape, w.shape, stride, padding)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=5e-5, atol=5e-5)
+
+
+def test_conv2d_channel_mismatch():
+    with pytest.raises(ValueError):
+        conv2d(jnp.zeros((1, 8, 8, 3)), jnp.zeros((3, 3, 4, 8)))
+
+
+def test_conv2d_empty_output():
+    with pytest.raises(ValueError):
+        conv2d(jnp.zeros((1, 2, 2, 3)), jnp.zeros((5, 5, 3, 8)))
+
+
+# ---------------------------------------------------------------------------
+# pooling
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hw_half=st.integers(1, 8),
+    c=st.integers(1, 8),
+    k=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**20),
+)
+def test_maxpool_matches_ref(b, hw_half, c, k, seed):
+    h = hw_half * k
+    x = rand((b, h, h, c), seed)
+    out = maxpool2d(jnp.array(x), k)
+    expect = ref.ref_maxpool2d(jnp.array(x), k)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=0, atol=0)
+
+
+def test_maxpool_rejects_indivisible():
+    with pytest.raises(ValueError):
+        maxpool2d(jnp.zeros((1, 5, 4, 2)), 2)
+
+
+def test_global_avgpool():
+    x = rand((2, 4, 4, 3), 0)
+    assert_allclose(
+        np.asarray(global_avgpool(jnp.array(x))),
+        np.asarray(ref.ref_global_avgpool(jnp.array(x))),
+        rtol=1e-6,
+        atol=1e-6,
+    )

@@ -1,0 +1,110 @@
+"""Layer-2 model zoo tests: shapes, determinism, batch consistency, and the
+AOT lowering contract (HLO text with full constants, manifest integrity)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot
+from compile.model import MODEL_NAMES, get_model, make_input
+
+CLS = ["alexnet", "resnet50", "vgg19"]
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_forward_shapes(name):
+    fwd, hwc, nparams = get_model(name)
+    x = make_input(name, 2)
+    y = np.asarray(fwd(x))
+    assert y.shape[0] == 2
+    if name in CLS:
+        assert y.shape == (2, 10)
+    else:
+        assert y.ndim == 3 and y.shape[2] == 4 + 8  # loc + classes
+    assert nparams > 10_000
+    assert np.isfinite(y).all()
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_deterministic_weights(name):
+    fwd1, _, _ = get_model(name)
+    x = make_input(name, 1)
+    a = np.asarray(fwd1(x))
+    b = np.asarray(fwd1(x))
+    assert_allclose(a, b, rtol=0, atol=0)
+
+
+def test_batch_consistency():
+    """Row i of a batched forward equals the single-request forward."""
+    fwd, _, _ = get_model("alexnet")
+    x = make_input("alexnet", 4)
+    full = np.asarray(fwd(x))
+    for i in range(4):
+        single = np.asarray(fwd(x[i : i + 1]))
+        assert_allclose(full[i : i + 1], single, rtol=2e-4, atol=2e-4)
+
+
+def test_param_count_ordering():
+    """VGG (conv-heavy) must dominate; matches the paper's Table-3 spirit."""
+    sizes = {n: get_model(n)[2] for n in MODEL_NAMES}
+    assert sizes["vgg19"] > sizes["alexnet"]
+    assert sizes["vgg19"] > sizes["resnet50"]
+
+
+def test_unknown_model_rejected():
+    with pytest.raises(KeyError):
+        get_model("bert")
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering
+
+
+def test_lower_produces_parseable_hlo_with_constants():
+    hlo, out_shape = aot.lower_model("alexnet", 1)
+    assert out_shape == (1, 10)
+    assert hlo.startswith("HloModule")
+    # weights must be embedded in full, never elided
+    assert "constant({..." not in hlo
+    assert len(hlo) > 500_000  # ~94k f32 params in text form
+
+
+def test_build_artifacts_roundtrip(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build_artifacts(out, ["alexnet"], [1, 2], verbose=False)
+    assert manifest["format"] == "hlo-text"
+    files = set(os.listdir(out))
+    assert {"alexnet_b1.hlo.txt", "alexnet_b2.hlo.txt",
+            "golden_alexnet.json", "manifest.json"} <= files
+    with open(os.path.join(out, "manifest.json")) as f:
+        m = json.load(f)
+    entry = m["models"][0]
+    assert entry["name"] == "alexnet"
+    assert [v["batch"] for v in entry["variants"]] == [1, 2]
+    assert entry["variants"][0]["input_shape"] == [1, 32, 32, 3]
+    # golden output must match a fresh forward
+    with open(os.path.join(out, "golden_alexnet.json")) as f:
+        g = json.load(f)
+    fwd, hwc, _ = get_model("alexnet")
+    x = np.array(g["input"], np.float32).reshape(g["input_shape"])
+    y = np.asarray(fwd(x)).reshape(-1)
+    assert_allclose(np.array(g["output"], np.float32), y, rtol=1e-5, atol=1e-5)
+
+
+def test_repo_manifest_consistent_when_built():
+    """If `make artifacts` has run, the checked-in manifest must cover the
+    full zoo with the default batch ladder."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    path = os.path.join(art, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        m = json.load(f)
+    names = {e["name"] for e in m["models"]}
+    assert names == set(MODEL_NAMES)
+    for e in m["models"]:
+        for v in e["variants"]:
+            assert os.path.exists(os.path.join(art, v["file"])), v["file"]

@@ -1,0 +1,64 @@
+//! Bench: provisioning-strategy hot paths (paper Fig. 21 / Sec. 5.4).
+//!
+//! Regenerates the paper's algorithm-overhead claims: Alg. 1 at m = 12
+//! must be in the low milliseconds; at m = 1000 it must stay within
+//! seconds with ~quadratic scaling.  Also microbenches Alg. 2
+//! (`alloc_gpus`) and the Eq.-17/18 closed forms.
+
+use igniter::gpu::GpuKind;
+use igniter::provisioner::{ffd, gpulets, gslice, igniter as ig, ProfiledSystem};
+use igniter::util::bench::{bench, bench_once};
+use igniter::workload::{app_workloads, synthetic_workloads};
+
+fn sys() -> ProfiledSystem {
+    let (hw, wls) = igniter::profiler::profile_all(GpuKind::V100, 42);
+    ProfiledSystem {
+        hw,
+        coeffs: igniter::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    }
+}
+
+fn main() {
+    println!("== provisioning benches (paper Fig. 21 / Sec. 5.4) ==");
+    let s = sys();
+    let specs12 = app_workloads();
+
+    bench("eq17_eq18_derive_all(m=12)", 20, 200, || {
+        ig::derive_all(&s, &specs12)
+    });
+
+    let derived = ig::derive_all(&s, &specs12);
+    let d0 = derived[11].unwrap(); // SSD App3, the heavy one
+    let resident: Vec<igniter::provisioner::Alloc> = vec![igniter::provisioner::Alloc {
+        workload: 1,
+        resources: derived[1].unwrap().r_lower,
+        batch: derived[1].unwrap().batch,
+    }];
+    bench("alloc_gpus(alg2, 1 resident)", 20, 200, || {
+        ig::alloc_gpus(&s, &specs12, &resident, 11, d0.r_lower, d0.batch)
+    });
+
+    bench("igniter_provision(m=12)  [paper: 3.64 ms]", 5, 50, || {
+        ig::provision(&s, &specs12)
+    });
+    bench("ffd_provision(m=12)", 5, 50, || {
+        ffd::provision_ffd(&s, &specs12)
+    });
+    bench("gpulets_provision(m=12)", 5, 50, || {
+        gpulets::provision_gpulets(&s, &specs12)
+    });
+    bench_once("gslice_provision(m=12)", || {
+        gslice::provision_gslice(&s, &specs12)
+    });
+
+    for &m in &[100usize, 500, 1000] {
+        let specs = synthetic_workloads(m, 42);
+        let iters = if m <= 100 { 20 } else { 5 };
+        bench(
+            &format!("igniter_provision(m={m})  [paper @1000: <=4.61 s]"),
+            1,
+            iters,
+            || ig::provision(&s, &specs),
+        );
+    }
+}

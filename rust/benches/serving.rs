@@ -1,0 +1,61 @@
+//! Bench: end-to-end serving — the Fig.-14 virtual-time simulation (one
+//! run per strategy) and the real PJRT execution path per (model, batch)
+//! variant (the wall-clock compute cost behind EXPERIMENTS.md §Perf L3).
+
+use igniter::coordinator::{ClusterSim, Policy};
+use igniter::gpu::GpuKind;
+use igniter::provisioner::{self, ProfiledSystem};
+use igniter::runtime::{Engine, Manifest};
+use igniter::util::bench::{bench, bench_once};
+use igniter::workload::{app_workloads, ArrivalKind};
+use std::path::Path;
+
+fn main() {
+    println!("== serving benches ==");
+    let kind = GpuKind::V100;
+    let (hw, wls) = igniter::profiler::profile_all(kind, 42);
+    let sys = ProfiledSystem {
+        hw,
+        coeffs: igniter::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    };
+    let specs = app_workloads();
+    let plan = provisioner::provision(&sys, &specs);
+
+    bench("cluster_sim 12wl x 10s virtual", 1, 10, || {
+        let mut sim = ClusterSim::new(
+            kind,
+            &plan,
+            &specs,
+            Policy::IgniterShadow,
+            ArrivalKind::Constant,
+            42,
+            &[],
+        );
+        sim.set_horizon(10_000.0, 1_000.0);
+        sim.run().len()
+    });
+
+    // Real PJRT path (skipped when artifacts are absent).
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts not built — skipping real-compute benches)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut engine = Engine::new(manifest).unwrap();
+    let (_, compile_ns) = bench_once("compile all 24 hlo variants", || {
+        engine.load_all(None).unwrap();
+        engine.loaded_count()
+    });
+    let _ = compile_ns;
+
+    for model in ["alexnet", "resnet50", "vgg19", "ssd"] {
+        for b in [1usize, 8, 32] {
+            let lv = engine.variant(model, b).unwrap();
+            let input = vec![0.5f32; lv.variant.input_len()];
+            bench(&format!("pjrt_execute {model} b={b}"), 2, 15, || {
+                lv.execute(&input).unwrap().len()
+            });
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench: GPU-simulator and DES hot paths — `query_latency` (called for
+//! every dispatched batch), telemetry, the profiler sweep, and raw event
+//! queue throughput.  These bound how long the Fig.-14-style serving
+//! experiments take.
+
+use igniter::gpu::{GpuDevice, GpuKind, Model};
+use igniter::sim::EventQueue;
+use igniter::util::bench::bench;
+
+fn main() {
+    println!("== simulator benches ==");
+
+    let mut d = GpuDevice::new(GpuKind::V100, 7);
+    for i in 0..4 {
+        d.launch(i, Model::ResNet50, 0.25, 8);
+    }
+    bench("query_latency(4 co-located)", 1000, 20_000, || {
+        d.query_latency(0, 8).unwrap()
+    });
+
+    let d2 = d.clone();
+    bench("power_demand + frequency", 1000, 20_000, || {
+        (d2.power_demand_w(), d2.frequency_mhz())
+    });
+    bench("telemetry snapshot", 1000, 20_000, || d2.telemetry());
+
+    bench("profile_workload(11 configs)", 2, 20, || {
+        igniter::profiler::profile_workload(Model::Vgg19, GpuKind::V100, 42)
+    });
+
+    bench("event_queue push+pop x1000", 10, 500, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..1000u64 {
+            q.schedule_at((i % 97) as f64, i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, e)) = q.pop() {
+            acc = acc.wrapping_add(e);
+        }
+        acc
+    });
+}

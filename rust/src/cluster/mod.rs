@@ -1,0 +1,361 @@
+//! Cluster layer: EC2 instance catalog and the *GPU device launcher* of
+//! Fig. 10 — the component that turns a provisioning `Plan` into concrete
+//! deployment actions: instances to launch, MPS partitions to set
+//! (`set_active_thread_percentage`), Triton serving processes (plus their
+//! pre-launched shadow standbys) to start, and — for the online planner —
+//! the minimal rolling-update diff between two consecutive plans.
+
+use crate::gpu::GpuKind;
+use crate::provisioner::{Plan, WorkloadSpec};
+use crate::util::json::Json;
+
+/// An EC2 GPU instance type (Sec. 5.1 / 5.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceType {
+    pub name: &'static str,
+    pub gpu: GpuKind,
+    pub vcpus: u32,
+    pub memory_gb: u32,
+    pub price_per_hour: f64,
+}
+
+/// The paper's two instance types.
+pub const CATALOG: [InstanceType; 2] = [
+    InstanceType {
+        name: "p3.2xlarge",
+        gpu: GpuKind::V100,
+        vcpus: 8,
+        memory_gb: 61,
+        price_per_hour: 3.06,
+    },
+    InstanceType {
+        name: "g4dn.xlarge",
+        gpu: GpuKind::T4,
+        vcpus: 4,
+        memory_gb: 16,
+        price_per_hour: 0.526,
+    },
+];
+
+pub fn instance_for(gpu: GpuKind) -> &'static InstanceType {
+    CATALOG.iter().find(|i| i.gpu == gpu).expect("catalog")
+}
+
+pub fn instance_by_name(name: &str) -> Option<&'static InstanceType> {
+    CATALOG.iter().find(|i| i.name == name)
+}
+
+/// One serving process to start on an instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcessSpec {
+    pub workload: usize,
+    pub workload_name: String,
+    pub model: String,
+    /// MPS active-thread percentage (0-100).
+    pub mps_percentage: f64,
+    pub batch: u32,
+    /// Pre-launched standby with extra resources (Sec. 4.2).
+    pub shadow: bool,
+}
+
+/// One instance of the deployment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstancePlan {
+    pub index: usize,
+    pub instance_type: &'static InstanceType,
+    pub processes: Vec<ProcessSpec>,
+}
+
+/// A complete deployment manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Deployment {
+    pub strategy: String,
+    pub instances: Vec<InstancePlan>,
+}
+
+/// Rolling-update actions between two deployments.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    LaunchInstance { index: usize, instance_type: String },
+    TerminateInstance { index: usize },
+    StartProcess { instance: usize, process: ProcessSpec },
+    StopProcess { instance: usize, workload: usize },
+    Reconfigure { instance: usize, process: ProcessSpec },
+}
+
+/// Build a deployment manifest from a plan (the launcher's input).
+pub fn deploy(plan: &Plan, specs: &[WorkloadSpec], with_shadows: bool) -> Deployment {
+    let gpu = GpuKind::parse(&plan.gpu).expect("plan gpu kind");
+    let itype = instance_for(gpu);
+    let instances = plan
+        .gpus
+        .iter()
+        .enumerate()
+        .map(|(i, allocs)| InstancePlan {
+            index: i,
+            instance_type: itype,
+            processes: allocs
+                .iter()
+                .map(|a| ProcessSpec {
+                    workload: a.workload,
+                    workload_name: specs[a.workload].name.clone(),
+                    model: specs[a.workload].model.name().to_string(),
+                    mps_percentage: a.resources * 100.0,
+                    batch: a.batch,
+                    shadow: with_shadows,
+                })
+                .collect(),
+        })
+        .collect();
+    Deployment {
+        strategy: plan.strategy.clone(),
+        instances,
+    }
+}
+
+impl Deployment {
+    pub fn total_processes(&self) -> usize {
+        self.instances.iter().map(|i| i.processes.len()).sum()
+    }
+
+    pub fn cost_per_hour(&self) -> f64 {
+        self.instances
+            .iter()
+            .filter(|i| !i.processes.is_empty())
+            .map(|i| i.instance_type.price_per_hour)
+            .sum()
+    }
+
+    /// Declarative JSON manifest (what an orchestrator would consume).
+    pub fn to_json(&self) -> Json {
+        let inst: Vec<Json> = self
+            .instances
+            .iter()
+            .map(|i| {
+                let procs: Vec<Json> = i
+                    .processes
+                    .iter()
+                    .map(|p| {
+                        Json::obj()
+                            .set("workload", p.workload_name.as_str())
+                            .set("model", p.model.as_str())
+                            .set("mps_active_thread_percentage", p.mps_percentage)
+                            .set("preferred_batch", p.batch as usize)
+                            .set("shadow_standby", p.shadow)
+                    })
+                    .collect();
+                Json::obj()
+                    .set("index", i.index)
+                    .set("instance_type", i.instance_type.name)
+                    .set("processes", Json::Arr(procs))
+            })
+            .collect();
+        Json::obj()
+            .set("strategy", self.strategy.as_str())
+            .set("cost_per_hour", self.cost_per_hour())
+            .set("instances", Json::Arr(inst))
+    }
+
+    /// Shell-like launch script (documentation of the exact commands the
+    /// paper's prototype issues via MPS + Triton).
+    pub fn to_script(&self) -> String {
+        let mut s = String::new();
+        for i in &self.instances {
+            if i.processes.is_empty() {
+                continue;
+            }
+            s.push_str(&format!(
+                "# instance {} ({})\n",
+                i.index, i.instance_type.name
+            ));
+            s.push_str("nvidia-cuda-mps-control -d\n");
+            for p in &i.processes {
+                s.push_str(&format!(
+                    "echo set_active_thread_percentage $SERVER_PID {:.1} | nvidia-cuda-mps-control\n\
+                     tritonserver --model {} --preferred-batch-size {}  # {}\n",
+                    p.mps_percentage, p.model, p.batch, p.workload_name
+                ));
+                if p.shadow {
+                    s.push_str(&format!(
+                        "tritonserver --model {} --standby  # shadow for {}\n",
+                        p.model, p.workload_name
+                    ));
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Minimal rolling-update diff: which instances to launch/terminate and
+/// which processes to start/stop/reconfigure to move `from` -> `to`.
+pub fn diff(from: &Deployment, to: &Deployment) -> Vec<Action> {
+    let mut actions = Vec::new();
+    let max = from.instances.len().max(to.instances.len());
+    for idx in 0..max {
+        let f = from.instances.get(idx);
+        let t = to.instances.get(idx);
+        match (f, t) {
+            (None, Some(t)) => {
+                actions.push(Action::LaunchInstance {
+                    index: idx,
+                    instance_type: t.instance_type.name.to_string(),
+                });
+                for p in &t.processes {
+                    actions.push(Action::StartProcess {
+                        instance: idx,
+                        process: p.clone(),
+                    });
+                }
+            }
+            (Some(_), None) => actions.push(Action::TerminateInstance { index: idx }),
+            (Some(f), Some(t)) => {
+                // stopped processes
+                for fp in &f.processes {
+                    if !t.processes.iter().any(|tp| tp.workload == fp.workload) {
+                        actions.push(Action::StopProcess {
+                            instance: idx,
+                            workload: fp.workload,
+                        });
+                    }
+                }
+                // started / reconfigured
+                for tp in &t.processes {
+                    match f.processes.iter().find(|fp| fp.workload == tp.workload) {
+                        None => actions.push(Action::StartProcess {
+                            instance: idx,
+                            process: tp.clone(),
+                        }),
+                        Some(fp) if fp != tp => actions.push(Action::Reconfigure {
+                            instance: idx,
+                            process: tp.clone(),
+                        }),
+                        _ => {}
+                    }
+                }
+                // empty -> terminate
+                if t.processes.is_empty() && !f.processes.is_empty() {
+                    actions.push(Action::TerminateInstance { index: idx });
+                }
+            }
+            (None, None) => {}
+        }
+    }
+    actions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuKind;
+    use crate::provisioner::{self, ProfiledSystem};
+    use crate::workload::{app_workloads, table1_workloads};
+
+    fn sys() -> ProfiledSystem {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        ProfiledSystem {
+            hw,
+            coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+        }
+    }
+
+    #[test]
+    fn deployment_mirrors_plan() {
+        let s = sys();
+        let specs = app_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let d = deploy(&plan, &specs, true);
+        assert_eq!(d.instances.len(), plan.num_gpus());
+        assert_eq!(d.total_processes(), 12);
+        assert!((d.cost_per_hour() - plan.cost_per_hour()).abs() < 1e-9);
+        // every process percentage within (0, 100]
+        for i in &d.instances {
+            for p in &i.processes {
+                assert!(p.mps_percentage > 0.0 && p.mps_percentage <= 100.0);
+                assert!(p.shadow);
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_json_and_script() {
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let d = deploy(&plan, &specs, true);
+        let j = d.to_json();
+        assert_eq!(
+            j.path("instances.0.instance_type").unwrap().as_str(),
+            Some("p3.2xlarge")
+        );
+        let script = d.to_script();
+        assert!(script.contains("set_active_thread_percentage"));
+        assert!(script.contains("tritonserver --model resnet50"));
+        assert!(script.contains("--standby"));
+    }
+
+    #[test]
+    fn diff_empty_for_identical() {
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let d = deploy(&plan, &specs, false);
+        assert!(diff(&d, &d).is_empty());
+    }
+
+    #[test]
+    fn diff_detects_changes() {
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let d1 = deploy(&plan, &specs, false);
+
+        // grow workload 0 by one unit and move nothing else
+        let mut plan2 = plan.clone();
+        let (g, _) = plan2.find(0).unwrap();
+        for a in &mut plan2.gpus[g] {
+            if a.workload == 0 {
+                a.resources += 0.025;
+            }
+        }
+        let d2 = deploy(&plan2, &specs, false);
+        let actions = diff(&d1, &d2);
+        assert_eq!(actions.len(), 1);
+        assert!(matches!(actions[0], Action::Reconfigure { .. }));
+
+        // dropping a workload produces a stop
+        let mut plan3 = plan.clone();
+        for g in &mut plan3.gpus {
+            g.retain(|a| a.workload != 1);
+        }
+        let d3 = deploy(&plan3, &specs, false);
+        let actions = diff(&d1, &d3);
+        assert!(actions
+            .iter()
+            .any(|a| matches!(a, Action::StopProcess { workload: 1, .. })));
+    }
+
+    #[test]
+    fn diff_launches_new_instances() {
+        let s = sys();
+        let specs = app_workloads();
+        let trio = table1_workloads();
+        let small = provisioner::provision(&s, &trio);
+        let big = provisioner::provision(&s, &specs);
+        let d_small = deploy(&small, &trio, false);
+        let d_big = deploy(&big, &specs, false);
+        let actions = diff(&d_small, &d_big);
+        let launches = actions
+            .iter()
+            .filter(|a| matches!(a, Action::LaunchInstance { .. }))
+            .count();
+        assert_eq!(launches, d_big.instances.len() - d_small.instances.len());
+    }
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(instance_for(GpuKind::V100).name, "p3.2xlarge");
+        assert_eq!(instance_by_name("g4dn.xlarge").unwrap().gpu, GpuKind::T4);
+        assert!(instance_by_name("p4d.24xlarge").is_none());
+    }
+}

@@ -1,0 +1,237 @@
+//! Configuration system: JSON descriptions of workload sets and cluster
+//! settings so deployments are driven by files rather than code edits
+//! (`igniter provision --config cluster.json`).
+//!
+//! Schema (all fields except `workloads` optional):
+//! ```json
+//! {
+//!   "gpu": "v100",
+//!   "seed": 42,
+//!   "strategy": "igniter",
+//!   "workloads": [
+//!     {"model": "resnet50", "slo_ms": 40, "rate_rps": 400, "name": "search-rank"},
+//!     {"model": "ssd", "slo_ms": 55, "rate_rps": 300}
+//!   ],
+//!   "serving": {"horizon_s": 30, "arrival": "constant", "policy": "shadow"}
+//! }
+//! ```
+
+use crate::gpu::{GpuKind, Model};
+use crate::provisioner::WorkloadSpec;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Serving-section options.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    pub horizon_s: f64,
+    pub poisson: bool,
+    pub policy: String,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            horizon_s: 30.0,
+            poisson: false,
+            policy: "shadow".to_string(),
+        }
+    }
+}
+
+/// A fully parsed deployment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub gpu: GpuKind,
+    pub seed: u64,
+    pub strategy: String,
+    pub workloads: Vec<WorkloadSpec>,
+    pub serving: ServingConfig,
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Config> {
+        let j = Json::parse(text).context("parsing config JSON")?;
+
+        let gpu_s = j.get("gpu").and_then(|g| g.as_str()).unwrap_or("v100");
+        let gpu = GpuKind::parse(gpu_s).ok_or_else(|| anyhow!("unknown gpu '{gpu_s}'"))?;
+
+        let strategy = j
+            .get("strategy")
+            .and_then(|s| s.as_str())
+            .unwrap_or("igniter")
+            .to_string();
+        if !["igniter", "ffd", "ffd++", "gslice", "gpulets"].contains(&strategy.as_str()) {
+            bail!("unknown strategy '{strategy}'");
+        }
+
+        let warr = j
+            .get("workloads")
+            .and_then(|w| w.as_arr())
+            .ok_or_else(|| anyhow!("config missing 'workloads' array"))?;
+        if warr.is_empty() {
+            bail!("config has no workloads");
+        }
+        let mut workloads = Vec::new();
+        for (i, w) in warr.iter().enumerate() {
+            let model_s = w
+                .get("model")
+                .and_then(|m| m.as_str())
+                .ok_or_else(|| anyhow!("workload {i}: missing 'model'"))?;
+            let model = Model::parse(model_s)
+                .ok_or_else(|| anyhow!("workload {i}: unknown model '{model_s}'"))?;
+            let slo_ms = w
+                .get("slo_ms")
+                .and_then(|s| s.as_f64())
+                .ok_or_else(|| anyhow!("workload {i}: missing 'slo_ms'"))?;
+            let rate_rps = w
+                .get("rate_rps")
+                .and_then(|r| r.as_f64())
+                .ok_or_else(|| anyhow!("workload {i}: missing 'rate_rps'"))?;
+            if slo_ms <= 0.0 || rate_rps <= 0.0 {
+                bail!("workload {i}: slo_ms and rate_rps must be positive");
+            }
+            let mut spec = WorkloadSpec::new(i, model, slo_ms, rate_rps);
+            if let Some(name) = w.get("name").and_then(|n| n.as_str()) {
+                spec.name = format!("{name}({})", model.name());
+            }
+            workloads.push(spec);
+        }
+
+        let serving = match j.get("serving") {
+            None => ServingConfig::default(),
+            Some(s) => {
+                let policy = s
+                    .get("policy")
+                    .and_then(|p| p.as_str())
+                    .unwrap_or("shadow")
+                    .to_string();
+                if !["shadow", "static", "gslice"].contains(&policy.as_str()) {
+                    bail!("unknown serving policy '{policy}'");
+                }
+                ServingConfig {
+                    horizon_s: s.get("horizon_s").and_then(|h| h.as_f64()).unwrap_or(30.0),
+                    poisson: s
+                        .get("arrival")
+                        .and_then(|a| a.as_str())
+                        .map(|a| a == "poisson")
+                        .unwrap_or(false),
+                    policy,
+                }
+            }
+        };
+
+        Ok(Config {
+            gpu,
+            seed: j.get("seed").and_then(|s| s.as_u64()).unwrap_or(42),
+            strategy,
+            workloads,
+            serving,
+        })
+    }
+
+    /// Serialize back to JSON (round-trips through `parse`).
+    pub fn to_json(&self) -> Json {
+        let wl: Vec<Json> = self
+            .workloads
+            .iter()
+            .map(|w| {
+                Json::obj()
+                    .set("model", w.model.name())
+                    .set("slo_ms", w.slo_ms)
+                    .set("rate_rps", w.rate_rps)
+            })
+            .collect();
+        Json::obj()
+            .set("gpu", self.gpu.name().to_ascii_lowercase())
+            .set("seed", self.seed)
+            .set("strategy", self.strategy.as_str())
+            .set("workloads", Json::Arr(wl))
+            .set(
+                "serving",
+                Json::obj()
+                    .set("horizon_s", self.serving.horizon_s)
+                    .set(
+                        "arrival",
+                        if self.serving.poisson { "poisson" } else { "constant" },
+                    )
+                    .set("policy", self.serving.policy.as_str()),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "gpu": "t4",
+      "seed": 7,
+      "strategy": "gpulets",
+      "workloads": [
+        {"model": "resnet50", "slo_ms": 40, "rate_rps": 400, "name": "rank"},
+        {"model": "ssd", "slo_ms": 55, "rate_rps": 300}
+      ],
+      "serving": {"horizon_s": 10, "arrival": "poisson", "policy": "static"}
+    }"#;
+
+    #[test]
+    fn parse_full() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.gpu, GpuKind::T4);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.strategy, "gpulets");
+        assert_eq!(c.workloads.len(), 2);
+        assert_eq!(c.workloads[0].name, "rank(resnet50)");
+        assert_eq!(c.workloads[1].model, Model::Ssd);
+        assert!(c.serving.poisson);
+        assert_eq!(c.serving.horizon_s, 10.0);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let c = Config::parse(
+            r#"{"workloads": [{"model": "alexnet", "slo_ms": 15, "rate_rps": 100}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.gpu, GpuKind::V100);
+        assert_eq!(c.strategy, "igniter");
+        assert_eq!(c.serving, ServingConfig::default());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Config::parse("{}").is_err()); // no workloads
+        assert!(Config::parse(r#"{"workloads": []}"#).is_err());
+        assert!(
+            Config::parse(r#"{"workloads": [{"model": "bert", "slo_ms": 1, "rate_rps": 1}]}"#)
+                .is_err()
+        );
+        assert!(Config::parse(
+            r#"{"workloads": [{"model": "ssd", "slo_ms": -5, "rate_rps": 1}]}"#
+        )
+        .is_err());
+        assert!(Config::parse(
+            r#"{"strategy": "magic", "workloads": [{"model": "ssd", "slo_ms": 5, "rate_rps": 1}]}"#
+        )
+        .is_err());
+        assert!(Config::parse("not json").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let c2 = Config::parse(&c.to_json().to_string_pretty()).unwrap();
+        assert_eq!(c.gpu, c2.gpu);
+        assert_eq!(c.strategy, c2.strategy);
+        assert_eq!(c.workloads.len(), c2.workloads.len());
+        assert_eq!(c.serving, c2.serving);
+    }
+}

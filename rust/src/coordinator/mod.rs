@@ -1,0 +1,9 @@
+//! Layer-3 serving coordinator: deterministic discrete-event serving of a
+//! provisioning plan (router + dynamic batcher + SLO monitor + shadow
+//! failover + GSLICE tuner) and the real-compute bridge to the PJRT
+//! runtime.
+
+pub mod realrun;
+pub mod server;
+
+pub use server::{ClusterSim, Policy, TimelinePoint, WorkloadStats};

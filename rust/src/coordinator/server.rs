@@ -1,0 +1,574 @@
+//! The Layer-3 serving coordinator: request routing, dynamic batching,
+//! P99 SLO monitoring, the iGniter shadow-process failover (Sec. 4.2
+//! "Dealing with Performance Prediction Errors"), and the GSLICE reactive
+//! tuner — all running on the discrete-event engine so every experiment is
+//! deterministic per seed.
+//!
+//! Time unit: virtual milliseconds.
+
+use crate::gpu::{GpuDevice, GpuKind};
+use crate::provisioner::{Plan, WorkloadSpec};
+use crate::sim::EventQueue;
+use crate::util::stats::{percentile, LatencyHistogram};
+use crate::workload::{ArrivalGen, ArrivalKind};
+use std::collections::VecDeque;
+
+/// Online policy applied during serving.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Static plan, no runtime adjustment.
+    Static,
+    /// iGniter: pre-launched shadow processes absorb prediction errors.
+    IgniterShadow,
+    /// GSLICE's reactive threshold tuner (interference-unaware).
+    GsliceTuner {
+        /// adjustment period (ms)
+        period_ms: f64,
+    },
+}
+
+/// Extra GPU resources granted to an activated shadow process: the smaller
+/// of 10 % (the paper's measured max prediction error) and the remaining
+/// resources on the device.
+pub const SHADOW_EXTRA: f64 = 0.10;
+/// SLO monitor period (paper: clients evaluate every second, iGniter
+/// re-checks 0.5 s after a violation).
+pub const MONITOR_PERIOD_MS: f64 = 500.0;
+
+#[derive(Debug, Clone)]
+enum Event {
+    Arrival { w: usize },
+    TryDispatch { w: usize },
+    Complete { w: usize, n: u32, dispatched: f64, t_load: f64 },
+    Monitor,
+    Tune,
+}
+
+/// Per-workload serving state.
+#[derive(Debug)]
+struct ProcState {
+    spec: WorkloadSpec,
+    gpu: usize,
+    resources: f64,
+    batch: u32,
+    queue: VecDeque<f64>,
+    busy: bool,
+    /// rolling estimate of batch execution latency (ms) for the batcher
+    exec_estimate: f64,
+    /// lifetime latency records (completion time, latency)
+    window: Vec<(f64, f64)>,
+    hist: LatencyHistogram,
+    served: u64,
+    arrivals: ArrivalGen,
+    /// shadow process state (iGniter policy)
+    shadow_active: bool,
+    switches: u32,
+    /// timeline samples for Figs. 15-17: (t, p99_ms, achieved_rps, r, batch)
+    timeline: Vec<TimelinePoint>,
+    served_since_sample: u64,
+    last_sample_ms: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimelinePoint {
+    pub t_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub rps: f64,
+    pub resources: f64,
+    pub batch: u32,
+}
+
+/// Result of a serving run for one workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadStats {
+    pub name: String,
+    pub slo_ms: f64,
+    pub rate_rps: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub achieved_rps: f64,
+    pub served: u64,
+    pub violation: bool,
+    pub throughput_violation: bool,
+    pub shadow_switches: u32,
+    pub timeline: Vec<TimelinePoint>,
+    pub final_resources: f64,
+    pub final_batch: u32,
+}
+
+/// The cluster serving simulation.
+pub struct ClusterSim {
+    devices: Vec<GpuDevice>,
+    procs: Vec<ProcState>,
+    events: EventQueue<Event>,
+    policy: Policy,
+    horizon_ms: f64,
+    /// warm-up to exclude from stats (ms)
+    warmup_ms: f64,
+}
+
+impl ClusterSim {
+    /// Build from a provisioning plan.  `underprovision` injects prediction
+    /// errors by shaving resources off specific workloads (Fig. 17).
+    pub fn new(
+        kind: GpuKind,
+        plan: &Plan,
+        specs: &[WorkloadSpec],
+        policy: Policy,
+        arrival: ArrivalKind,
+        seed: u64,
+        underprovision: &[(usize, f64)],
+    ) -> ClusterSim {
+        let mut devices: Vec<GpuDevice> = (0..plan.num_gpus())
+            .map(|g| GpuDevice::new(kind, seed ^ (g as u64 + 1)))
+            .collect();
+        let mut procs = Vec::new();
+        for (g, alloc) in plan.all() {
+            let mut r = alloc.resources;
+            if let Some((_, shave)) = underprovision.iter().find(|(w, _)| *w == alloc.workload) {
+                r = (r - shave).max(devices[g].spec.r_unit);
+            }
+            let spec = specs[alloc.workload].clone();
+            // launch_unchecked: interference-unaware plans (GSLICE+) may
+            // oversubscribe a device; the hardware then time-slices SMs.
+            devices[g].launch_unchecked(alloc.workload as u64, spec.model, r, alloc.batch);
+            procs.push(ProcState {
+                gpu: g,
+                resources: r,
+                batch: alloc.batch,
+                queue: VecDeque::new(),
+                busy: false,
+                exec_estimate: spec.slo_ms / 4.0,
+                window: Vec::new(),
+                hist: LatencyHistogram::new(),
+                served: 0,
+                arrivals: ArrivalGen::new(arrival, spec.rate_rps, seed ^ (0x5EED + alloc.workload as u64)),
+                shadow_active: false,
+                switches: 0,
+                timeline: Vec::new(),
+                served_since_sample: 0,
+                last_sample_ms: 0.0,
+                spec,
+            });
+        }
+        // procs indexed by workload id: sort
+        procs.sort_by_key(|p| p.spec.id);
+        ClusterSim {
+            devices,
+            procs,
+            events: EventQueue::new(),
+            policy,
+            horizon_ms: 30_000.0,
+            warmup_ms: 1_000.0,
+        }
+    }
+
+    pub fn set_horizon(&mut self, horizon_ms: f64, warmup_ms: f64) {
+        self.horizon_ms = horizon_ms;
+        self.warmup_ms = warmup_ms;
+    }
+
+    /// Dynamic batching timeout for a workload: the slack of the half-SLO
+    /// after the estimated execution time (Triton's max_queue_delay).
+    fn batch_timeout(&self, w: usize) -> f64 {
+        let p = &self.procs[w];
+        (p.spec.slo_ms / 2.0 - p.exec_estimate).max(0.1)
+    }
+
+    fn try_dispatch(&mut self, w: usize) {
+        let now = self.events.now();
+        let (can, n) = {
+            let p = &self.procs[w];
+            if p.busy || p.queue.is_empty() {
+                (false, 0)
+            } else {
+                let oldest_age = now - p.queue.front().copied().unwrap_or(now);
+                let full = p.queue.len() >= p.batch as usize;
+                let timed_out = oldest_age >= self.batch_timeout(w);
+                (
+                    full || timed_out,
+                    p.queue.len().min(p.batch as usize) as u32,
+                )
+            }
+        };
+        if !can || n == 0 {
+            // re-check when the timeout of the oldest request expires
+            let p = &self.procs[w];
+            if !p.busy {
+                if let Some(&oldest) = p.queue.front() {
+                    let due = oldest + self.batch_timeout(w);
+                    self.events
+                        .schedule_at(due.max(now + 0.01), Event::TryDispatch { w });
+                }
+            }
+            return;
+        }
+        let p = &mut self.procs[w];
+        let tag = p.spec.id as u64;
+        let gpu = p.gpu;
+        p.busy = true;
+        let q = self.devices[gpu]
+            .query_latency(tag, n)
+            .expect("process vanished");
+        // Pipeline: the process is busy for t_gpu + t_feedback; the batch's
+        // own latency includes its data loading (Eq. 1).
+        let busy = q.t_gpu + q.t_feedback;
+        self.procs[w].exec_estimate =
+            0.8 * self.procs[w].exec_estimate + 0.2 * (q.t_inf);
+        self.events.schedule_in(
+            busy,
+            Event::Complete {
+                w,
+                n,
+                dispatched: now,
+                t_load: q.t_load,
+            },
+        );
+    }
+
+    fn p99_since(&self, w: usize, since: f64) -> Option<f64> {
+        let lat: Vec<f64> = self.procs[w]
+            .window
+            .iter()
+            .filter(|(t, _)| *t >= since)
+            .map(|(_, l)| *l)
+            .collect();
+        if lat.len() < 20 {
+            None
+        } else {
+            Some(percentile(&lat, 0.99))
+        }
+    }
+
+    /// iGniter shadow failover: kill the original process, activate the
+    /// standby with extra resources (capped by the device's free room).
+    fn activate_shadow(&mut self, w: usize) {
+        let gpu = self.procs[w].gpu;
+        let tag = self.procs[w].spec.id as u64;
+        let free = self.devices[gpu].free_resources();
+        let extra = SHADOW_EXTRA.min(free);
+        let new_r = self.procs[w].resources + extra;
+        self.devices[gpu].kill(tag);
+        // shadow takes over under the same tag with grown partition
+        self.devices[gpu].launch_unchecked(tag, self.procs[w].spec.model, new_r, self.procs[w].batch);
+        self.procs[w].resources = new_r;
+        self.procs[w].shadow_active = true;
+        self.procs[w].switches += 1;
+        // restart the P99 window: the new process starts clean
+        self.procs[w].window.clear();
+    }
+
+    /// GSLICE reactive tuner: per workload, grow when the observed average
+    /// violates half the SLO, shrink when it undershoots by 4x the
+    /// threshold — ignoring co-residents entirely (it may oversubscribe
+    /// the device, which the hardware then time-slices).
+    fn gslice_tune(&mut self) {
+        let now = self.events.now();
+        for w in 0..self.procs.len() {
+            let since = now - 10_000.0;
+            let lat: Vec<f64> = self.procs[w]
+                .window
+                .iter()
+                .filter(|(t, _)| *t >= since)
+                .map(|(_, l)| *l)
+                .collect();
+            if lat.len() < 10 {
+                continue;
+            }
+            let avg = crate::util::stats::mean(&lat);
+            let half = self.procs[w].spec.slo_ms / 2.0;
+            let gpu = self.procs[w].gpu;
+            let tag = self.procs[w].spec.id as u64;
+            let step = self.devices[gpu].spec.r_unit * 2.0;
+            if avg > half {
+                let r = self.procs[w].resources + step;
+                // interference-unaware: force the grow regardless of room
+                self.devices[gpu].force_resources(tag, r);
+                self.procs[w].resources = r;
+            } else if avg < half * (1.0 - crate::provisioner::gslice::TUNING_THRESHOLD) {
+                let r = (self.procs[w].resources - step).max(self.devices[gpu].spec.r_unit);
+                self.devices[gpu].force_resources(tag, r);
+                self.procs[w].resources = r;
+            }
+        }
+    }
+
+    fn sample_timeline(&mut self) {
+        let now = self.events.now();
+        for w in 0..self.procs.len() {
+            let since = now - 1_000.0;
+            let p99 = self.p99_since(w, since).unwrap_or(f64::NAN);
+            let lat: Vec<f64> = self.procs[w]
+                .window
+                .iter()
+                .filter(|(t, _)| *t >= since)
+                .map(|(_, l)| *l)
+                .collect();
+            let mean = crate::util::stats::mean(&lat);
+            let p = &mut self.procs[w];
+            let dt = (now - p.last_sample_ms).max(1e-9);
+            let rps = p.served_since_sample as f64 / dt * 1000.0;
+            p.timeline.push(TimelinePoint {
+                t_ms: now,
+                p99_ms: p99,
+                mean_ms: mean,
+                rps,
+                resources: p.resources,
+                batch: p.batch,
+            });
+            p.served_since_sample = 0;
+            p.last_sample_ms = now;
+        }
+    }
+
+    /// Run the simulation to the horizon; returns per-workload stats.
+    pub fn run(&mut self) -> Vec<WorkloadStats> {
+        // seed arrivals + monitor
+        for w in 0..self.procs.len() {
+            let t = self.procs[w].arrivals.next();
+            self.events.schedule_at(t, Event::Arrival { w });
+        }
+        self.events.schedule_at(MONITOR_PERIOD_MS, Event::Monitor);
+        if let Policy::GsliceTuner { period_ms } = self.policy {
+            self.events.schedule_at(period_ms, Event::Tune);
+        }
+
+        while let Some(&t) = self.events.peek_time().as_ref() {
+            if t > self.horizon_ms {
+                break;
+            }
+            let (now, ev) = self.events.pop().unwrap();
+            match ev {
+                Event::Arrival { w } => {
+                    self.procs[w].queue.push_back(now);
+                    let next = self.procs[w].arrivals.next();
+                    self.events.schedule_at(next, Event::Arrival { w });
+                    self.try_dispatch(w);
+                }
+                Event::TryDispatch { w } => self.try_dispatch(w),
+                Event::Complete {
+                    w,
+                    n,
+                    dispatched,
+                    t_load,
+                } => {
+                    let record = now >= self.warmup_ms;
+                    let p = &mut self.procs[w];
+                    for _ in 0..n {
+                        let arr = p.queue.pop_front().expect("queue underflow");
+                        // Eq. 1 view: latency = queueing + load + gpu + feedback
+                        let lat = (now + t_load) - arr;
+                        debug_assert!(lat >= 0.0);
+                        if record {
+                            p.window.push((now, lat));
+                            p.hist.record(lat / 1000.0);
+                        }
+                        p.served += 1;
+                        p.served_since_sample += 1;
+                    }
+                    let _ = dispatched;
+                    p.busy = false;
+                    self.try_dispatch(w);
+                }
+                Event::Monitor => {
+                    self.sample_timeline();
+                    if self.policy == Policy::IgniterShadow {
+                        for w in 0..self.procs.len() {
+                            if self.procs[w].shadow_active {
+                                continue; // one switch per workload
+                            }
+                            let since = now - 1_000.0;
+                            if let Some(p99) = self.p99_since(w, since) {
+                                if p99 > self.procs[w].spec.slo_ms {
+                                    self.activate_shadow(w);
+                                }
+                            }
+                        }
+                    }
+                    self.events
+                        .schedule_in(MONITOR_PERIOD_MS, Event::Monitor);
+                }
+                Event::Tune => {
+                    self.gslice_tune();
+                    if let Policy::GsliceTuner { period_ms } = self.policy {
+                        self.events.schedule_in(period_ms, Event::Tune);
+                    }
+                }
+            }
+        }
+
+        // final stats
+        self.procs
+            .iter()
+            .map(|p| {
+                let lat: Vec<f64> = p.window.iter().map(|(_, l)| *l).collect();
+                let p99 = percentile(&lat, 0.99);
+                let mean = crate::util::stats::mean(&lat);
+                let span_ms = self.horizon_ms - self.warmup_ms;
+                let achieved = lat.len() as f64 / span_ms * 1000.0;
+                WorkloadStats {
+                    name: p.spec.name.clone(),
+                    slo_ms: p.spec.slo_ms,
+                    rate_rps: p.spec.rate_rps,
+                    p99_ms: p99,
+                    mean_ms: mean,
+                    achieved_rps: achieved,
+                    served: p.served,
+                    violation: p99 > p.spec.slo_ms,
+                    throughput_violation: achieved < p.spec.rate_rps * 0.95,
+                    shadow_switches: p.switches,
+                    timeline: p.timeline.clone(),
+                    final_resources: p.resources,
+                    final_batch: p.batch,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuKind;
+    use crate::provisioner::{self, ProfiledSystem};
+    use crate::workload::{app_workloads, table1_workloads};
+
+    fn sys() -> ProfiledSystem {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        ProfiledSystem {
+            hw,
+            coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+        }
+    }
+
+    #[test]
+    fn table1_serving_meets_slos() {
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let mut sim = ClusterSim::new(
+            GpuKind::V100,
+            &plan,
+            &specs,
+            Policy::IgniterShadow,
+            ArrivalKind::Constant,
+            7,
+            &[],
+        );
+        sim.set_horizon(10_000.0, 1_000.0);
+        let stats = sim.run();
+        for st in &stats {
+            assert!(
+                !st.violation,
+                "{}: P99 {:.2} > SLO {}",
+                st.name, st.p99_ms, st.slo_ms
+            );
+            assert!(
+                !st.throughput_violation,
+                "{}: {:.0} rps < {:.0}",
+                st.name, st.achieved_rps, st.rate_rps
+            );
+        }
+    }
+
+    #[test]
+    fn igniter_plan_serves_12_workloads() {
+        let s = sys();
+        let specs = app_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let mut sim = ClusterSim::new(
+            GpuKind::V100,
+            &plan,
+            &specs,
+            Policy::IgniterShadow,
+            ArrivalKind::Constant,
+            11,
+            &[],
+        );
+        sim.set_horizon(8_000.0, 1_000.0);
+        let stats = sim.run();
+        let violations = stats.iter().filter(|s| s.violation).count();
+        assert_eq!(violations, 0, "{stats:#?}");
+    }
+
+    #[test]
+    fn underprovision_triggers_shadow() {
+        // Fig. 17: an injected prediction error makes W1 violate; the
+        // shadow process takes over and restores the SLO.
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let mut sim = ClusterSim::new(
+            GpuKind::V100,
+            &plan,
+            &specs,
+            Policy::IgniterShadow,
+            ArrivalKind::Constant,
+            13,
+            &[(0, 0.05)],
+        );
+        sim.set_horizon(12_000.0, 1_000.0);
+        let stats = sim.run();
+        assert!(stats[0].shadow_switches >= 1, "shadow never activated");
+        // after the switch the tail must be under the SLO again: check the
+        // last timeline samples
+        let tail: Vec<&TimelinePoint> = stats[0]
+            .timeline
+            .iter()
+            .filter(|t| t.t_ms > 8_000.0 && !t.p99_ms.is_nan())
+            .collect();
+        assert!(!tail.is_empty());
+        assert!(
+            tail.iter().all(|t| t.p99_ms <= specs[0].slo_ms * 1.05),
+            "tail still violating: {tail:?}"
+        );
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let run = |seed| {
+            let mut sim = ClusterSim::new(
+                GpuKind::V100,
+                &plan,
+                &specs,
+                Policy::Static,
+                ArrivalKind::Poisson,
+                seed,
+                &[],
+            );
+            sim.set_horizon(5_000.0, 500.0);
+            sim.run()
+                .iter()
+                .map(|s| (s.served, s.p99_ms))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn queueing_latency_counted() {
+        // With a rate far above capacity, latency must blow past the SLO.
+        let s = sys();
+        let mut specs = table1_workloads();
+        specs[0].rate_rps = 4000.0; // way beyond the plan's design point
+        let plan_specs = table1_workloads();
+        let plan = provisioner::provision(&s, &plan_specs);
+        let mut sim = ClusterSim::new(
+            GpuKind::V100,
+            &plan,
+            &specs,
+            Policy::Static,
+            ArrivalKind::Constant,
+            5,
+            &[],
+        );
+        sim.set_horizon(4_000.0, 500.0);
+        let stats = sim.run();
+        assert!(stats[0].violation, "overload did not violate: {stats:?}");
+    }
+}

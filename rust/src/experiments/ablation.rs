@@ -1,0 +1,164 @@
+//! Ablation study (DESIGN.md design-choice validation, not a paper figure):
+//! how much does each of the three interference terms — scheduler (Eq. 6),
+//! L2 cache (Eq. 8), power/frequency (Eq. 9) — contribute to prediction
+//! accuracy?  Disabling a term turns the model into one of the paper's
+//! straw-men (e.g. "no cache + no power" ≈ an Eq.-(11)-only solo model).
+
+use super::common::{emit, measure, profiled_system, SEED};
+use crate::gpu::{GpuDevice, GpuKind, Model};
+use crate::perfmodel::{self, model::ModelTerms, PlacedWorkload};
+use crate::util::table::{pct, Table};
+use anyhow::Result;
+
+/// Co-location scenarios used for the error measurement: the paper's
+/// Fig.-13 quad plus two heavy pairs and a 5-way stack.
+fn scenarios() -> Vec<Vec<(Model, f64, u32)>> {
+    vec![
+        vec![
+            (Model::AlexNet, 0.25, 3),
+            (Model::ResNet50, 0.25, 3),
+            (Model::Vgg19, 0.25, 3),
+            (Model::Ssd, 0.25, 3),
+        ],
+        vec![(Model::Vgg19, 0.5, 8), (Model::Ssd, 0.5, 8)],
+        vec![(Model::AlexNet, 0.5, 16), (Model::ResNet50, 0.5, 16)],
+        vec![
+            (Model::Vgg19, 0.2, 16),
+            (Model::Vgg19, 0.2, 16),
+            (Model::Vgg19, 0.2, 16),
+            (Model::Vgg19, 0.2, 16),
+            (Model::Vgg19, 0.2, 16),
+        ],
+    ]
+}
+
+fn observed(kind: GpuKind, placed: &[(Model, f64, u32)], target: usize, seed: u64) -> f64 {
+    let (mean, _) = measure(3, || {
+        let mut d = GpuDevice::new(kind, seed);
+        for (i, &(m, r, b)) in placed.iter().enumerate() {
+            assert!(d.launch(i as u64, m, r, b));
+        }
+        d.query_latency(target as u64, placed[target].2).unwrap().t_inf
+    });
+    mean
+}
+
+/// Run the ablation: mean relative prediction error per model variant.
+pub fn ablation(kind: GpuKind) -> Result<()> {
+    let sys = profiled_system(kind, SEED);
+    let variants: [(&str, ModelTerms); 5] = [
+        ("full model", ModelTerms::ALL),
+        (
+            "- scheduler",
+            ModelTerms {
+                scheduler: false,
+                ..ModelTerms::ALL
+            },
+        ),
+        (
+            "- cache",
+            ModelTerms {
+                cache: false,
+                ..ModelTerms::ALL
+            },
+        ),
+        (
+            "- power",
+            ModelTerms {
+                power: false,
+                ..ModelTerms::ALL
+            },
+        ),
+        ("solo-only (none)", ModelTerms::NONE),
+    ];
+
+    let mut t = Table::new(
+        "Ablation — mean |prediction error| across co-location scenarios \
+         (each row disables one interference term of Eqs. 6/8/9)",
+        &["model variant", "mean_err", "max_err"],
+    );
+    let mut results = Vec::new();
+    for (name, terms) in variants {
+        let mut errs = Vec::new();
+        for (si, placed) in scenarios().iter().enumerate() {
+            let view: Vec<PlacedWorkload> = placed
+                .iter()
+                .map(|&(m, r, b)| PlacedWorkload {
+                    coeffs: sys.coeffs_for(m),
+                    batch: b as f64,
+                    resources: r,
+                })
+                .collect();
+            for target in 0..placed.len() {
+                let obs = observed(kind, placed, target, SEED ^ ((si as u64) << 8) ^ target as u64);
+                let pred = perfmodel::model::predict_with(&sys.hw, &view, target, terms).t_inf;
+                errs.push(perfmodel::rel_error(pred, obs));
+            }
+        }
+        let mean = crate::util::stats::mean(&errs);
+        let max = errs.iter().cloned().fold(0.0, f64::max);
+        results.push((name, mean));
+        t.row(&[name.to_string(), pct(mean), pct(max)]);
+    }
+    emit(&t, "ablation");
+
+    // sanity: the full model must dominate every ablation
+    let full = results[0].1;
+    for (name, err) in &results[1..] {
+        if *err < full {
+            println!("note: '{name}' beat the full model ({:.2}% vs {:.2}%)", err * 100.0, full * 100.0);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_model_dominates_ablations() {
+        let kind = GpuKind::V100;
+        let sys = profiled_system(kind, SEED);
+        let placed = scenarios().remove(0);
+        let view: Vec<PlacedWorkload> = placed
+            .iter()
+            .map(|&(m, r, b)| PlacedWorkload {
+                coeffs: sys.coeffs_for(m),
+                batch: b as f64,
+                resources: r,
+            })
+            .collect();
+        let mut errs = std::collections::BTreeMap::new();
+        for (name, terms) in [
+            ("full", ModelTerms::ALL),
+            ("none", ModelTerms::NONE),
+            (
+                "nocache",
+                ModelTerms {
+                    cache: false,
+                    ..ModelTerms::ALL
+                },
+            ),
+        ] {
+            let mut es = Vec::new();
+            for target in 0..placed.len() {
+                let obs = observed(kind, &placed, target, 900 + target as u64);
+                let pred =
+                    perfmodel::model::predict_with(&sys.hw, &view, target, terms).t_inf;
+                es.push(perfmodel::rel_error(pred, obs));
+            }
+            errs.insert(name, crate::util::stats::mean(&es));
+        }
+        assert!(errs["full"] < errs["nocache"], "{errs:?}");
+        assert!(errs["nocache"] < errs["none"] + 0.05, "{errs:?}");
+        assert!(errs["full"] < errs["none"], "{errs:?}");
+        // cache is the dominant term on the quad scenario
+        assert!(errs["none"] > 0.05, "ablated model should err >5%: {errs:?}");
+    }
+
+    #[test]
+    fn ablation_harness_runs() {
+        ablation(GpuKind::V100).unwrap();
+    }
+}

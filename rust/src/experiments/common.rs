@@ -1,0 +1,40 @@
+//! Shared context and helpers for the experiment harnesses.
+
+use crate::gpu::{GpuKind, Model};
+use crate::provisioner::ProfiledSystem;
+use crate::util::table::Table;
+use std::path::PathBuf;
+
+/// Default measurement seed (all experiments are deterministic per seed).
+pub const SEED: u64 = 42;
+
+/// Build the profiled system for a GPU type (hardware + all 4 workloads).
+pub fn profiled_system(kind: GpuKind, seed: u64) -> ProfiledSystem {
+    let (hw, wls) = crate::profiler::profile_all(kind, seed);
+    ProfiledSystem {
+        hw,
+        coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    }
+}
+
+/// Results directory (results/ at the repo root).
+pub fn results_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}
+
+/// Print a table and persist it as results/<stem>.{txt,csv}.
+pub fn emit(table: &Table, stem: &str) {
+    println!("{}", table.render());
+    if let Err(e) = table.save(&results_dir(), stem) {
+        eprintln!("warning: could not save results/{stem}: {e}");
+    }
+}
+
+/// The three motivation-experiment models (Sec. 2.2).
+pub const MOTIVATION_MODELS: [Model; 3] = [Model::AlexNet, Model::ResNet50, Model::Vgg19];
+
+/// Mean over repeated noisy measurements of a closure.
+pub fn measure<F: FnMut() -> f64>(reps: usize, mut f: F) -> (f64, f64) {
+    let xs: Vec<f64> = (0..reps).map(|_| f()).collect();
+    (crate::util::stats::mean(&xs), crate::util::stats::std(&xs))
+}

@@ -1,0 +1,184 @@
+//! Dynamic re-provisioning under time-varying arrival rates — the paper's
+//! future-work item (4), built on `workload::trace` + `provisioner::online`.
+//!
+//! Each epoch the arrival rates change per a diurnal trace; three policies
+//! are compared:
+//!   * `static-peak`   — provision once for nominal (peak) rates;
+//!   * `reprovision`   — run Alg. 1 from scratch every epoch;
+//!   * `online`        — incremental: eagerly re-place workloads whose
+//!                       rate grew, lazily (20 % hysteresis) those that
+//!                       shrank; rebalance when it saves GPUs.
+//!
+//! Metric: GPU-hours (cost) summed across epochs, with zero predicted SLO
+//! violations required everywhere.
+
+use super::common::{emit, profiled_system, SEED};
+use crate::gpu::GpuKind;
+use crate::provisioner::{self, online::OnlinePlanner, ProfiledSystem, WorkloadSpec};
+use crate::util::table::{f, Table};
+use crate::workload::trace::{RateTrace, TraceKind};
+use crate::workload::app_workloads;
+use anyhow::Result;
+
+fn scaled(specs: &[WorkloadSpec], trace: &RateTrace, epoch: usize) -> Vec<WorkloadSpec> {
+    specs
+        .iter()
+        .enumerate()
+        .map(|(w, s)| {
+            let mut c = s.clone();
+            c.rate_rps = (s.rate_rps * trace.at(epoch, w)).max(1.0);
+            c
+        })
+        .collect()
+}
+
+/// Count predicted violations of a plan against a spec set.
+fn violations(sys: &ProfiledSystem, specs: &[WorkloadSpec], plan: &provisioner::Plan) -> usize {
+    provisioner::predict_plan(sys, specs, plan)
+        .iter()
+        .filter(|(w, t, h)| {
+            *t > specs[*w].slo_ms / 2.0 + 1e-6 || *h < specs[*w].rate_rps * 0.999
+        })
+        .count()
+}
+
+pub fn dynamic(kind: GpuKind) -> Result<()> {
+    let sys = profiled_system(kind, SEED);
+    let specs = app_workloads();
+    let epochs = 24; // one simulated day, hourly re-provisioning
+    let trace = RateTrace::generate(
+        TraceKind::Diurnal {
+            period_epochs: 24,
+            floor: 0.25,
+        },
+        epochs,
+        specs.len(),
+        SEED,
+    );
+
+    // static-peak: one plan for nominal rates, held all day.
+    let peak_plan = provisioner::provision(&sys, &specs);
+    let static_cost = peak_plan.cost_per_hour() * epochs as f64;
+
+    // reprovision: full Alg. 1 per epoch.
+    let mut re_cost = 0.0;
+    let mut re_viol = 0;
+    for e in 0..epochs {
+        let es = scaled(&specs, &trace, e);
+        let plan = provisioner::provision(&sys, &es);
+        re_cost += plan.cost_per_hour();
+        re_viol += violations(&sys, &es, &plan);
+    }
+
+    // online: incremental planner, re-adding workloads whose rate moved
+    // >20 % since their last placement; rebalance each epoch.
+    let mut online_cost = 0.0;
+    let mut online_viol = 0;
+    let mut op = OnlinePlanner::new(sys.clone());
+    let mut live_ids: Vec<usize> = Vec::new();
+    let mut last_rate: Vec<f64> = Vec::new();
+    {
+        let e0 = scaled(&specs, &trace, 0);
+        for s in &e0 {
+            let (id, _) = op.add(WorkloadSpec::new(0, s.model, s.slo_ms, s.rate_rps))?;
+            live_ids.push(id);
+            last_rate.push(s.rate_rps);
+        }
+    }
+    for e in 0..epochs {
+        let es = scaled(&specs, &trace, e);
+        if e > 0 {
+            for (w, s) in es.iter().enumerate() {
+                // eager on growth (any rate above the placed one risks an
+                // SLO violation), lazy on shrink (20 % hysteresis).
+                let grew = s.rate_rps > last_rate[w] * 1.001;
+                let shrank_enough = s.rate_rps < last_rate[w] * 0.80;
+                if grew || shrank_enough {
+                    op.remove(live_ids[w])?;
+                    let (id, _) = op.add(WorkloadSpec::new(0, s.model, s.slo_ms, s.rate_rps))?;
+                    live_ids[w] = id;
+                    last_rate[w] = s.rate_rps;
+                }
+            }
+            op.rebalance();
+        }
+        online_cost += op.cost_per_hour();
+        // violation check through the online planner's own predictions
+        for (w, s) in es.iter().enumerate() {
+            if let Some((t_inf, thpt)) = op.predict(live_ids[w]) {
+                // placed for last_rate[w] >= current? violation only if the
+                // *current* rate exceeds predicted capacity or latency SLO
+                if t_inf > s.slo_ms / 2.0 + 1e-6 || thpt < s.rate_rps * 0.999 {
+                    online_viol += 1;
+                }
+            } else {
+                online_viol += 1;
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        "Dynamic provisioning over a 24-epoch diurnal trace (future-work 4): \
+         GPU-hours and predicted violations per policy",
+        &["policy", "gpu_hours_cost", "savings_vs_static", "violations"],
+    );
+    t.row(&[
+        "static-peak".into(),
+        f(static_cost, 2),
+        "0.0%".into(),
+        "0".into(),
+    ]);
+    t.row(&[
+        "reprovision/epoch".into(),
+        f(re_cost, 2),
+        format!("{:.1}%", (1.0 - re_cost / static_cost) * 100.0),
+        re_viol.to_string(),
+    ]);
+    t.row(&[
+        "online (eager-grow)".into(),
+        f(online_cost, 2),
+        format!("{:.1}%", (1.0 - online_cost / static_cost) * 100.0),
+        online_viol.to_string(),
+    ]);
+    emit(&t, "dynamic");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_saves_cost_without_violations() {
+        let kind = GpuKind::V100;
+        let sys = profiled_system(kind, SEED);
+        let specs = app_workloads();
+        let trace = RateTrace::generate(
+            TraceKind::Diurnal {
+                period_epochs: 8,
+                floor: 0.25,
+            },
+            8,
+            specs.len(),
+            SEED,
+        );
+        let peak = provisioner::provision(&sys, &specs);
+        let mut re_cost = 0.0;
+        for e in 0..8 {
+            let es = scaled(&specs, &trace, e);
+            let plan = provisioner::provision(&sys, &es);
+            assert_eq!(violations(&sys, &es, &plan), 0, "epoch {e}");
+            re_cost += plan.cost_per_hour();
+        }
+        let static_cost = peak.cost_per_hour() * 8.0;
+        assert!(
+            re_cost < static_cost * 0.95,
+            "re-provisioning should save >5%: {re_cost} vs {static_cost}"
+        );
+    }
+
+    #[test]
+    fn dynamic_harness_runs() {
+        dynamic(GpuKind::V100).unwrap();
+    }
+}

@@ -1,0 +1,61 @@
+//! Experiment harnesses: one per paper table/figure (see DESIGN.md §5 for
+//! the index).  Each prints the paper's rows/series as an ASCII table and
+//! writes results/<id>.{txt,csv}.
+
+pub mod ablation;
+pub mod common;
+pub mod dynamic;
+pub mod pareto;
+pub mod motivation;
+pub mod overhead;
+pub mod provisioning;
+pub mod validation;
+
+use crate::gpu::GpuKind;
+use anyhow::{bail, Result};
+
+/// All experiment ids, in paper order.
+pub const ALL: [&str; 17] = [
+    "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "fig11",
+    "fig12", "fig13", "fig14", "fig15", "fig17", "fig18", "fig19", "fig20",
+];
+
+/// Run one experiment by id ("all" runs the full battery + fig21/overhead).
+pub fn run(id: &str, kind: GpuKind) -> Result<()> {
+    match id {
+        "fig3" => motivation::fig3(kind),
+        "fig4" => motivation::fig4(kind),
+        "fig5" => motivation::fig5(kind),
+        "fig6" => motivation::fig6(kind),
+        "fig7" => motivation::fig7(kind),
+        "fig8" => motivation::fig8(kind),
+        "fig9" => motivation::fig9(kind),
+        "table1" => provisioning::table1(kind),
+        "fig11" => validation::fig11(kind),
+        "fig12" => validation::fig12(kind),
+        "fig13" => validation::fig13(kind),
+        "fig14" => provisioning::fig14(kind),
+        "fig15" | "fig16" => provisioning::fig15_16(kind),
+        "fig17" => provisioning::fig17(kind),
+        "fig18" => provisioning::fig18(kind),
+        "fig19" => provisioning::fig19(kind),
+        "fig20" => overhead::fig20(),
+        "ablation" => ablation::ablation(kind),
+        "dynamic" => dynamic::dynamic(kind),
+        "pareto" => pareto::pareto(kind),
+        "fig21" => overhead::fig21(kind),
+        "overhead" => overhead::overhead(),
+        "all" => {
+            for id in ALL {
+                println!("\n=== {id} ===");
+                run(id, kind)?;
+            }
+            run("fig21", kind)?;
+            run("overhead", kind)?;
+            run("ablation", kind)?;
+            run("dynamic", kind)?;
+            run("pareto", kind)
+        }
+        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, ablation, dynamic, pareto, all"),
+    }
+}

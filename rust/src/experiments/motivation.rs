@@ -1,0 +1,216 @@
+//! Motivation experiments (Sec. 2.2): Figs. 3-9 — the interference
+//! phenomenology of the simulated testbed, regenerated in the paper's own
+//! sweep parameters.
+
+use super::common::{emit, measure, profiled_system, MOTIVATION_MODELS, SEED};
+use crate::gpu::{GpuDevice, GpuKind, Model};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+/// Fig. 3: normalized latency of A/R/V vs. 1-5 identical co-located
+/// workloads, each at 20 % of the GPU (batch 4, 3 repetitions).
+pub fn fig3(kind: GpuKind) -> Result<()> {
+    let mut t = Table::new(
+        "Fig. 3 — normalized inference latency vs. co-located identical workloads \
+         (20% GPU each, batch 4; paper: +0.83%..+34.98% from 2 to 5)",
+        &["model", "n=1", "n=2", "n=3", "n=4", "n=5"],
+    );
+    for model in MOTIVATION_MODELS {
+        let mut row = vec![model.name().to_string()];
+        let mut solo = 0.0;
+        for n in 1..=5u64 {
+            let (mean, _) = measure(3, || {
+                let mut d = GpuDevice::new(kind, SEED ^ n);
+                for i in 0..n {
+                    assert!(d.launch(i, model, 0.2, 4));
+                }
+                d.query_latency(0, 4).unwrap().t_inf
+            });
+            if n == 1 {
+                solo = mean;
+            }
+            row.push(format!("{:.3}", mean / solo));
+        }
+        t.row(&row);
+    }
+    emit(&t, "fig3");
+    Ok(())
+}
+
+/// Fig. 4: normalized latency of ResNet-50 (50 %, b=16) co-located with
+/// AlexNet or VGG-19 (50 %) whose batch varies 1..32.
+pub fn fig4(kind: GpuKind) -> Result<()> {
+    let batches = [1u32, 2, 4, 8, 16, 32];
+    let mut header = vec!["co-runner".to_string()];
+    header.extend(batches.iter().map(|b| format!("b={b}")));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Fig. 4 — normalized ResNet-50 latency (50%, b=16) vs. co-runner batch \
+         (paper: +6.36%..+13.93%)",
+        &hdr,
+    );
+    let solo = {
+        let mut d = GpuDevice::noiseless(kind);
+        d.launch(0, Model::ResNet50, 0.5, 16);
+        d.query_latency(0, 16).unwrap().t_inf
+    };
+    for co in [Model::AlexNet, Model::Vgg19] {
+        let mut row = vec![co.name().to_string()];
+        for &b in &batches {
+            let (mean, _) = measure(3, || {
+                let mut d = GpuDevice::new(kind, SEED ^ b as u64);
+                d.launch(0, Model::ResNet50, 0.5, 16);
+                d.launch(1, co, 0.5, b);
+                d.query_latency(0, 16).unwrap().t_inf
+            });
+            row.push(format!("{:.3}", mean / solo));
+        }
+        t.row(&row);
+    }
+    emit(&t, "fig4");
+    Ok(())
+}
+
+/// Fig. 5: total kernel scheduling delay (ms) vs. #workloads.
+pub fn fig5(kind: GpuKind) -> Result<()> {
+    let mut t = Table::new(
+        "Fig. 5 — scheduling delay (ms) vs. co-located workloads \
+         (paper: linear growth; ResNet-50 steeper than AlexNet)",
+        &["model", "n=1", "n=2", "n=3", "n=4", "n=5"],
+    );
+    for model in MOTIVATION_MODELS {
+        let mut row = vec![model.name().to_string()];
+        for n in 1..=5u64 {
+            let mut d = GpuDevice::new(kind, SEED ^ n);
+            for i in 0..n {
+                assert!(d.launch(i, model, 0.2, 4));
+            }
+            row.push(f(d.query_latency(0, 4).unwrap().t_sched, 4));
+        }
+        t.row(&row);
+    }
+    emit(&t, "fig5");
+    Ok(())
+}
+
+/// Fig. 6: ResNet-50 GPU active time + L2 hit ratio vs. #workloads.
+pub fn fig6(kind: GpuKind) -> Result<()> {
+    let mut t = Table::new(
+        "Fig. 6 — ResNet-50 active time vs. L2 hit ratio \
+         (paper: inversely related)",
+        &["n", "active_ms", "l2_hit_ratio"],
+    );
+    for n in 1..=5u64 {
+        let mut d = GpuDevice::new(kind, SEED ^ n);
+        for i in 0..n {
+            assert!(d.launch(i, Model::ResNet50, 0.2, 4));
+        }
+        let q = d.query_latency(0, 4).unwrap();
+        t.row(&[n.to_string(), f(q.t_act, 3), f(d.l2_hit_ratio(), 3)]);
+    }
+    emit(&t, "fig6");
+    Ok(())
+}
+
+/// Fig. 7: GPU power + frequency for VGG-19 / ResNet-50 vs. #workloads.
+pub fn fig7(kind: GpuKind) -> Result<()> {
+    let mut t = Table::new(
+        "Fig. 7 — GPU power (W) and frequency (MHz) vs. co-located workloads \
+         (paper: frequency drops once power hits the 300 W cap)",
+        &["model", "n", "power_w", "freq_mhz"],
+    );
+    for model in [Model::Vgg19, Model::ResNet50] {
+        for n in 1..=5u64 {
+            let mut d = GpuDevice::new(kind, SEED ^ n);
+            for i in 0..n {
+                assert!(d.launch(i, model, 0.2, 16));
+            }
+            t.row(&[
+                model.name().to_string(),
+                n.to_string(),
+                f(d.power_demand_w(), 1),
+                f(d.frequency_mhz(), 0),
+            ]);
+        }
+    }
+    emit(&t, "fig7");
+    Ok(())
+}
+
+/// Fig. 8: ResNet-50 GPU active time vs. batch x resources (the Eq.-11
+/// surface the profiler fits).
+pub fn fig8(kind: GpuKind) -> Result<()> {
+    let rs = [0.2, 0.4, 0.6, 0.8, 1.0];
+    let mut header = vec!["batch".to_string()];
+    header.extend(rs.iter().map(|r| format!("r={:.0}%", r * 100.0)));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Fig. 8 — ResNet-50 GPU active time (ms): ~1/r in resources, \
+         quadratic-ish in batch",
+        &hdr,
+    );
+    for b in [1u32, 2, 4, 8, 16, 32] {
+        let mut row = vec![b.to_string()];
+        for &r in &rs {
+            let mut d = GpuDevice::noiseless(kind);
+            d.launch(0, Model::ResNet50, r, b);
+            row.push(f(d.query_latency(0, b).unwrap().t_act, 3));
+        }
+        t.row(&row);
+    }
+    emit(&t, "fig8");
+    Ok(())
+}
+
+/// Fig. 9: power and L2 cache utilization vs. GPU processing ability
+/// (linear laws the profiler fits).
+pub fn fig9(kind: GpuKind) -> Result<()> {
+    let mut t = Table::new(
+        "Fig. 9 — ResNet-50 power (W) and L2 utilization vs. processing \
+         ability b/k_act (paper: both linear)",
+        &["batch", "ability_q_per_ms", "power_w", "l2_util"],
+    );
+    let prof = crate::gpu::profile(Model::ResNet50, kind);
+    let idle = GpuDevice::noiseless(kind).spec.idle_power_w;
+    for b in [1u32, 2, 4, 8, 16, 24, 32] {
+        let mut d = GpuDevice::noiseless(kind);
+        d.launch(0, Model::ResNet50, 1.0, b);
+        let q = d.query_latency(0, b).unwrap();
+        let ability = b as f64 / q.t_act;
+        t.row(&[
+            b.to_string(),
+            f(ability, 3),
+            f(d.power_demand_w() - idle, 1),
+            f(prof.cache_util(b as f64, 1.0), 4),
+        ]);
+    }
+    emit(&t, "fig9");
+
+    // verification: the fitted profiler lines should match these samples
+    let sys = profiled_system(kind, SEED);
+    let wc = sys.coeffs_for(Model::ResNet50);
+    println!(
+        "fitted power line: {:.2} * ability + {:.2} (W above idle)\n\
+         fitted cache line: {:.4} * ability + {:.4}",
+        wc.alpha_power, wc.beta_power, wc.alpha_cacheutil, wc.beta_cacheutil
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_motivation_figures_run() {
+        for fun in [fig3, fig4, fig5, fig6, fig7, fig8, fig9] {
+            fun(GpuKind::V100).unwrap();
+        }
+        // artifacts written
+        for stem in ["fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9"] {
+            assert!(super::super::common::results_dir()
+                .join(format!("{stem}.csv"))
+                .exists());
+        }
+    }
+}

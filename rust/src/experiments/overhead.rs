@@ -1,0 +1,147 @@
+//! Overhead + heterogeneous experiments: Fig. 20 (T4 cluster) and Fig. 21
+//! (algorithm computation/memory scalability), plus the Sec.-5.4 profiling
+//! overhead accounting.
+
+use super::common::{emit, profiled_system, SEED};
+use crate::gpu::GpuKind;
+use crate::provisioner::{heterogeneous, igniter};
+use crate::util::table::{f, Table};
+use crate::workload::{app_workloads, synthetic_workloads};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Fig. 20: heterogeneous cluster — provision the 12 workloads on T4s and
+/// V100s, pick the cheapest.
+pub fn fig20() -> Result<()> {
+    let specs = app_workloads();
+    let systems = [
+        profiled_system(GpuKind::V100, SEED),
+        profiled_system(GpuKind::T4, SEED),
+    ];
+    let plans = heterogeneous::select_cheapest(&systems, &specs);
+    let mut t = Table::new(
+        "Fig. 20 — heterogeneous provisioning (paper: 15x g4dn.xlarge $7.89/h \
+         beats 6x p3.2xlarge $18.36/h; W7/W8/W10/W12 need multiple T4s)",
+        &["gpu", "instances", "cost_per_h", "replicated_workloads"],
+    );
+    for tp in &plans {
+        let mut replicated: Vec<String> = Vec::new();
+        for w in 0..specs.len() {
+            let n = tp.replicated.origin.iter().filter(|&&o| o == w).count();
+            if n > 1 {
+                replicated.push(format!("{}x{}", specs[w].name, n));
+            }
+        }
+        t.row(&[
+            tp.plan.gpu.clone(),
+            tp.plan.num_gpus().to_string(),
+            format!("${:.2}", tp.plan.cost_per_hour()),
+            replicated.join(" "),
+        ]);
+    }
+    emit(&t, "fig20");
+    println!(
+        "selected: {} ({} instances, ${:.2}/h)",
+        plans[0].plan.gpu,
+        plans[0].plan.num_gpus(),
+        plans[0].plan.cost_per_hour()
+    );
+    Ok(())
+}
+
+fn rss_mb() -> f64 {
+    // VmRSS from /proc/self/statm (pages) — Linux only, best effort.
+    std::fs::read_to_string("/proc/self/statm")
+        .ok()
+        .and_then(|s| {
+            s.split_whitespace()
+                .nth(1)
+                .and_then(|p| p.parse::<f64>().ok())
+        })
+        .map(|pages| pages * 4096.0 / 1e6)
+        .unwrap_or(f64::NAN)
+}
+
+/// Fig. 21: Alg.-1 computation time and memory vs. 10..1000 workloads.
+pub fn fig21(kind: GpuKind) -> Result<()> {
+    let sys = profiled_system(kind, SEED);
+    let mut t = Table::new(
+        "Fig. 21 — iGniter strategy overhead vs. #workloads \
+         (paper: 3.64 ms @ 12, <= 4.61 s and <= 55 MB @ 1000; O(m^2) time, O(m) mem)",
+        &["workloads", "time_ms", "rss_delta_mb", "gpus"],
+    );
+    for &n in &[10usize, 50, 100, 200, 500, 1000] {
+        let specs = synthetic_workloads(n, SEED);
+        let rss0 = rss_mb();
+        let t0 = Instant::now();
+        let plan = igniter::provision(&sys, &specs);
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        let drss = (rss_mb() - rss0).max(0.0);
+        t.row(&[
+            n.to_string(),
+            f(dt, 2),
+            f(drss, 2),
+            plan.num_gpus().to_string(),
+        ]);
+    }
+    emit(&t, "fig21");
+    Ok(())
+}
+
+/// Sec. 5.4: profiling overhead — how many simulated-testbed measurements
+/// the lightweight profiler needs (the paper's wall-clock ~4 min per model
+/// corresponds to 11 configs x a few seconds of queries; here we report
+/// the measurement counts and the wall cost of the whole fitting pipeline).
+pub fn overhead() -> Result<()> {
+    let mut t = Table::new(
+        "Sec. 5.4 — profiling overhead (paper: 231-247 s per workload on the \
+         real testbed; 11 configs only vs. 1,280 for exhaustive)",
+        &["item", "value"],
+    );
+    let t0 = Instant::now();
+    let _hw = crate::profiler::profile_hardware(GpuKind::V100, SEED);
+    let hw_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    for &m in &crate::gpu::ALL_MODELS {
+        let _ = crate::profiler::profile_workload(m, GpuKind::V100, SEED);
+    }
+    let wl_ms = t1.elapsed().as_secs_f64() * 1e3;
+    t.row(&["configs per workload".into(), "11".into()]);
+    t.row(&[
+        "queries per config".into(),
+        crate::profiler::QUERIES_PER_CONFIG.to_string(),
+    ]);
+    t.row(&["exhaustive grid (paper)".into(), "1280".into()]);
+    t.row(&["hardware profiling wall (ms)".into(), f(hw_ms, 2)]);
+    t.row(&["4-workload profiling wall (ms)".into(), f(wl_ms, 2)]);
+    emit(&t, "overhead");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig20_runs_and_t4_wins() {
+        fig20().unwrap();
+        let out = std::fs::read_to_string(
+            super::super::common::results_dir().join("fig20.csv"),
+        )
+        .unwrap();
+        let first_data_line = out.lines().nth(1).unwrap();
+        assert!(first_data_line.starts_with("T4"), "{first_data_line}");
+    }
+
+    #[test]
+    fn fig21_scales() {
+        // smoke-run a reduced version inline (full fig21 runs in the CLI)
+        let sys = profiled_system(GpuKind::V100, SEED);
+        let specs = synthetic_workloads(100, SEED);
+        let t0 = Instant::now();
+        let plan = igniter::provision(&sys, &specs);
+        let dt = t0.elapsed().as_secs_f64();
+        plan.validate(specs.len(), 1.0).unwrap();
+        assert!(dt < 5.0, "100 workloads took {dt:.1}s");
+    }
+}

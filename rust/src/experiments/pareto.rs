@@ -1,0 +1,109 @@
+//! Cost-vs-performance tradeoff sweep — the paper's future-work item (3):
+//! "negotiating the tradeoff between minimizing the monetary cost and
+//! maximizing the performance of DNN inference workloads".
+//!
+//! The knob is an SLO-scale lambda applied to every workload's latency SLO:
+//! lambda < 1 demands stricter tails (more resources, more GPUs), lambda > 1
+//! relaxes them.  The sweep exposes the cost curve a deployment can
+//! negotiate against, plus the infeasibility cliff where SLOs become
+//! unachievable at full device resources.
+
+use super::common::{emit, profiled_system, SEED};
+use crate::gpu::GpuKind;
+use crate::provisioner::{self, WorkloadSpec};
+use crate::util::table::{f, Table};
+use crate::workload::app_workloads;
+use anyhow::Result;
+
+/// Scale all SLOs by `lambda`.
+fn scaled(specs: &[WorkloadSpec], lambda: f64) -> Vec<WorkloadSpec> {
+    specs
+        .iter()
+        .map(|s| {
+            let mut c = s.clone();
+            c.slo_ms = s.slo_ms * lambda;
+            c
+        })
+        .collect()
+}
+
+pub fn pareto(kind: GpuKind) -> Result<()> {
+    let sys = profiled_system(kind, SEED);
+    let specs = app_workloads();
+    let mut t = Table::new(
+        "Cost vs. SLO-tightness sweep (future-work 3): hourly cost of the \
+         iGniter plan as every latency SLO is scaled by lambda",
+        &["lambda", "feasible", "gpus", "cost_per_h", "mean_headroom"],
+    );
+    for &lambda in &[0.6, 0.7, 0.8, 0.9, 1.0, 1.2, 1.5, 2.0, 3.0] {
+        let es = scaled(&specs, lambda);
+        let derived = provisioner::derive_all(&sys, &es);
+        if derived.iter().any(|d| d.is_none()) {
+            t.row(&[
+                f(lambda, 2),
+                "no".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        let plan = provisioner::igniter::provision_with_derived(&sys, &es, &derived);
+        // headroom: how far below the half-SLO the predictions sit
+        let preds = provisioner::predict_plan(&sys, &es, &plan);
+        let headrooms: Vec<f64> = preds
+            .iter()
+            .map(|(w, t_inf, _)| 1.0 - t_inf / (es[*w].slo_ms / 2.0))
+            .collect();
+        t.row(&[
+            f(lambda, 2),
+            "yes".into(),
+            plan.num_gpus().to_string(),
+            format!("${:.2}", plan.cost_per_hour()),
+            format!("{:.1}%", crate::util::stats::mean(&headrooms) * 100.0),
+        ]);
+    }
+    emit(&t, "pareto");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_is_monotone_decreasing_in_lambda() {
+        let sys = profiled_system(GpuKind::V100, SEED);
+        let specs = app_workloads();
+        let mut last_gpus = usize::MAX;
+        for &lambda in &[0.8, 1.0, 1.5, 2.5] {
+            let es = scaled(&specs, lambda);
+            let derived = provisioner::derive_all(&sys, &es);
+            if derived.iter().any(|d| d.is_none()) {
+                continue;
+            }
+            let plan = provisioner::igniter::provision_with_derived(&sys, &es, &derived);
+            assert!(
+                plan.num_gpus() <= last_gpus,
+                "lambda={lambda}: {} > {last_gpus}",
+                plan.num_gpus()
+            );
+            last_gpus = plan.num_gpus();
+        }
+        assert!(last_gpus < usize::MAX, "no feasible lambda");
+    }
+
+    #[test]
+    fn tight_slos_eventually_infeasible() {
+        let sys = profiled_system(GpuKind::V100, SEED);
+        let specs = app_workloads();
+        let es = scaled(&specs, 0.05);
+        let derived = provisioner::derive_all(&sys, &es);
+        assert!(derived.iter().any(|d| d.is_none()), "0.05x SLOs should be infeasible");
+    }
+
+    #[test]
+    fn pareto_harness_runs() {
+        pareto(GpuKind::V100).unwrap();
+    }
+}

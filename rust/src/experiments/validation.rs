@@ -1,0 +1,225 @@
+//! Model-validation experiments (Sec. 5.2): Figs. 11-13 — observed
+//! (simulator ground truth with measurement noise) vs. predicted
+//! (analytical model from profiled coefficients), including the gpu-lets+
+//! pairwise predictor where the paper compares against it.
+
+use super::common::{emit, measure, profiled_system, SEED};
+use crate::gpu::{GpuDevice, GpuKind, Model};
+use crate::perfmodel::{self, PlacedWorkload};
+use crate::provisioner::gpulets;
+use crate::util::table::{f, pct, Table};
+use anyhow::Result;
+
+fn observe(kind: GpuKind, placed: &[(Model, f64, u32)], target: usize, seed: u64) -> f64 {
+    let (mean, _) = measure(3, || {
+        let mut d = GpuDevice::new(kind, seed);
+        for (i, &(m, r, b)) in placed.iter().enumerate() {
+            assert!(d.launch(i as u64, m, r, b), "placement over 100%");
+        }
+        d.query_latency(target as u64, placed[target].2).unwrap().t_inf
+    });
+    mean
+}
+
+fn igniter_predict(
+    sys: &crate::provisioner::ProfiledSystem,
+    placed: &[(Model, f64, u32)],
+    target: usize,
+) -> f64 {
+    let view: Vec<PlacedWorkload> = placed
+        .iter()
+        .map(|&(m, r, b)| PlacedWorkload {
+            coeffs: sys.coeffs_for(m),
+            batch: b as f64,
+            resources: r,
+        })
+        .collect();
+    perfmodel::predict(&sys.hw, &view, target).t_inf
+}
+
+/// gpu-lets+ can only predict pairs: solo + pairwise dilation of t_gpu.
+fn gpulets_predict(
+    sys: &crate::provisioner::ProfiledSystem,
+    placed: &[(Model, f64, u32)],
+    target: usize,
+) -> Option<f64> {
+    if placed.len() != 2 {
+        return None;
+    }
+    let (m, r, b) = placed[target];
+    let (om, or, ob) = placed[1 - target];
+    let wc = sys.coeffs_for(m);
+    let solo = perfmodel::predict_solo(&sys.hw, wc, b as f64, r);
+    let t = PlacedWorkload {
+        coeffs: wc,
+        batch: b as f64,
+        resources: r,
+    };
+    let o = PlacedWorkload {
+        coeffs: sys.coeffs_for(om),
+        batch: ob as f64,
+        resources: or,
+    };
+    Some(solo.t_load + solo.t_feedback + solo.t_gpu * gpulets::pair_dilation(sys, &t, &o))
+}
+
+/// Fig. 11: co-located VGG-19 + SSD, batch 3 each, resources swept.
+pub fn fig11(kind: GpuKind) -> Result<()> {
+    let sys = profiled_system(kind, SEED);
+    let mut t = Table::new(
+        "Fig. 11 — observed vs. predicted latency (ms), VGG-19 + SSD co-located, b=3 \
+         (paper: iGniter err 0.04-2.32% V / 0.89-7.61% S)",
+        &[
+            "r_vgg", "r_ssd", "model", "observed", "iGniter", "err", "gpu-lets+", "err(gl)",
+        ],
+    );
+    let mut max_err: f64 = 0.0;
+    for &(rv, rs) in &[(0.2, 0.3), (0.3, 0.4), (0.4, 0.5), (0.5, 0.5), (0.3, 0.6)] {
+        let placed = [(Model::Vgg19, rv, 3u32), (Model::Ssd, rs, 3u32)];
+        for (ti, name) in [(0usize, "vgg19"), (1, "ssd")] {
+            let obs = observe(kind, &placed, ti, SEED ^ (ti as u64) ^ ((rv * 100.0) as u64));
+            let pred = igniter_predict(&sys, &placed, ti);
+            let gl = gpulets_predict(&sys, &placed, ti).unwrap();
+            let err = perfmodel::rel_error(pred, obs);
+            max_err = max_err.max(err);
+            t.row(&[
+                pct(rv),
+                pct(rs),
+                name.to_string(),
+                f(obs, 2),
+                f(pred, 2),
+                pct(err),
+                f(gl, 2),
+                pct(perfmodel::rel_error(gl, obs)),
+            ]);
+        }
+    }
+    emit(&t, "fig11");
+    println!("max iGniter prediction error: {}", pct(max_err));
+    Ok(())
+}
+
+/// Fig. 12: co-located AlexNet + ResNet-50, 50 % each, batch swept 1-32.
+pub fn fig12(kind: GpuKind) -> Result<()> {
+    let sys = profiled_system(kind, SEED);
+    let mut t = Table::new(
+        "Fig. 12 — observed vs. predicted latency (ms), AlexNet + ResNet-50 at 50% each \
+         (paper: iGniter err 3.91-5.90% A / 1.10-9.29% R)",
+        &["batch", "model", "observed", "iGniter", "err", "gpu-lets+", "err(gl)"],
+    );
+    for &b in &[1u32, 2, 4, 8, 16, 32] {
+        let placed = [(Model::AlexNet, 0.5, b), (Model::ResNet50, 0.5, b)];
+        for (ti, name) in [(0usize, "alexnet"), (1, "resnet50")] {
+            let obs = observe(kind, &placed, ti, SEED ^ (b as u64) << 2 ^ ti as u64);
+            let pred = igniter_predict(&sys, &placed, ti);
+            let gl = gpulets_predict(&sys, &placed, ti).unwrap();
+            t.row(&[
+                b.to_string(),
+                name.to_string(),
+                f(obs, 2),
+                f(pred, 2),
+                pct(perfmodel::rel_error(pred, obs)),
+                f(gl, 2),
+                pct(perfmodel::rel_error(gl, obs)),
+            ]);
+        }
+    }
+    emit(&t, "fig12");
+    Ok(())
+}
+
+/// Fig. 13: all four models co-located at 25 % each, batch 3 — beyond
+/// gpu-lets' pairwise reach.
+pub fn fig13(kind: GpuKind) -> Result<()> {
+    let sys = profiled_system(kind, SEED);
+    let mut t = Table::new(
+        "Fig. 13 — observed vs. iGniter-predicted latency (ms), 4 co-located models \
+         at 25% each, b=3 (paper: err 1.53-5.02%; gpu-lets cannot predict >2)",
+        &["model", "observed", "predicted", "err", "sched_ms", "freq_mhz"],
+    );
+    let placed = [
+        (Model::AlexNet, 0.25, 3u32),
+        (Model::ResNet50, 0.25, 3),
+        (Model::Vgg19, 0.25, 3),
+        (Model::Ssd, 0.25, 3),
+    ];
+    let mut errs = Vec::new();
+    for ti in 0..4 {
+        let obs = observe(kind, &placed, ti, SEED ^ (77 + ti as u64));
+        let view: Vec<PlacedWorkload> = placed
+            .iter()
+            .map(|&(m, r, b)| PlacedWorkload {
+                coeffs: sys.coeffs_for(m),
+                batch: b as f64,
+                resources: r,
+            })
+            .collect();
+        let p = perfmodel::predict(&sys.hw, &view, ti);
+        let err = perfmodel::rel_error(p.t_inf, obs);
+        errs.push(err);
+        t.row(&[
+            placed[ti].0.name().to_string(),
+            f(obs, 2),
+            f(p.t_inf, 2),
+            pct(err),
+            f(p.t_sched, 3),
+            f(p.freq_mhz, 0),
+        ]);
+    }
+    emit(&t, "fig13");
+    println!(
+        "error band: {} .. {}",
+        pct(errs.iter().cloned().fold(f64::INFINITY, f64::min)),
+        pct(errs.iter().cloned().fold(0.0, f64::max))
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_12_13_run_and_errors_small() {
+        fig11(GpuKind::V100).unwrap();
+        fig12(GpuKind::V100).unwrap();
+        fig13(GpuKind::V100).unwrap();
+    }
+
+    #[test]
+    fn igniter_beats_gpulets_on_multi_colocation() {
+        // With 4 co-located workloads the iGniter model still predicts
+        // within ~10%; gpu-lets+ has no prediction at all (None).
+        let kind = GpuKind::V100;
+        let sys = profiled_system(kind, SEED);
+        let placed = [
+            (Model::AlexNet, 0.25, 3u32),
+            (Model::ResNet50, 0.25, 3),
+            (Model::Vgg19, 0.25, 3),
+            (Model::Ssd, 0.25, 3),
+        ];
+        assert!(gpulets_predict(&sys, &placed, 0).is_none());
+        for ti in 0..4 {
+            let obs = observe(kind, &placed, ti, 123 + ti as u64);
+            let pred = igniter_predict(&sys, &placed, ti);
+            let e = perfmodel::rel_error(pred, obs);
+            assert!(e < 0.12, "{ti}: err {:.1}%", e * 100.0);
+        }
+    }
+
+    #[test]
+    fn pairwise_prediction_errors_reasonable() {
+        // Sec. 5.2 band: single-digit percent errors for pairs.
+        let kind = GpuKind::V100;
+        let sys = profiled_system(kind, SEED);
+        for &b in &[2u32, 8, 24] {
+            let placed = [(Model::AlexNet, 0.5, b), (Model::ResNet50, 0.5, b)];
+            for ti in 0..2 {
+                let obs = observe(kind, &placed, ti, 55 + b as u64 + ti as u64);
+                let pred = igniter_predict(&sys, &placed, ti);
+                let e = perfmodel::rel_error(pred, obs);
+                assert!(e < 0.12, "b={b} ti={ti}: err {:.1}%", e * 100.0);
+            }
+        }
+    }
+}

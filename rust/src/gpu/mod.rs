@@ -1,0 +1,11 @@
+//! Simulated GPU substrate: hardware specs, ground-truth workload physics,
+//! and the MPS spatial-sharing device model with the paper's three
+//! interference mechanisms (scheduler, L2 cache, power/DVFS).
+
+pub mod device;
+pub mod profile;
+pub mod spec;
+
+pub use device::{DeviceTelemetry, GpuDevice, ProcessSlot, QueryLatency};
+pub use profile::{profile, Model, WorkloadProfile, ALL_MODELS};
+pub use spec::{GpuKind, GpuSpec};

@@ -1,0 +1,207 @@
+//! GPU hardware specifications (the "hardware-specific coefficients" of
+//! Sec. 3.1, plus the physical constants the simulator needs).
+//!
+//! Values for the V100 are the paper's measured ones (Sec. 5.1): max power
+//! P = 300 W, max frequency F = 1530 MHz, idle power 53.5 W, PCIe bandwidth
+//! 10 GB/s, frequency coefficient alpha_f = -1.025 MHz/W, scheduling
+//! coefficients alpha_sch = 0.00475 ms, beta_sch = -0.00902 ms.  The T4
+//! (g4dn.xlarge) has roughly half the compute and a third of the memory
+//! bandwidth (Sec. 5.3).
+
+/// Identifier of a GPU hardware generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuKind {
+    V100,
+    T4,
+}
+
+impl GpuKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuKind::V100 => "V100",
+            GpuKind::T4 => "T4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GpuKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "v100" => Some(GpuKind::V100),
+            "t4" => Some(GpuKind::T4),
+            _ => None,
+        }
+    }
+}
+
+/// Hardware-specific coefficients of one GPU generation.
+///
+/// All times in **milliseconds**, power in watts, frequency in MHz,
+/// bandwidth in GB/s, resources as fractions of the device in [0, 1].
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub kind: GpuKind,
+    /// Number of streaming multiprocessors (resource granularity context;
+    /// 2.5 % of a V100's 80 SMs = 2 SMs, the paper's `r_unit`).
+    pub sm_count: u32,
+    /// Upper power limit P (W).
+    pub max_power_w: f64,
+    /// Idle power p_idle (W).
+    pub idle_power_w: f64,
+    /// Maximum core frequency F (MHz).
+    pub max_freq_mhz: f64,
+    /// Frequency floor the governor will not go below (MHz).
+    pub min_freq_mhz: f64,
+    /// Frequency/power coefficient alpha_f (MHz per W above cap; negative).
+    pub alpha_f: f64,
+    /// Increased per-kernel scheduling delay slope alpha_sch (ms/workload).
+    pub alpha_sch: f64,
+    /// Increased per-kernel scheduling delay intercept beta_sch (ms).
+    pub beta_sch: f64,
+    /// Available PCIe bandwidth B_pcie (GB/s).
+    pub pcie_gbps: f64,
+    /// L2 cache size (MB) — scales cache-contention sensitivity.
+    pub l2_cache_mb: f64,
+    /// GPU resource allocation unit r_unit (fraction; 2.5 % on V100).
+    pub r_unit: f64,
+    /// Maximum allocatable resources r_max (fraction).
+    pub r_max: f64,
+}
+
+impl GpuSpec {
+    pub fn v100() -> GpuSpec {
+        GpuSpec {
+            kind: GpuKind::V100,
+            sm_count: 80,
+            max_power_w: 300.0,
+            idle_power_w: 53.5,
+            max_freq_mhz: 1530.0,
+            min_freq_mhz: 900.0,
+            alpha_f: -1.025,
+            alpha_sch: 0.00475,
+            beta_sch: -0.00902,
+            pcie_gbps: 10.0,
+            l2_cache_mb: 6.0,
+            r_unit: 0.025,
+            r_max: 1.0,
+        }
+    }
+
+    pub fn t4() -> GpuSpec {
+        GpuSpec {
+            kind: GpuKind::T4,
+            sm_count: 40,
+            max_power_w: 70.0,
+            idle_power_w: 17.0,
+            max_freq_mhz: 1590.0,
+            min_freq_mhz: 900.0,
+            alpha_f: -3.4,
+            alpha_sch: 0.00610,
+            beta_sch: -0.01104,
+            pcie_gbps: 8.0,
+            l2_cache_mb: 4.0,
+            r_unit: 0.025,
+            r_max: 1.0,
+        }
+    }
+
+    pub fn get(kind: GpuKind) -> GpuSpec {
+        match kind {
+            GpuKind::V100 => GpuSpec::v100(),
+            GpuKind::T4 => GpuSpec::t4(),
+        }
+    }
+
+    /// Increased per-kernel scheduling delay Delta_sch (Eq. 6) for `m`
+    /// co-located workloads on this hardware.
+    pub fn delta_sch(&self, co_located: usize) -> f64 {
+        if co_located <= 1 {
+            0.0
+        } else {
+            (self.alpha_sch * co_located as f64 + self.beta_sch).max(0.0)
+        }
+    }
+
+    /// Governor frequency (Eq. 9) for a total power demand (W).
+    pub fn frequency(&self, demand_w: f64) -> f64 {
+        if demand_w <= self.max_power_w {
+            self.max_freq_mhz
+        } else {
+            (self.max_freq_mhz + self.alpha_f * (demand_w - self.max_power_w))
+                .max(self.min_freq_mhz)
+        }
+    }
+
+    /// Quantize a resource fraction up to the allocation grid.
+    pub fn quantize_up(&self, r: f64) -> f64 {
+        ((r / self.r_unit).ceil() * self.r_unit).clamp(self.r_unit, self.r_max)
+    }
+
+    /// PCIe transfer time (ms) for `bytes` at full bandwidth.
+    pub fn pcie_ms(&self, bytes: f64) -> f64 {
+        // GB/s = bytes/ns; ms = bytes / (GB/s * 1e6)
+        bytes / (self.pcie_gbps * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants() {
+        let v = GpuSpec::v100();
+        assert_eq!(v.max_power_w, 300.0);
+        assert_eq!(v.max_freq_mhz, 1530.0);
+        assert_eq!(v.idle_power_w, 53.5);
+        assert_eq!(v.pcie_gbps, 10.0);
+        assert_eq!(v.r_unit, 0.025);
+    }
+
+    #[test]
+    fn delta_sch_zero_for_solo() {
+        let v = GpuSpec::v100();
+        assert_eq!(v.delta_sch(0), 0.0);
+        assert_eq!(v.delta_sch(1), 0.0);
+        // paper: Delta = 0.00475 * m - 0.00902
+        assert!((v.delta_sch(3) - (0.00475 * 3.0 - 0.00902)).abs() < 1e-12);
+        // monotone in co-location
+        assert!(v.delta_sch(5) > v.delta_sch(3));
+    }
+
+    #[test]
+    fn frequency_governor() {
+        let v = GpuSpec::v100();
+        assert_eq!(v.frequency(250.0), 1530.0);
+        assert_eq!(v.frequency(300.0), 1530.0);
+        let f = v.frequency(320.0);
+        assert!((f - (1530.0 - 1.025 * 20.0)).abs() < 1e-9);
+        // floor respected
+        assert_eq!(v.frequency(5000.0), 900.0);
+    }
+
+    #[test]
+    fn quantize() {
+        let v = GpuSpec::v100();
+        assert!((v.quantize_up(0.30) - 0.30).abs() < 1e-12);
+        assert!((v.quantize_up(0.301) - 0.325).abs() < 1e-12);
+        assert!((v.quantize_up(0.0) - 0.025).abs() < 1e-12);
+        assert!((v.quantize_up(2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pcie_time() {
+        let v = GpuSpec::v100();
+        // 10 MB at 10 GB/s = 1 ms
+        assert!((v.pcie_ms(10e6) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn t4_is_weaker() {
+        let t = GpuSpec::t4();
+        let v = GpuSpec::v100();
+        assert!(t.max_power_w < v.max_power_w);
+        assert!(t.l2_cache_mb < v.l2_cache_mb);
+        assert_eq!(GpuKind::parse("t4"), Some(GpuKind::T4));
+        assert_eq!(GpuKind::parse("V100"), Some(GpuKind::V100));
+        assert_eq!(GpuKind::parse("a100"), None);
+    }
+}

@@ -1,0 +1,19 @@
+//! # iGniter — interference-aware GPU resource provisioning (reproduction)
+//!
+//! Three-layer Rust + JAX + Pallas reproduction of "iGniter:
+//! Interference-Aware GPU Resource Provisioning for Predictable DNN
+//! Inference in the Cloud".  See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod gpu;
+pub mod perfmodel;
+pub mod profiler;
+pub mod provisioner;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

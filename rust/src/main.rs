@@ -1,0 +1,306 @@
+//! `igniter` — the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!   profile     print profiled hardware/workload coefficients
+//!   provision   compute a provisioning plan for a workload set
+//!   serve       run the serving simulation (and optionally real compute)
+//!   verify      check compiled HLO artifacts against Python goldens
+//!   experiment  regenerate a paper table/figure (see DESIGN.md §5)
+//!
+//! Examples:
+//!   igniter experiment fig14
+//!   igniter provision --strategy gpulets --workloads app
+//!   igniter serve --policy shadow --horizon-s 30 --real-batches 2
+//!   igniter verify
+
+use anyhow::{anyhow, bail, Result};
+use igniter::coordinator::{self, ClusterSim, Policy};
+use igniter::gpu::GpuKind;
+use igniter::provisioner::{ffd, gpulets, gslice, igniter as ig, Plan, ProfiledSystem};
+use igniter::runtime::{Engine, Manifest};
+use igniter::util::cli::Args;
+use igniter::util::table::{f, pct, Table};
+use igniter::workload::{self, ArrivalKind};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args = Args::from_env(&["poisson", "json", "verbose", "script"]);
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn gpu_kind(args: &Args) -> Result<GpuKind> {
+    if let Some(cfg) = load_config(args)? {
+        return Ok(cfg.gpu);
+    }
+    let s = args.opt_or("gpu", "v100");
+    GpuKind::parse(s).ok_or_else(|| anyhow!("unknown GPU type '{s}' (v100|t4)"))
+}
+
+/// `--config file.json` overrides gpu/strategy/workloads/serving options.
+fn load_config(args: &Args) -> Result<Option<igniter::config::Config>> {
+    match args.opt("config") {
+        Some(path) => Ok(Some(igniter::config::Config::load(Path::new(path))?)),
+        None => Ok(None),
+    }
+}
+
+fn profiled(args: &Args) -> Result<ProfiledSystem> {
+    let kind = gpu_kind(args)?;
+    let seed = args.opt_u64("seed", 42);
+    let (hw, wls) = igniter::profiler::profile_all(kind, seed);
+    Ok(ProfiledSystem {
+        hw,
+        coeffs: igniter::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    })
+}
+
+fn workload_set(args: &Args) -> Result<Vec<igniter::provisioner::WorkloadSpec>> {
+    if let Some(cfg) = load_config(args)? {
+        return Ok(cfg.workloads);
+    }
+    let w = args.opt_or("workloads", "app");
+    if let Some(n) = w.strip_prefix("synthetic:") {
+        return Ok(workload::synthetic_workloads(
+            n.parse()?,
+            args.opt_u64("seed", 42),
+        ));
+    }
+    match w {
+        "app" => Ok(workload::app_workloads()),
+        "table1" => Ok(workload::table1_workloads()),
+        other => bail!("unknown workload set '{other}' (app|table1|synthetic:N)"),
+    }
+}
+
+fn plan_for(args: &Args, sys: &ProfiledSystem) -> Result<Plan> {
+    let specs = workload_set(args)?;
+    let strategy = match load_config(args)? {
+        Some(cfg) => cfg.strategy,
+        None => args.opt_or("strategy", "igniter").to_string(),
+    };
+    Ok(match strategy.as_str() {
+        "igniter" => ig::provision(sys, &specs),
+        "ffd" => ffd::provision_ffd(sys, &specs),
+        "ffd++" => ffd::provision_ffd_pp(sys, &specs),
+        "gslice" => gslice::provision_gslice(sys, &specs),
+        "gpulets" => gpulets::provision_gpulets(sys, &specs),
+        other => bail!("unknown strategy '{other}'"),
+    })
+}
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("profile") => cmd_profile(args),
+        Some("provision") => cmd_provision(args),
+        Some("serve") => cmd_serve(args),
+        Some("deploy") => cmd_deploy(args),
+        Some("verify") => cmd_verify(),
+        Some("experiment") => {
+            let id = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("all");
+            igniter::experiments::run(id, gpu_kind(args)?)
+        }
+        Some(other) => bail!("unknown subcommand '{other}'"),
+        None => {
+            println!(
+                "igniter — interference-aware GPU resource provisioning (paper reproduction)\n\n\
+                 usage: igniter <profile|provision|serve|verify|experiment> [options]\n\
+                 \x20 profile     [--gpu v100|t4] [--seed N]\n\
+                 \x20 provision   [--strategy igniter|ffd|ffd++|gslice|gpulets] [--workloads app|table1|synthetic:N]\n\
+                 \x20 serve       [--policy shadow|static|gslice] [--horizon-s S] [--poisson] [--real-batches N]\n\
+                 \x20 deploy      [--strategy ...] [--script] — emit the launcher manifest\n\
+                 \x20 verify\n\
+                 \x20 experiment  [fig3..fig21|table1|overhead|all]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let sys = profiled(args)?;
+    println!(
+        "hardware ({}):\n{}",
+        sys.hw.gpu,
+        sys.hw.to_json().to_string_pretty()
+    );
+    let mut t = Table::new(
+        "workload coefficients",
+        &["model", "n_k", "k_sch", "k1", "k2", "k3", "k4", "k5", "a_pow", "a_cache"],
+    );
+    for (m, wc) in &sys.coeffs {
+        t.row(&[
+            m.name().to_string(),
+            f(wc.n_kernels, 0),
+            f(wc.k_sch, 5),
+            format!("{:.5}", wc.kact.k1),
+            f(wc.kact.k2, 4),
+            f(wc.kact.k3, 4),
+            f(wc.kact.k4, 4),
+            f(wc.kact.k5, 4),
+            f(wc.alpha_power, 1),
+            f(wc.alpha_cache, 3),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_provision(args: &Args) -> Result<()> {
+    let sys = profiled(args)?;
+    let specs = workload_set(args)?;
+    let plan = plan_for(args, &sys)?;
+    if args.flag("json") {
+        println!("{}", plan.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!(
+            "{} plan on {}: {} GPUs, ${:.2}/h",
+            plan.strategy,
+            plan.gpu,
+            plan.num_gpus(),
+            plan.cost_per_hour()
+        ),
+        &["gpu", "workload", "resources", "batch", "pred_t_inf_ms", "half_slo_ms"],
+    );
+    let preds = ig::predict_plan(&sys, &specs, &plan);
+    for (g, a) in plan.all() {
+        let p = preds.iter().find(|(w, _, _)| *w == a.workload).unwrap();
+        t.row(&[
+            format!("GPU{}", g + 1),
+            specs[a.workload].name.clone(),
+            pct(a.resources),
+            a.batch.to_string(),
+            f(p.1, 2),
+            f(specs[a.workload].slo_ms / 2.0, 1),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let kind = gpu_kind(args)?;
+    let sys = profiled(args)?;
+    let specs = workload_set(args)?;
+    let plan = plan_for(args, &sys)?;
+    let cfg = load_config(args)?;
+    let policy_s = cfg
+        .as_ref()
+        .map(|c| c.serving.policy.clone())
+        .unwrap_or_else(|| args.opt_or("policy", "shadow").to_string());
+    let policy = match policy_s.as_str() {
+        "shadow" => Policy::IgniterShadow,
+        "static" => Policy::Static,
+        "gslice" => Policy::GsliceTuner { period_ms: 10_000.0 },
+        other => bail!("unknown policy '{other}'"),
+    };
+    let arrival = if args.flag("poisson") || cfg.as_ref().map_or(false, |c| c.serving.poisson) {
+        ArrivalKind::Poisson
+    } else {
+        ArrivalKind::Constant
+    };
+    let horizon = cfg
+        .as_ref()
+        .map(|c| c.serving.horizon_s)
+        .unwrap_or_else(|| args.opt_f64("horizon-s", 30.0))
+        * 1000.0;
+    let mut sim = ClusterSim::new(
+        kind,
+        &plan,
+        &specs,
+        policy,
+        arrival,
+        args.opt_u64("seed", 42),
+        &[],
+    );
+    sim.set_horizon(horizon, 1000.0);
+    let stats = sim.run();
+    let mut t = Table::new(
+        &format!(
+            "virtual-time serving: {} on {} GPUs ({:.0}s horizon)",
+            plan.strategy,
+            plan.num_gpus(),
+            horizon / 1000.0
+        ),
+        &["workload", "P99_ms", "mean_ms", "SLO_ms", "rps", "target", "ok", "switches"],
+    );
+    for s in &stats {
+        t.row(&[
+            s.name.clone(),
+            f(s.p99_ms, 2),
+            f(s.mean_ms, 2),
+            f(s.slo_ms, 0),
+            f(s.achieved_rps, 0),
+            f(s.rate_rps, 0),
+            (!(s.violation || s.throughput_violation)).to_string(),
+            s.shadow_switches.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let real_batches = args.opt_usize("real-batches", 0);
+    if real_batches > 0 {
+        let manifest = Manifest::load(&artifacts_dir())?;
+        let mut engine = Engine::new(manifest)?;
+        let rs = coordinator::realrun::serve_real(
+            &mut engine,
+            &plan,
+            &specs,
+            real_batches as u32,
+            args.opt_u64("seed", 42),
+        )?;
+        let mut rt = Table::new(
+            "real PJRT compute (wall clock; numerics from the AOT-compiled HLO)",
+            &["workload", "model", "batch", "requests", "ms_per_batch", "wall_rps"],
+        );
+        for s in &rs {
+            rt.row(&[
+                s.name.clone(),
+                s.model.clone(),
+                s.batch.to_string(),
+                s.requests.to_string(),
+                f(s.mean_batch_ms, 2),
+                f(s.wall_rps, 0),
+            ]);
+        }
+        println!("{}", rt.render());
+    }
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let sys = profiled(args)?;
+    let specs = workload_set(args)?;
+    let plan = plan_for(args, &sys)?;
+    let deployment = igniter::cluster::deploy(&plan, &specs, true);
+    if args.flag("script") {
+        print!("{}", deployment.to_script());
+    } else {
+        println!("{}", deployment.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
+fn cmd_verify() -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let names: Vec<String> = manifest.models.iter().map(|m| m.name.clone()).collect();
+    let mut engine = Engine::new(manifest)?;
+    for n in &names {
+        let err = engine.verify_golden(n, 1e-3)?;
+        println!("{n}: golden max |err| = {err:.2e}  OK");
+    }
+    println!("all {} models verified against Python goldens", names.len());
+    Ok(())
+}

@@ -1,0 +1,266 @@
+//! Coefficient stores for the analytical performance model (Table 2).
+//!
+//! `HardwareCoeffs` holds the 7 hardware-specific coefficients; per-workload
+//! `WorkloadCoeffs` holds the 8 workload-specific ones (with the Eq.-(11)
+//! active-time law and the Fig.-9 power/cache-utilization lines expanded
+//! into their fitted parameters).  Both are produced by `profiler::` — the
+//! analytical model never touches the simulator's ground truth directly.
+
+use crate::util::json::Json;
+use crate::util::lsq::KactFit;
+
+/// Hardware-specific coefficients (profiled once per GPU type, Sec. 3.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareCoeffs {
+    /// GPU type label ("V100", "T4").
+    pub gpu: String,
+    /// Upper power limit P (W).
+    pub max_power_w: f64,
+    /// Maximum frequency F (MHz).
+    pub max_freq_mhz: f64,
+    /// Idle power p_idle (W).
+    pub idle_power_w: f64,
+    /// Available PCIe bandwidth B_pcie (GB/s).
+    pub pcie_gbps: f64,
+    /// Frequency/power coefficient alpha_f (MHz/W, negative).
+    pub alpha_f: f64,
+    /// Scheduling-delay coefficients (Eq. 6).
+    pub alpha_sch: f64,
+    pub beta_sch: f64,
+    /// Allocation unit r_unit and cap r_max.
+    pub r_unit: f64,
+    pub r_max: f64,
+    /// Hourly unit price of an instance holding one such GPU ($/h).
+    pub unit_price: f64,
+}
+
+impl HardwareCoeffs {
+    /// Increased per-kernel scheduling delay Delta_sch (Eq. 6).
+    pub fn delta_sch(&self, co_located: usize) -> f64 {
+        if co_located <= 1 {
+            0.0
+        } else {
+            (self.alpha_sch * co_located as f64 + self.beta_sch).max(0.0)
+        }
+    }
+
+    /// Predicted frequency (Eq. 9) under total demand (W).
+    pub fn frequency(&self, demand_w: f64) -> f64 {
+        if demand_w <= self.max_power_w {
+            self.max_freq_mhz
+        } else {
+            (self.max_freq_mhz + self.alpha_f * (demand_w - self.max_power_w)).max(1.0)
+        }
+    }
+
+    /// PCIe transfer (ms) for `bytes`.
+    pub fn pcie_ms(&self, bytes: f64) -> f64 {
+        bytes / (self.pcie_gbps * 1e6)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("gpu", self.gpu.as_str())
+            .set("max_power_w", self.max_power_w)
+            .set("max_freq_mhz", self.max_freq_mhz)
+            .set("idle_power_w", self.idle_power_w)
+            .set("pcie_gbps", self.pcie_gbps)
+            .set("alpha_f", self.alpha_f)
+            .set("alpha_sch", self.alpha_sch)
+            .set("beta_sch", self.beta_sch)
+            .set("r_unit", self.r_unit)
+            .set("r_max", self.r_max)
+            .set("unit_price", self.unit_price)
+    }
+
+    pub fn from_json(j: &Json) -> Option<HardwareCoeffs> {
+        Some(HardwareCoeffs {
+            gpu: j.get("gpu")?.as_str()?.to_string(),
+            max_power_w: j.get("max_power_w")?.as_f64()?,
+            max_freq_mhz: j.get("max_freq_mhz")?.as_f64()?,
+            idle_power_w: j.get("idle_power_w")?.as_f64()?,
+            pcie_gbps: j.get("pcie_gbps")?.as_f64()?,
+            alpha_f: j.get("alpha_f")?.as_f64()?,
+            alpha_sch: j.get("alpha_sch")?.as_f64()?,
+            beta_sch: j.get("beta_sch")?.as_f64()?,
+            r_unit: j.get("r_unit")?.as_f64()?,
+            r_max: j.get("r_max")?.as_f64()?,
+            unit_price: j.get("unit_price")?.as_f64()?,
+        })
+    }
+}
+
+/// Workload-specific coefficients (profiled once per workload, Sec. 3.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadCoeffs {
+    /// Workload / model label.
+    pub name: String,
+    /// Input / result bytes per request (d_load, d_feedback).
+    pub d_load_bytes: f64,
+    pub d_feedback_bytes: f64,
+    /// Number of kernels n_k.
+    pub n_kernels: f64,
+    /// Solo per-kernel scheduling delay k_sch (ms).
+    pub k_sch: f64,
+    /// Fitted Eq.-(11) active-time law.
+    pub kact: KactFit,
+    /// Power line p = alpha_power * ability + beta_power (W above idle).
+    pub alpha_power: f64,
+    pub beta_power: f64,
+    /// Cache-utilization line c = alpha_cu * ability + beta_cu (fraction).
+    pub alpha_cacheutil: f64,
+    pub beta_cacheutil: f64,
+    /// Active-time dilation per unit of co-located cache utilization.
+    pub alpha_cache: f64,
+}
+
+impl WorkloadCoeffs {
+    /// Predicted solo active time k_act(b, r) (Eq. 11).
+    pub fn k_act(&self, batch: f64, r: f64) -> f64 {
+        self.kact.eval(batch, r)
+    }
+
+    /// GPU processing ability b / k_act (queries/ms).
+    pub fn ability(&self, batch: f64, r: f64) -> f64 {
+        batch / self.k_act(batch, r)
+    }
+
+    /// Predicted power contribution (W above idle).
+    pub fn power_w(&self, batch: f64, r: f64) -> f64 {
+        (self.alpha_power * self.ability(batch, r) + self.beta_power).max(0.0)
+    }
+
+    /// Predicted L2 cache utilization (fraction).
+    pub fn cache_util(&self, batch: f64, r: f64) -> f64 {
+        (self.alpha_cacheutil * self.ability(batch, r) + self.beta_cacheutil).clamp(0.0, 1.0)
+    }
+
+    /// Predicted solo total scheduling delay (ms).
+    pub fn solo_sched_ms(&self) -> f64 {
+        self.k_sch * self.n_kernels
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("d_load_bytes", self.d_load_bytes)
+            .set("d_feedback_bytes", self.d_feedback_bytes)
+            .set("n_kernels", self.n_kernels)
+            .set("k_sch", self.k_sch)
+            .set(
+                "kact",
+                Json::obj()
+                    .set("k1", self.kact.k1)
+                    .set("k2", self.kact.k2)
+                    .set("k3", self.kact.k3)
+                    .set("k4", self.kact.k4)
+                    .set("k5", self.kact.k5)
+                    .set("rss", self.kact.rss),
+            )
+            .set("alpha_power", self.alpha_power)
+            .set("beta_power", self.beta_power)
+            .set("alpha_cacheutil", self.alpha_cacheutil)
+            .set("beta_cacheutil", self.beta_cacheutil)
+            .set("alpha_cache", self.alpha_cache)
+    }
+
+    pub fn from_json(j: &Json) -> Option<WorkloadCoeffs> {
+        let k = j.get("kact")?;
+        Some(WorkloadCoeffs {
+            name: j.get("name")?.as_str()?.to_string(),
+            d_load_bytes: j.get("d_load_bytes")?.as_f64()?,
+            d_feedback_bytes: j.get("d_feedback_bytes")?.as_f64()?,
+            n_kernels: j.get("n_kernels")?.as_f64()?,
+            k_sch: j.get("k_sch")?.as_f64()?,
+            kact: KactFit {
+                k1: k.get("k1")?.as_f64()?,
+                k2: k.get("k2")?.as_f64()?,
+                k3: k.get("k3")?.as_f64()?,
+                k4: k.get("k4")?.as_f64()?,
+                k5: k.get("k5")?.as_f64()?,
+                rss: k.get("rss").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            },
+            alpha_power: j.get("alpha_power")?.as_f64()?,
+            beta_power: j.get("beta_power")?.as_f64()?,
+            alpha_cacheutil: j.get("alpha_cacheutil")?.as_f64()?,
+            beta_cacheutil: j.get("beta_cacheutil")?.as_f64()?,
+            alpha_cache: j.get("alpha_cache")?.as_f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HardwareCoeffs {
+        HardwareCoeffs {
+            gpu: "V100".into(),
+            max_power_w: 300.0,
+            max_freq_mhz: 1530.0,
+            idle_power_w: 53.5,
+            pcie_gbps: 10.0,
+            alpha_f: -1.025,
+            alpha_sch: 0.00475,
+            beta_sch: -0.00902,
+            r_unit: 0.025,
+            r_max: 1.0,
+            unit_price: 3.06,
+        }
+    }
+
+    fn wl() -> WorkloadCoeffs {
+        WorkloadCoeffs {
+            name: "resnet50".into(),
+            d_load_bytes: 602_112.0,
+            d_feedback_bytes: 4_000.0,
+            n_kernels: 80.0,
+            k_sch: 0.0025,
+            kact: KactFit {
+                k1: 0.0004,
+                k2: 0.628,
+                k3: 0.45,
+                k4: 0.02,
+                k5: 0.10,
+                rss: 0.0,
+            },
+            alpha_power: 60.0,
+            beta_power: 35.0,
+            alpha_cacheutil: 0.12,
+            beta_cacheutil: 0.02,
+            alpha_cache: 0.9,
+        }
+    }
+
+    #[test]
+    fn hardware_json_roundtrip() {
+        let h = hw();
+        let j = h.to_json();
+        assert_eq!(HardwareCoeffs::from_json(&j).unwrap(), h);
+    }
+
+    #[test]
+    fn workload_json_roundtrip() {
+        let w = wl();
+        let j = w.to_json();
+        assert_eq!(WorkloadCoeffs::from_json(&j).unwrap(), w);
+    }
+
+    #[test]
+    fn delta_sch_and_frequency() {
+        let h = hw();
+        assert_eq!(h.delta_sch(1), 0.0);
+        assert!(h.delta_sch(4) > 0.0);
+        assert_eq!(h.frequency(200.0), 1530.0);
+        assert!(h.frequency(350.0) < 1530.0);
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let w = wl();
+        assert!(w.k_act(8.0, 0.3) > w.k_act(8.0, 0.9));
+        assert!(w.power_w(8.0, 0.5) > 0.0);
+        assert!((0.0..=1.0).contains(&w.cache_util(8.0, 0.5)));
+        assert!((w.solo_sched_ms() - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! Analytical DNN-inference performance model (Sec. 3): coefficient
+//! stores and the Eq. (1)-(11) predictor plus the Theorem-1 closed forms.
+
+pub mod coeffs;
+pub mod model;
+
+pub use coeffs::{HardwareCoeffs, WorkloadCoeffs};
+pub use model::{
+    appropriate_batch, lower_bound_resources, power_demand_w, predict, predict_solo,
+    rel_error, PlacedWorkload, Prediction,
+};

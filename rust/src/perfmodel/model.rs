@@ -1,0 +1,329 @@
+//! The analytical DNN-inference performance model (Sec. 3.1, Eqs. 1-11)
+//! plus the Theorem-1 closed forms (Eqs. 17-18).
+//!
+//! Everything here is *prediction* from profiled coefficients; the
+//! simulator's richer ground truth is never consulted.
+
+use super::coeffs::{HardwareCoeffs, WorkloadCoeffs};
+
+/// A workload as placed on a GPU: its coefficients + configuration.
+#[derive(Debug, Clone)]
+pub struct PlacedWorkload<'a> {
+    pub coeffs: &'a WorkloadCoeffs,
+    pub batch: f64,
+    pub resources: f64,
+}
+
+/// Predicted latency breakdown (ms) — mirrors `gpu::QueryLatency`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    pub t_load: f64,
+    pub t_sched: f64,
+    pub t_act: f64,
+    pub t_feedback: f64,
+    pub freq_mhz: f64,
+    pub t_gpu: f64,
+    pub t_inf: f64,
+    /// Predicted sustainable throughput (req/s, Eq. 2).
+    pub throughput_rps: f64,
+}
+
+/// Predicted total power demand of a device (Eq. 10).
+pub fn power_demand_w(hw: &HardwareCoeffs, placed: &[PlacedWorkload]) -> f64 {
+    hw.idle_power_w
+        + placed
+            .iter()
+            .map(|p| p.coeffs.power_w(p.batch, p.resources))
+            .sum::<f64>()
+}
+
+/// Which interference terms of the model are enabled — used by the
+/// ablation study (`experiments::ablation`) to quantify each mechanism's
+/// contribution to prediction accuracy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelTerms {
+    /// Eq. 6: increased kernel scheduling delay.
+    pub scheduler: bool,
+    /// Eq. 8: L2-cache-contention dilation.
+    pub cache: bool,
+    /// Eq. 9-10: power-cap frequency reduction.
+    pub power: bool,
+}
+
+impl ModelTerms {
+    pub const ALL: ModelTerms = ModelTerms {
+        scheduler: true,
+        cache: true,
+        power: true,
+    };
+    pub const NONE: ModelTerms = ModelTerms {
+        scheduler: false,
+        cache: false,
+        power: false,
+    };
+}
+
+/// Predict the inference latency of `placed[target]` under the co-location
+/// described by `placed` (Eqs. 1-11).
+pub fn predict(hw: &HardwareCoeffs, placed: &[PlacedWorkload], target: usize) -> Prediction {
+    predict_with(hw, placed, target, ModelTerms::ALL)
+}
+
+/// `predict` with selectable interference terms (ablation support).
+pub fn predict_with(
+    hw: &HardwareCoeffs,
+    placed: &[PlacedWorkload],
+    target: usize,
+    terms: ModelTerms,
+) -> Prediction {
+    let w = &placed[target];
+    let m = placed.len();
+
+    // Eq. 3: PCIe phases.
+    let t_load = hw.pcie_ms(w.coeffs.d_load_bytes * w.batch);
+    let t_feedback = hw.pcie_ms(w.coeffs.d_feedback_bytes * w.batch);
+
+    // Eq. 5 + 6: scheduling delay.
+    let delta = if terms.scheduler { hw.delta_sch(m) } else { 0.0 };
+    let t_sched = (w.coeffs.k_sch + delta) * w.coeffs.n_kernels;
+
+    // Eq. 8: active time dilated by co-runners' cache utilization.
+    let others_util: f64 = if terms.cache {
+        placed
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != target)
+            .map(|(_, p)| p.coeffs.cache_util(p.batch, p.resources))
+            .sum()
+    } else {
+        0.0
+    };
+    let t_act =
+        w.coeffs.k_act(w.batch, w.resources) * (1.0 + w.coeffs.alpha_cache * others_util);
+
+    // Eq. 9 + 10: frequency under total power demand.
+    let freq = if terms.power {
+        hw.frequency(power_demand_w(hw, placed))
+    } else {
+        hw.max_freq_mhz
+    };
+
+    // Eq. 4: GPU execution latency.
+    let t_gpu = (t_sched + t_act) / (freq / hw.max_freq_mhz);
+
+    // Eq. 1 + 2.
+    let t_inf = t_load + t_gpu + t_feedback;
+    let throughput_rps = w.batch / (t_gpu + t_feedback) * 1000.0;
+
+    Prediction {
+        t_load,
+        t_sched,
+        t_act,
+        t_feedback,
+        freq_mhz: freq,
+        t_gpu,
+        t_inf,
+        throughput_rps,
+    }
+}
+
+/// Predict a workload running **alone** on a GPU of this type.
+pub fn predict_solo(hw: &HardwareCoeffs, w: &WorkloadCoeffs, batch: f64, r: f64) -> Prediction {
+    let placed = [PlacedWorkload {
+        coeffs: w,
+        batch,
+        resources: r,
+    }];
+    predict(hw, &placed, 0)
+}
+
+/// Eq. 17: the appropriate batch size that just meets the arrival rate
+/// `rate_rps` under latency SLO `slo_ms`.
+pub fn appropriate_batch(hw: &HardwareCoeffs, w: &WorkloadCoeffs, slo_ms: f64, rate_rps: f64) -> u32 {
+    // Work in ms: rate (req/ms) = rate_rps / 1000; B_pcie in bytes/ms.
+    let rate = rate_rps / 1000.0;
+    let bw = hw.pcie_gbps * 1e6; // bytes per ms
+    let b = (slo_ms * rate * bw) / (2.0 * (bw + rate * w.d_load_bytes));
+    (b.ceil() as u32).max(1)
+}
+
+/// Eq. 18: lower bound of GPU resources for `(slo, rate)` with the
+/// appropriate batch size, quantized up to `r_unit`.  Returns `None` when
+/// the SLO is infeasible even at full resources (delta <= 0 or r > r_max).
+pub fn lower_bound_resources(
+    hw: &HardwareCoeffs,
+    w: &WorkloadCoeffs,
+    slo_ms: f64,
+    rate_rps: f64,
+) -> Option<(u32, f64)> {
+    let b = appropriate_batch(hw, w, slo_ms, rate_rps);
+    let bf = b as f64;
+    let gamma = w.kact.k1 * bf * bf + w.kact.k2 * bf + w.kact.k3;
+    let delta = slo_ms / 2.0
+        - (w.d_load_bytes + w.d_feedback_bytes) * bf / (hw.pcie_gbps * 1e6)
+        - w.kact.k5
+        - w.k_sch * w.n_kernels;
+    if delta <= 0.0 {
+        return None;
+    }
+    let r_raw = gamma / delta - w.kact.k4;
+    if r_raw > hw.r_max + 1e-9 {
+        return None;
+    }
+    let r = ((r_raw / hw.r_unit).ceil() * hw.r_unit).clamp(hw.r_unit, hw.r_max);
+    Some((b, r))
+}
+
+/// Relative prediction error |pred - obs| / obs.
+pub fn rel_error(pred: f64, obs: f64) -> f64 {
+    (pred - obs).abs() / obs.abs().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::lsq::KactFit;
+
+    fn hw() -> HardwareCoeffs {
+        HardwareCoeffs {
+            gpu: "V100".into(),
+            max_power_w: 300.0,
+            max_freq_mhz: 1530.0,
+            idle_power_w: 53.5,
+            pcie_gbps: 10.0,
+            alpha_f: -1.025,
+            alpha_sch: 0.00475,
+            beta_sch: -0.00902,
+            r_unit: 0.025,
+            r_max: 1.0,
+            unit_price: 3.06,
+        }
+    }
+
+    fn wl(name: &str, k2: f64, apow: f64, acu: f64) -> WorkloadCoeffs {
+        WorkloadCoeffs {
+            name: name.into(),
+            d_load_bytes: 602_112.0,
+            d_feedback_bytes: 4_000.0,
+            n_kernels: 80.0,
+            k_sch: 0.0025,
+            kact: KactFit {
+                k1: 0.0004,
+                k2,
+                k3: 0.45,
+                k4: 0.02,
+                k5: 0.10,
+                rss: 0.0,
+            },
+            alpha_power: apow,
+            beta_power: 35.0,
+            alpha_cacheutil: acu,
+            beta_cacheutil: 0.02,
+            alpha_cache: 0.9,
+        }
+    }
+
+    #[test]
+    fn solo_prediction_composes_eq1() {
+        let h = hw();
+        let w = wl("r", 0.628, 60.0, 0.12);
+        let p = predict_solo(&h, &w, 8.0, 0.3);
+        assert!((p.t_inf - (p.t_load + p.t_gpu + p.t_feedback)).abs() < 1e-12);
+        assert_eq!(p.freq_mhz, 1530.0); // solo never throttles
+        assert!((p.t_sched - 0.0025 * 80.0).abs() < 1e-12); // no Delta solo
+    }
+
+    #[test]
+    fn colocation_increases_prediction() {
+        let h = hw();
+        let w = wl("r", 0.628, 60.0, 0.12);
+        let solo = predict_solo(&h, &w, 8.0, 0.3).t_inf;
+        let placed: Vec<PlacedWorkload> = (0..4)
+            .map(|_| PlacedWorkload {
+                coeffs: &w,
+                batch: 8.0,
+                resources: 0.25,
+            })
+            .collect();
+        // same r for fairness
+        let mut placed2 = placed.clone();
+        placed2[0].resources = 0.3;
+        let co = predict(&h, &placed2, 0).t_inf;
+        assert!(co > solo, "{co} !> {solo}");
+    }
+
+    #[test]
+    fn throttling_prediction() {
+        let h = hw();
+        // power-hungry workloads exceed the 300 W cap when stacked
+        let w = wl("v", 1.797, 400.0, 0.4);
+        let placed: Vec<PlacedWorkload> = (0..5)
+            .map(|_| PlacedWorkload {
+                coeffs: &w,
+                batch: 16.0,
+                resources: 0.2,
+            })
+            .collect();
+        assert!(power_demand_w(&h, &placed) > 300.0);
+        let p = predict(&h, &placed, 0);
+        assert!(p.freq_mhz < 1530.0);
+    }
+
+    #[test]
+    fn eq17_batch_scales_with_rate_and_slo() {
+        let h = hw();
+        let w = wl("r", 0.628, 60.0, 0.12);
+        let b1 = appropriate_batch(&h, &w, 40.0, 100.0);
+        let b2 = appropriate_batch(&h, &w, 40.0, 400.0);
+        let b3 = appropriate_batch(&h, &w, 80.0, 400.0);
+        assert!(b1 <= b2 && b2 <= b3, "{b1} {b2} {b3}");
+        assert!(b1 >= 1);
+        // Table-1-like anchor: R @ 40 ms / 400 r/s -> b = 8-ish
+        assert!((4..=10).contains(&b2), "b2={b2}");
+    }
+
+    #[test]
+    fn eq18_lower_bound_properties() {
+        let h = hw();
+        let w = wl("r", 0.628, 60.0, 0.12);
+        let (b, r) = lower_bound_resources(&h, &w, 40.0, 400.0).unwrap();
+        // quantized to the grid
+        assert!((r / h.r_unit - (r / h.r_unit).round()).abs() < 1e-9);
+        // the bound must actually satisfy the half-SLO solo
+        let p = predict_solo(&h, &w, b as f64, r);
+        assert!(p.t_inf <= 40.0 / 2.0 + 1e-6, "t_inf={}", p.t_inf);
+        // and one unit less must violate it (tightness) unless at floor
+        if r > h.r_unit {
+            let p2 = predict_solo(&h, &w, b as f64, r - h.r_unit);
+            assert!(p2.t_inf > 40.0 / 2.0 - 1e-9, "bound not tight");
+        }
+        // tighter SLO needs at least as many resources
+        let (_, r_tight) = lower_bound_resources(&h, &w, 25.0, 400.0).unwrap();
+        assert!(r_tight >= r);
+    }
+
+    #[test]
+    fn eq18_infeasible_slo_is_none() {
+        let h = hw();
+        let w = wl("r", 0.628, 60.0, 0.12);
+        // sub-millisecond SLO cannot be met
+        assert!(lower_bound_resources(&h, &w, 0.5, 400.0).is_none());
+    }
+
+    #[test]
+    fn throughput_constraint_met_at_bound() {
+        // By Theorem 1 the chosen (b_appr, r_lower) must meet the rate.
+        let h = hw();
+        let w = wl("r", 0.628, 60.0, 0.12);
+        for rate in [100.0, 300.0, 600.0] {
+            if let Some((b, r)) = lower_bound_resources(&h, &w, 40.0, rate) {
+                let p = predict_solo(&h, &w, b as f64, r);
+                assert!(
+                    p.throughput_rps >= rate * 0.999,
+                    "rate={rate}: thpt {}",
+                    p.throughput_rps
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! FFD baselines (Sec. 5.1 / Fig. 19):
+//!
+//! * **FFD+**  — First-Fit-Decreasing bin packing that always allocates the
+//!   interference-*oblivious* lower bound `r_lower` (Eq. 18) and packs onto
+//!   the first GPU with room.  Cheapest plan, most SLO violations.
+//! * **FFD++** — FFD placement order, but each candidate device is sized
+//!   with iGniter's `alloc_gpus` (Alg. 2), i.e. interference-aware sizing
+//!   with first-fit (not min-interference) placement.
+
+use super::igniter::{alloc_gpus, derive_all};
+use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
+
+/// FFD+: interference-oblivious lower-bound packing.
+pub fn provision_ffd(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
+    let derived = derive_all(sys, specs);
+    let hw = &sys.hw;
+    let mut plan = Plan::new("FFD+", hw);
+
+    let mut order: Vec<usize> = (0..specs.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = derived[a].expect("infeasible workload").r_lower;
+        let rb = derived[b].expect("infeasible workload").r_lower;
+        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
+    });
+
+    for &w in &order {
+        let d = derived[w].unwrap();
+        let slot = plan
+            .gpus
+            .iter()
+            .position(|g| g.iter().map(|a| a.resources).sum::<f64>() + d.r_lower <= hw.r_max + 1e-9);
+        let alloc = Alloc {
+            workload: w,
+            resources: d.r_lower,
+            batch: d.batch,
+        };
+        match slot {
+            Some(g) => plan.gpus[g].push(alloc),
+            None => plan.gpus.push(vec![alloc]),
+        }
+    }
+    plan
+}
+
+/// FFD++: first-fit placement with Alg.-2 interference-aware sizing.
+pub fn provision_ffd_pp(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
+    let derived = derive_all(sys, specs);
+    let hw = &sys.hw;
+    let mut plan = Plan::new("FFD++", hw);
+
+    let mut order: Vec<usize> = (0..specs.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = derived[a].expect("infeasible workload").r_lower;
+        let rb = derived[b].expect("infeasible workload").r_lower;
+        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
+    });
+
+    for &w in &order {
+        let d = derived[w].unwrap();
+        let mut placed = false;
+        for g in 0..plan.gpus.len() {
+            if let Some(alloc) = alloc_gpus(sys, specs, &plan.gpus[g], w, d.r_lower, d.batch) {
+                plan.gpus[g] = alloc;
+                placed = true;
+                break; // first fit
+            }
+        }
+        if !placed {
+            plan.gpus.push(vec![Alloc {
+                workload: w,
+                resources: d.r_lower,
+                batch: d.batch,
+            }]);
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuKind;
+    use crate::provisioner::igniter;
+    use crate::workload::app_workloads;
+
+    fn sys() -> ProfiledSystem {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        ProfiledSystem {
+            hw,
+            coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+        }
+    }
+
+    #[test]
+    fn ffd_is_cheapest_but_violates() {
+        let s = sys();
+        let specs = app_workloads();
+        let ffd = provision_ffd(&s, &specs);
+        let ig = igniter::provision(&s, &specs);
+        ffd.validate(specs.len(), s.hw.r_max).unwrap();
+        // Fig. 14: FFD+ uses fewer (or equal) GPUs than iGniter...
+        assert!(ffd.num_gpus() <= ig.num_gpus());
+        // ...but its plan predicts SLO violations under interference.
+        let violations = igniter::predict_plan(&s, &specs, &ffd)
+            .iter()
+            .filter(|(w, t, _)| *t > specs[*w].slo_ms / 2.0 + 1e-9)
+            .count();
+        assert!(violations >= 3, "FFD+ predicted violations = {violations}");
+    }
+
+    #[test]
+    fn ffd_pp_meets_slos_with_first_fit() {
+        let s = sys();
+        let specs = app_workloads();
+        let p = provision_ffd_pp(&s, &specs);
+        p.validate(specs.len(), s.hw.r_max).unwrap();
+        for (w, t_inf, _) in igniter::predict_plan(&s, &specs, &p) {
+            assert!(
+                t_inf <= specs[w].slo_ms / 2.0 + 1e-6,
+                "{} violated under FFD++",
+                specs[w].name
+            );
+        }
+    }
+
+    #[test]
+    fn ffd_pp_never_cheaper_than_igniter() {
+        // iGniter's min-interference placement should never need more
+        // GPUs than first-fit with the same sizing rule.
+        let s = sys();
+        let specs = app_workloads();
+        let pp = provision_ffd_pp(&s, &specs);
+        let ig = igniter::provision(&s, &specs);
+        assert!(ig.num_gpus() <= pp.num_gpus());
+    }
+
+    #[test]
+    fn ffd_lower_bounds_exactly() {
+        let s = sys();
+        let specs = app_workloads();
+        let derived = derive_all(&s, &specs);
+        let p = provision_ffd(&s, &specs);
+        for (_, a) in p.all() {
+            assert_eq!(a.resources, derived[a.workload].unwrap().r_lower);
+        }
+    }
+}

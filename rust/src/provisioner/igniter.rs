@@ -1,0 +1,323 @@
+//! The iGniter provisioning strategy: Algorithm 1 (workload placement with
+//! minimum interference growth) and Algorithm 2 (`alloc_gpus`, iterative
+//! GPU resource reallocation until every resident workload meets half its
+//! SLO under the predicted interference).
+
+use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
+use crate::perfmodel::{self, PlacedWorkload};
+
+/// Per-workload derived quantities (Theorem 1).
+#[derive(Debug, Clone, Copy)]
+pub struct Derived {
+    pub batch: u32,
+    pub r_lower: f64,
+}
+
+/// Compute (b_appr, r_lower) for each workload; `None` entries are
+/// infeasible on this GPU type at full resources (heterogeneous clusters
+/// handle them by replication — see `heterogeneous.rs`).
+pub fn derive_all(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Vec<Option<Derived>> {
+    specs
+        .iter()
+        .map(|w| {
+            perfmodel::lower_bound_resources(&sys.hw, sys.coeffs_for(w.model), w.slo_ms, w.rate_rps)
+                .map(|(batch, r_lower)| Derived { batch, r_lower })
+        })
+        .collect()
+}
+
+/// Algorithm 2: place workload `w` (with lower bound `r_lower_w` and batch
+/// `batch_w`) onto the device currently holding `resident`, then reallocate
+/// until every workload on the device satisfies `t_inf <= T_slo / 2` or the
+/// device runs out of resources.
+///
+/// Returns the post-placement allocations (including `w` last) or `None`
+/// if the device cannot host the workload.
+pub fn alloc_gpus(
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+    resident: &[Alloc],
+    w: usize,
+    r_lower_w: f64,
+    batch_w: u32,
+) -> Option<Vec<Alloc>> {
+    let hw = &sys.hw;
+    let mut allocs: Vec<Alloc> = resident.to_vec();
+    allocs.push(Alloc {
+        workload: w,
+        resources: r_lower_w,
+        batch: batch_w,
+    });
+
+    let total = |a: &[Alloc]| -> f64 { a.iter().map(|x| x.resources).sum() };
+    if total(&allocs) > hw.r_max + 1e-9 {
+        return None;
+    }
+
+    // Iteratively grow SLO-violating workloads by r_unit (lines 2-11).
+    let mut flag = true;
+    while flag {
+        flag = false;
+        let placed: Vec<PlacedWorkload> = allocs
+            .iter()
+            .map(|a| PlacedWorkload {
+                coeffs: sys.coeffs_for(specs[a.workload].model),
+                batch: a.batch as f64,
+                resources: a.resources,
+            })
+            .collect();
+        let mut grow: Vec<usize> = Vec::new();
+        for (i, a) in allocs.iter().enumerate() {
+            let pred = perfmodel::predict(hw, &placed, i);
+            if pred.t_inf > specs[a.workload].slo_ms / 2.0 + 1e-9 {
+                grow.push(i);
+            }
+        }
+        for i in grow {
+            allocs[i].resources += hw.r_unit;
+            flag = true;
+        }
+        if total(&allocs) > hw.r_max + 1e-9 {
+            return None;
+        }
+    }
+    Some(allocs)
+}
+
+/// Algorithm 1: the iGniter cost-efficient provisioning strategy.
+///
+/// Workloads whose `derive` entry is `None` are skipped (the heterogeneous
+/// wrapper replicates them first); panics in the homogeneous API if any is
+/// infeasible so callers notice.
+pub fn provision(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
+    let derived = derive_all(sys, specs);
+    for (w, d) in derived.iter().enumerate() {
+        assert!(
+            d.is_some(),
+            "workload {} infeasible on {} at full resources",
+            specs[w].name,
+            sys.hw.gpu
+        );
+    }
+    provision_with_derived(sys, specs, &derived)
+}
+
+pub fn provision_with_derived(
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+    derived: &[Option<Derived>],
+) -> Plan {
+    let hw = &sys.hw;
+    let mut plan = Plan::new("iGniter", hw);
+    plan.gpus.push(Vec::new()); // g <- 1
+
+    // Sort by r_lower descending (line 3).
+    let mut order: Vec<usize> = (0..specs.len()).filter(|&w| derived[w].is_some()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = derived[a].unwrap().r_lower;
+        let rb = derived[b].unwrap().r_lower;
+        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
+    });
+
+    for &w in &order {
+        let d = derived[w].unwrap();
+        // Greedily find the GPU with minimum increased-interference
+        // resources (lines 5-12).
+        let mut best: Option<(usize, Vec<Alloc>, f64)> = None;
+        for g in 0..plan.gpus.len() {
+            if let Some(alloc) = alloc_gpus(sys, specs, &plan.gpus[g], w, d.r_lower, d.batch) {
+                // r_inter = sum of increases over current residents plus
+                // the new workload's growth above its own lower bound.
+                let mut r_inter = 0.0;
+                for a in &alloc {
+                    let before = plan.gpus[g]
+                        .iter()
+                        .find(|x| x.workload == a.workload)
+                        .map(|x| x.resources)
+                        .unwrap_or(if a.workload == w { d.r_lower } else { 0.0 });
+                    r_inter += a.resources - before;
+                }
+                let better = match &best {
+                    None => true,
+                    Some((_, _, b)) => r_inter < *b - 1e-12,
+                };
+                if better {
+                    best = Some((g, alloc, r_inter));
+                }
+            }
+        }
+        match best {
+            Some((g, alloc, _)) => plan.gpus[g] = alloc,
+            None => {
+                // Provision a new GPU (lines 13-15) and place at r_lower.
+                plan.gpus.push(vec![Alloc {
+                    workload: w,
+                    resources: d.r_lower,
+                    batch: d.batch,
+                }]);
+            }
+        }
+    }
+    plan
+}
+
+/// Predict the latency/throughput of every placed workload of a plan.
+/// Returns (workload, predicted t_inf ms, predicted throughput req/s).
+pub fn predict_plan(
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+    plan: &Plan,
+) -> Vec<(usize, f64, f64)> {
+    let mut out = Vec::new();
+    for g in 0..plan.gpus.len() {
+        let placed: Vec<PlacedWorkload> = plan.gpus[g]
+            .iter()
+            .map(|a| PlacedWorkload {
+                coeffs: sys.coeffs_for(specs[a.workload].model),
+                batch: a.batch as f64,
+                resources: a.resources,
+            })
+            .collect();
+        for (i, a) in plan.gpus[g].iter().enumerate() {
+            let p = perfmodel::predict(&sys.hw, &placed, i);
+            out.push((a.workload, p.t_inf, p.throughput_rps));
+        }
+    }
+    out.sort_by_key(|x| x.0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{GpuKind, Model};
+    use crate::profiler;
+
+    fn sys() -> ProfiledSystem {
+        let (hw, wls) = profiler::profile_all(GpuKind::V100, 42);
+        ProfiledSystem {
+            hw,
+            coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+        }
+    }
+
+    fn table1_specs() -> Vec<WorkloadSpec> {
+        vec![
+            WorkloadSpec::new(0, Model::AlexNet, 15.0, 500.0),
+            WorkloadSpec::new(1, Model::ResNet50, 40.0, 400.0),
+            WorkloadSpec::new(2, Model::Vgg19, 60.0, 200.0),
+        ]
+    }
+
+    #[test]
+    fn table1_fits_one_gpu() {
+        // Table 1: iGniter fits A+R+V on a single V100 with SLOs met.
+        let s = sys();
+        let specs = table1_specs();
+        let plan = provision(&s, &specs);
+        assert_eq!(plan.num_gpus(), 1, "{plan:?}");
+        plan.validate(3, s.hw.r_max).unwrap();
+        for (w, t_inf, thpt) in predict_plan(&s, &specs, &plan) {
+            assert!(
+                t_inf <= specs[w].slo_ms / 2.0 + 1e-6,
+                "{}: {t_inf:.2} > {}",
+                specs[w].name,
+                specs[w].slo_ms / 2.0
+            );
+            assert!(thpt >= specs[w].rate_rps * 0.999);
+        }
+    }
+
+    #[test]
+    fn table1_batches_match_paper() {
+        // Paper Table 1: iGniter plan A(10%, 4), R(30%, 8), V(37.5%, 6).
+        let s = sys();
+        let specs = table1_specs();
+        let d = derive_all(&s, &specs);
+        let (ba, br, bv) = (
+            d[0].unwrap().batch,
+            d[1].unwrap().batch,
+            d[2].unwrap().batch,
+        );
+        assert!((3..=5).contains(&ba), "A batch {ba}");
+        assert!((7..=9).contains(&br), "R batch {br}");
+        assert!((5..=7).contains(&bv), "V batch {bv}");
+    }
+
+    #[test]
+    fn alloc_gpus_grows_resident_under_interference() {
+        // Placing a noisy neighbour must grow the resident allocation
+        // relative to its lower bound when its SLO becomes tight.
+        let s = sys();
+        let specs = vec![
+            WorkloadSpec::new(0, Model::ResNet50, 22.0, 400.0),
+            WorkloadSpec::new(1, Model::Vgg19, 60.0, 200.0),
+        ];
+        let d = derive_all(&s, &specs);
+        let d0 = d[0].unwrap();
+        let d1 = d[1].unwrap();
+        let resident = vec![Alloc {
+            workload: 0,
+            resources: d0.r_lower,
+            batch: d0.batch,
+        }];
+        let alloc = alloc_gpus(&s, &specs, &resident, 1, d1.r_lower, d1.batch).unwrap();
+        let r0_after = alloc.iter().find(|a| a.workload == 0).unwrap().resources;
+        assert!(
+            r0_after >= d0.r_lower,
+            "resident shrunk: {r0_after} < {}",
+            d0.r_lower
+        );
+        // the total must stay within the device
+        let total: f64 = alloc.iter().map(|a| a.resources).sum();
+        assert!(total <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn alloc_gpus_refuses_overflow() {
+        let s = sys();
+        let specs = vec![
+            WorkloadSpec::new(0, Model::Ssd, 25.0, 300.0),
+            WorkloadSpec::new(1, Model::Ssd, 25.0, 300.0),
+        ];
+        let d = derive_all(&s, &specs);
+        let d0 = d[0].unwrap();
+        // two heavy SSDs at ~full demand cannot share one device
+        let resident = vec![Alloc {
+            workload: 0,
+            resources: d0.r_lower,
+            batch: d0.batch,
+        }];
+        assert!(alloc_gpus(&s, &specs, &resident, 1, d[1].unwrap().r_lower, d[1].unwrap().batch)
+            .is_none());
+    }
+
+    #[test]
+    fn all_slos_met_for_12_workloads() {
+        let s = sys();
+        let specs = crate::workload::app_workloads();
+        let plan = provision(&s, &specs);
+        plan.validate(specs.len(), s.hw.r_max).unwrap();
+        for (w, t_inf, thpt) in predict_plan(&s, &specs, &plan) {
+            assert!(
+                t_inf <= specs[w].slo_ms / 2.0 + 1e-6,
+                "{} violated: {t_inf:.2}",
+                specs[w].name
+            );
+            assert!(thpt >= specs[w].rate_rps * 0.999, "{} thpt", specs[w].name);
+        }
+        // paper scale: 6 V100s for the 12 workloads
+        assert!(
+            (4..=8).contains(&plan.num_gpus()),
+            "GPUs = {}",
+            plan.num_gpus()
+        );
+    }
+
+    #[test]
+    fn determinism() {
+        let s = sys();
+        let specs = crate::workload::app_workloads();
+        assert_eq!(provision(&s, &specs), provision(&s, &specs));
+    }
+}

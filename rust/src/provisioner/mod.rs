@@ -1,0 +1,14 @@
+//! GPU resource provisioning strategies: the paper's iGniter (Alg. 1 + 2)
+//! and the Sec.-5.1 baselines (FFD+, FFD++, GSLICE+, gpu-lets+), plus the
+//! heterogeneous-cluster extension.
+
+pub mod ffd;
+pub mod gpulets;
+pub mod gslice;
+pub mod heterogeneous;
+pub mod igniter;
+pub mod online;
+pub mod types;
+
+pub use igniter::{alloc_gpus, derive_all, predict_plan, provision, Derived};
+pub use types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};

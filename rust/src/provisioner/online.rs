@@ -1,0 +1,302 @@
+//! Online (incremental) provisioning: "iGniter is periodically executed to
+//! provision GPU resources for newly-arrived inference workloads"
+//! (Sec. 4.2).  Instead of re-packing the whole cluster, an `OnlinePlanner`
+//! mutates the live plan: arrivals go to the min-interference device
+//! (Alg. 1's inner step, which may also grow residents per Alg. 2),
+//! departures free their partition, and `rebalance` compares against a
+//! from-scratch Alg.-1 plan to decide whether a full re-pack would save
+//! instances (the paper's periodic execution).
+
+use super::igniter::{alloc_gpus, derive_all, provision_with_derived};
+use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
+use anyhow::{anyhow, Result};
+
+/// A live, mutable provisioning state.
+#[derive(Debug, Clone)]
+pub struct OnlinePlanner {
+    sys: ProfiledSystem,
+    specs: Vec<WorkloadSpec>,
+    plan: Plan,
+    /// workloads currently active (by spec index)
+    active: Vec<bool>,
+}
+
+/// Outcome of an arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Placed {
+    /// Placed on an existing device (index), possibly growing residents.
+    Existing(usize),
+    /// A new device was provisioned (index).
+    NewGpu(usize),
+}
+
+impl OnlinePlanner {
+    /// Start with an empty cluster.
+    pub fn new(sys: ProfiledSystem) -> OnlinePlanner {
+        let plan = Plan::new("iGniter-online", &sys.hw);
+        OnlinePlanner {
+            sys,
+            specs: Vec::new(),
+            plan,
+            active: Vec::new(),
+        }
+    }
+
+    /// Start from an existing offline plan.
+    pub fn from_plan(sys: ProfiledSystem, specs: Vec<WorkloadSpec>, plan: Plan) -> OnlinePlanner {
+        let active = vec![true; specs.len()];
+        OnlinePlanner {
+            sys,
+            specs,
+            plan,
+            active,
+        }
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    pub fn specs(&self) -> &[WorkloadSpec] {
+        &self.specs
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Devices currently holding at least one workload.
+    pub fn occupied_gpus(&self) -> usize {
+        self.plan.gpus.iter().filter(|g| !g.is_empty()).count()
+    }
+
+    /// Hourly cost of the *occupied* devices (empty ones are released).
+    pub fn cost_per_hour(&self) -> f64 {
+        self.occupied_gpus() as f64 * self.sys.hw.unit_price
+    }
+
+    /// Handle a newly-arrived workload: place on the device with the
+    /// minimum interference-induced resource growth; provision a new
+    /// device if none fits.  Returns the workload's id and where it went.
+    pub fn add(&mut self, mut spec: WorkloadSpec) -> Result<(usize, Placed)> {
+        let id = self.specs.len();
+        spec.id = id;
+        let derived = derive_all(&self.sys, std::slice::from_ref(&spec))[0]
+            .ok_or_else(|| anyhow!("{} infeasible on {}", spec.name, self.sys.hw.gpu))?;
+        self.specs.push(spec);
+        self.active.push(true);
+
+        // Greedy min-interference placement over live devices (Alg. 1 inner
+        // loop against the current allocations).
+        let mut best: Option<(usize, Vec<Alloc>, f64)> = None;
+        for g in 0..self.plan.gpus.len() {
+            if let Some(alloc) = alloc_gpus(
+                &self.sys,
+                &self.specs,
+                &self.plan.gpus[g],
+                id,
+                derived.r_lower,
+                derived.batch,
+            ) {
+                let mut r_inter = 0.0;
+                for a in &alloc {
+                    let before = self.plan.gpus[g]
+                        .iter()
+                        .find(|x| x.workload == a.workload)
+                        .map(|x| x.resources)
+                        .unwrap_or(if a.workload == id { derived.r_lower } else { 0.0 });
+                    r_inter += a.resources - before;
+                }
+                if best.as_ref().map_or(true, |(_, _, b)| r_inter < *b - 1e-12) {
+                    best = Some((g, alloc, r_inter));
+                }
+            }
+        }
+        Ok(match best {
+            Some((g, alloc, _)) => {
+                self.plan.gpus[g] = alloc;
+                (id, Placed::Existing(g))
+            }
+            None => {
+                self.plan.gpus.push(vec![Alloc {
+                    workload: id,
+                    resources: derived.r_lower,
+                    batch: derived.batch,
+                }]);
+                (id, Placed::NewGpu(self.plan.gpus.len() - 1))
+            }
+        })
+    }
+
+    /// Handle a departed workload: free its partition.  Co-residents keep
+    /// their (now generous) allocations until the next `rebalance`.
+    pub fn remove(&mut self, id: usize) -> Result<()> {
+        if id >= self.specs.len() || !self.active[id] {
+            return Err(anyhow!("workload {id} not active"));
+        }
+        self.active[id] = false;
+        for g in &mut self.plan.gpus {
+            g.retain(|a| a.workload != id);
+        }
+        Ok(())
+    }
+
+    /// Periodic re-pack: run Alg. 1 from scratch on the active set and
+    /// adopt the new plan if it occupies fewer devices.  Returns the new
+    /// occupied-GPU count if adopted.
+    pub fn rebalance(&mut self) -> Option<usize> {
+        let live: Vec<WorkloadSpec> = self
+            .specs
+            .iter()
+            .filter(|s| self.active[s.id])
+            .cloned()
+            .collect();
+        if live.is_empty() {
+            self.plan.gpus.clear();
+            return Some(0);
+        }
+        // Re-index into a dense spec set for the offline pass.
+        let mut dense = live.clone();
+        for (i, s) in dense.iter_mut().enumerate() {
+            s.id = i;
+        }
+        let derived = derive_all(&self.sys, &dense);
+        if derived.iter().any(|d| d.is_none()) {
+            return None;
+        }
+        let fresh = provision_with_derived(&self.sys, &dense, &derived);
+        if fresh.num_gpus() < self.occupied_gpus() {
+            // translate back to original ids
+            let mut gpus = Vec::new();
+            for g in &fresh.gpus {
+                gpus.push(
+                    g.iter()
+                        .map(|a| Alloc {
+                            workload: live[a.workload].id,
+                            resources: a.resources,
+                            batch: a.batch,
+                        })
+                        .collect(),
+                );
+            }
+            self.plan.gpus = gpus;
+            Some(self.occupied_gpus())
+        } else {
+            None
+        }
+    }
+
+    /// Predicted (t_inf, throughput) of one active workload.
+    pub fn predict(&self, id: usize) -> Option<(f64, f64)> {
+        let (g, _) = self.plan.find(id)?;
+        let placed: Vec<crate::perfmodel::PlacedWorkload> = self.plan.gpus[g]
+            .iter()
+            .map(|a| crate::perfmodel::PlacedWorkload {
+                coeffs: self.sys.coeffs_for(self.specs[a.workload].model),
+                batch: a.batch as f64,
+                resources: a.resources,
+            })
+            .collect();
+        let idx = self.plan.gpus[g].iter().position(|a| a.workload == id)?;
+        let p = crate::perfmodel::predict(&self.sys.hw, &placed, idx);
+        Some((p.t_inf, p.throughput_rps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{GpuKind, Model};
+    use crate::workload::app_workloads;
+
+    fn sys() -> ProfiledSystem {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        ProfiledSystem {
+            hw,
+            coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+        }
+    }
+
+    #[test]
+    fn incremental_arrivals_meet_slos() {
+        let mut op = OnlinePlanner::new(sys());
+        for spec in app_workloads() {
+            let (id, _) = op.add(WorkloadSpec::new(0, spec.model, spec.slo_ms, spec.rate_rps)).unwrap();
+            // every active workload must still meet its half-SLO
+            let _ = id;
+            for w in 0..op.specs().len() {
+                let (t_inf, thpt) = op.predict(w).unwrap();
+                assert!(
+                    t_inf <= op.specs()[w].slo_ms / 2.0 + 1e-6,
+                    "{} violated after arrival",
+                    op.specs()[w].name
+                );
+                assert!(thpt >= op.specs()[w].rate_rps * 0.999);
+            }
+        }
+        // online placement is near the offline plan (within +2 GPUs)
+        assert!(
+            (6..=8).contains(&op.occupied_gpus()),
+            "online GPUs = {}",
+            op.occupied_gpus()
+        );
+    }
+
+    #[test]
+    fn departures_free_capacity_and_rebalance_compacts() {
+        let mut op = OnlinePlanner::new(sys());
+        let mut ids = Vec::new();
+        for spec in app_workloads() {
+            ids.push(op.add(WorkloadSpec::new(0, spec.model, spec.slo_ms, spec.rate_rps)).unwrap().0);
+        }
+        let before = op.occupied_gpus();
+        // remove the eight heaviest (every non-AlexNet workload)
+        for (i, spec) in app_workloads().iter().enumerate() {
+            if spec.model != Model::AlexNet {
+                op.remove(ids[i]).unwrap();
+            }
+        }
+        assert_eq!(op.active_count(), 3);
+        let rebalanced = op.rebalance();
+        assert!(rebalanced.is_some(), "rebalance should compact");
+        assert!(op.occupied_gpus() < before);
+        // the three AlexNets easily share one device
+        assert_eq!(op.occupied_gpus(), 1, "{:?}", op.plan());
+        // SLOs still hold after compaction
+        for s in op.specs().iter().filter(|s| s.model == Model::AlexNet) {
+            let (t_inf, _) = op.predict(s.id).unwrap();
+            assert!(t_inf <= s.slo_ms / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn remove_errors() {
+        let mut op = OnlinePlanner::new(sys());
+        assert!(op.remove(0).is_err());
+        let (id, _) = op.add(WorkloadSpec::new(0, Model::AlexNet, 15.0, 100.0)).unwrap();
+        op.remove(id).unwrap();
+        assert!(op.remove(id).is_err(), "double remove");
+    }
+
+    #[test]
+    fn from_plan_matches_offline() {
+        let s = sys();
+        let specs = app_workloads();
+        let plan = crate::provisioner::provision(&s, &specs);
+        let op = OnlinePlanner::from_plan(s, specs.clone(), plan.clone());
+        assert_eq!(op.occupied_gpus(), plan.num_gpus());
+        assert_eq!(op.active_count(), 12);
+        for w in 0..12 {
+            assert!(op.predict(w).is_some());
+        }
+    }
+
+    #[test]
+    fn infeasible_arrival_rejected_cleanly() {
+        let mut op = OnlinePlanner::new(sys());
+        let before = op.specs().len();
+        // sub-millisecond SLO is impossible
+        assert!(op.add(WorkloadSpec::new(0, Model::Ssd, 0.5, 10.0)).is_err());
+        assert_eq!(op.specs().len(), before, "failed arrival must not leak");
+    }
+}

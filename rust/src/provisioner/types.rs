@@ -1,0 +1,269 @@
+//! Shared types of the GPU resource provisioning layer: workload SLO
+//! specifications, per-GPU allocations, and complete provisioning plans.
+
+use crate::gpu::Model;
+use crate::perfmodel::{HardwareCoeffs, PlacedWorkload, WorkloadCoeffs};
+use crate::util::json::Json;
+
+/// A DNN inference workload with its performance SLO (input to Alg. 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Stable id (index into the submitted set; `W1..W12` in the paper).
+    pub id: usize,
+    /// Display name, e.g. "W4(resnet50)".
+    pub name: String,
+    pub model: Model,
+    /// Latency SLO T_slo (ms).
+    pub slo_ms: f64,
+    /// Request arrival rate R (req/s).
+    pub rate_rps: f64,
+}
+
+impl WorkloadSpec {
+    pub fn new(id: usize, model: Model, slo_ms: f64, rate_rps: f64) -> WorkloadSpec {
+        WorkloadSpec {
+            id,
+            name: format!("W{}({})", id + 1, model.name()),
+            model,
+            slo_ms,
+            rate_rps,
+        }
+    }
+}
+
+/// One workload's allocation on a specific GPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Alloc {
+    pub workload: usize,
+    /// Fraction of the device (MPS active-thread percentage).
+    pub resources: f64,
+    /// Configured batch size.
+    pub batch: u32,
+}
+
+/// A complete provisioning plan over a homogeneous GPU pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// Strategy that produced the plan (for reporting).
+    pub strategy: String,
+    /// GPU type label.
+    pub gpu: String,
+    /// Hourly price per GPU instance.
+    pub unit_price: f64,
+    /// Allocations per GPU device (index = device id).
+    pub gpus: Vec<Vec<Alloc>>,
+}
+
+impl Plan {
+    pub fn new(strategy: &str, hw: &HardwareCoeffs) -> Plan {
+        Plan {
+            strategy: strategy.to_string(),
+            gpu: hw.gpu.clone(),
+            unit_price: hw.unit_price,
+            gpus: Vec::new(),
+        }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Hourly monetary cost C (Eq. 12): #instances x unit price.
+    pub fn cost_per_hour(&self) -> f64 {
+        self.num_gpus() as f64 * self.unit_price
+    }
+
+    /// Sum of allocated resources on one device.
+    pub fn allocated(&self, gpu: usize) -> f64 {
+        self.gpus[gpu].iter().map(|a| a.resources).sum()
+    }
+
+    /// Find a workload's (gpu, alloc).
+    pub fn find(&self, workload: usize) -> Option<(usize, Alloc)> {
+        for (g, allocs) in self.gpus.iter().enumerate() {
+            if let Some(a) = allocs.iter().find(|a| a.workload == workload) {
+                return Some((g, *a));
+            }
+        }
+        None
+    }
+
+    /// All allocations as (gpu, alloc) pairs.
+    pub fn all(&self) -> impl Iterator<Item = (usize, &Alloc)> {
+        self.gpus
+            .iter()
+            .enumerate()
+            .flat_map(|(g, v)| v.iter().map(move |a| (g, a)))
+    }
+
+    /// Structural invariants: every workload placed exactly once
+    /// (Constraint 16) and no device over-allocated (Constraint 15).
+    pub fn validate(&self, n_workloads: usize, r_max: f64) -> Result<(), String> {
+        let mut seen = vec![0usize; n_workloads];
+        for (g, allocs) in self.gpus.iter().enumerate() {
+            let total: f64 = allocs.iter().map(|a| a.resources).sum();
+            if total > r_max + 1e-6 {
+                return Err(format!("gpu {g} over-allocated: {total:.3}"));
+            }
+            for a in allocs {
+                if a.workload >= n_workloads {
+                    return Err(format!("gpu {g}: unknown workload {}", a.workload));
+                }
+                if a.resources <= 0.0 {
+                    return Err(format!("gpu {g}: w{} has no resources", a.workload));
+                }
+                if a.batch == 0 {
+                    return Err(format!("gpu {g}: w{} has batch 0", a.workload));
+                }
+                seen[a.workload] += 1;
+            }
+        }
+        for (w, &n) in seen.iter().enumerate() {
+            if n == 0 {
+                return Err(format!("workload {w} unplaced"));
+            }
+            // replicated placement (heterogeneous extension) is allowed,
+            // but the common case is exactly once
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let gpus: Vec<Json> = self
+            .gpus
+            .iter()
+            .map(|allocs| {
+                Json::Arr(
+                    allocs
+                        .iter()
+                        .map(|a| {
+                            Json::obj()
+                                .set("workload", a.workload)
+                                .set("resources", a.resources)
+                                .set("batch", a.batch as usize)
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj()
+            .set("strategy", self.strategy.as_str())
+            .set("gpu", self.gpu.as_str())
+            .set("unit_price", self.unit_price)
+            .set("cost_per_hour", self.cost_per_hour())
+            .set("gpus", Json::Arr(gpus))
+    }
+}
+
+/// Bundle of profiled knowledge the strategies work from.
+#[derive(Debug, Clone)]
+pub struct ProfiledSystem {
+    pub hw: HardwareCoeffs,
+    /// Coefficients indexed by zoo model.
+    pub coeffs: Vec<(Model, WorkloadCoeffs)>,
+}
+
+impl ProfiledSystem {
+    pub fn coeffs_for(&self, model: Model) -> &WorkloadCoeffs {
+        &self
+            .coeffs
+            .iter()
+            .find(|(m, _)| *m == model)
+            .expect("model not profiled")
+            .1
+    }
+
+    /// Build the `PlacedWorkload` view of one device of a plan.
+    pub fn placed_view<'a>(
+        &'a self,
+        plan: &Plan,
+        specs: &[WorkloadSpec],
+        gpu: usize,
+    ) -> Vec<(usize, PlacedWorkload<'a>)> {
+        plan.gpus[gpu]
+            .iter()
+            .map(|a| {
+                (
+                    a.workload,
+                    PlacedWorkload {
+                        coeffs: self.coeffs_for(specs[a.workload].model),
+                        batch: a.batch as f64,
+                        resources: a.resources,
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> Plan {
+        Plan {
+            strategy: "test".into(),
+            gpu: "V100".into(),
+            unit_price: 3.06,
+            gpus: vec![
+                vec![
+                    Alloc {
+                        workload: 0,
+                        resources: 0.4,
+                        batch: 4,
+                    },
+                    Alloc {
+                        workload: 1,
+                        resources: 0.5,
+                        batch: 8,
+                    },
+                ],
+                vec![Alloc {
+                    workload: 2,
+                    resources: 0.9,
+                    batch: 2,
+                }],
+            ],
+        }
+    }
+
+    #[test]
+    fn cost_and_lookup() {
+        let p = plan();
+        assert_eq!(p.num_gpus(), 2);
+        assert!((p.cost_per_hour() - 6.12).abs() < 1e-9);
+        assert_eq!(p.find(1).unwrap().0, 0);
+        assert_eq!(p.find(2).unwrap().0, 1);
+        assert!(p.find(9).is_none());
+        assert!((p.allocated(0) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(plan().validate(3, 1.0).is_ok());
+    }
+
+    #[test]
+    fn validate_catches_overallocation() {
+        let mut p = plan();
+        p.gpus[0].push(Alloc {
+            workload: 2,
+            resources: 0.2,
+            batch: 1,
+        });
+        assert!(p.validate(3, 1.0).unwrap_err().contains("over-allocated"));
+    }
+
+    #[test]
+    fn validate_catches_unplaced() {
+        let p = plan();
+        assert!(p.validate(4, 1.0).unwrap_err().contains("unplaced"));
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = plan().to_json();
+        assert_eq!(j.get("strategy").unwrap().as_str(), Some("test"));
+        assert_eq!(j.path("gpus.0.1.batch").unwrap().as_usize(), Some(8));
+    }
+}

@@ -1,0 +1,231 @@
+//! PJRT execution engine: loads `artifacts/*.hlo.txt`, compiles each
+//! (model, batch) variant once on the CPU PJRT client, and executes them
+//! from the Layer-3 serving hot path.  Python is never involved here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
+//! (text parser reassigns the 64-bit ids jax >= 0.5 emits) ->
+//! XlaComputation -> PjRtLoadedExecutable.
+
+use super::manifest::{Golden, Manifest, ModelArtifact, Variant};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+use std::time::Instant;
+
+/// A compiled (model, batch) executable plus its I/O signature.
+pub struct LoadedVariant {
+    pub model: String,
+    pub variant: Variant,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative wall-clock statistics (real CPU compute, reported
+    /// separately from the simulator's virtual-time numbers)
+    pub exec_count: std::cell::Cell<u64>,
+    pub exec_secs: std::cell::Cell<f64>,
+}
+
+impl LoadedVariant {
+    /// Execute on a full input buffer of exactly `input_len()` f32 elements.
+    pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let want = self.variant.input_len();
+        if input.len() != want {
+            bail!(
+                "{}/b{}: input has {} elems, executable wants {want}",
+                self.model,
+                self.variant.batch,
+                input.len()
+            );
+        }
+        let t0 = Instant::now();
+        let dims: Vec<i64> = self.variant.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<f32>().context("reading result values")?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        self.exec_secs
+            .set(self.exec_secs.get() + t0.elapsed().as_secs_f64());
+        Ok(values)
+    }
+
+    /// Execute `n <= batch` requests, padding the tail of the batch with
+    /// zeros and truncating the output back to `n` requests.
+    pub fn execute_padded(&self, input: &[f32], n: usize) -> Result<Vec<f32>> {
+        let b = self.variant.batch;
+        if n == 0 || n > b {
+            bail!("{}/b{b}: cannot run {n} requests", self.model);
+        }
+        let per_in = self.variant.input_len() / b;
+        if input.len() != n * per_in {
+            bail!(
+                "{}/b{b}: {n} requests need {} elems, got {}",
+                self.model,
+                n * per_in,
+                input.len()
+            );
+        }
+        let mut full = vec![0f32; self.variant.input_len()];
+        full[..input.len()].copy_from_slice(input);
+        let out = self.execute(&full)?;
+        let per_out = self.variant.output_len() / b;
+        Ok(out[..n * per_out].to_vec())
+    }
+
+    pub fn mean_exec_secs(&self) -> f64 {
+        let n = self.exec_count.get();
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.exec_secs.get() / n as f64
+        }
+    }
+}
+
+/// The engine owns the PJRT client and all compiled variants.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    variants: HashMap<(String, usize), LoadedVariant>,
+    pub compile_secs: f64,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client without loading anything.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            variants: HashMap::new(),
+            compile_secs: 0.0,
+        })
+    }
+
+    /// Load and compile every variant in the manifest (or a model subset).
+    pub fn load_all(&mut self, only_models: Option<&[&str]>) -> Result<()> {
+        let models: Vec<ModelArtifact> = self
+            .manifest
+            .models
+            .iter()
+            .filter(|m| only_models.map_or(true, |set| set.contains(&m.name.as_str())))
+            .cloned()
+            .collect();
+        for m in &models {
+            for v in &m.variants {
+                self.load_variant(&m.name, v.batch)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load and compile a single (model, batch) variant; idempotent.
+    pub fn load_variant(&mut self, model: &str, batch: usize) -> Result<()> {
+        let key = (model.to_string(), batch);
+        if self.variants.contains_key(&key) {
+            return Ok(());
+        }
+        let art = self
+            .manifest
+            .model(model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?;
+        let variant = art
+            .variants
+            .iter()
+            .find(|v| v.batch == batch)
+            .ok_or_else(|| anyhow!("model {model} has no batch-{batch} variant"))?
+            .clone();
+        let path = self.manifest.dir.join(&variant.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", variant.file))?;
+        self.compile_secs += t0.elapsed().as_secs_f64();
+        self.variants.insert(
+            key,
+            LoadedVariant {
+                model: model.to_string(),
+                variant,
+                exe,
+                exec_count: std::cell::Cell::new(0),
+                exec_secs: std::cell::Cell::new(0.0),
+            },
+        );
+        Ok(())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn variant(&self, model: &str, batch: usize) -> Option<&LoadedVariant> {
+        self.variants.get(&(model.to_string(), batch))
+    }
+
+    /// The loaded variant the dynamic batcher should use for `n` queued
+    /// requests: smallest loaded batch >= n, else largest loaded.
+    pub fn variant_for(&self, model: &str, n: usize) -> Option<&LoadedVariant> {
+        let mut cands: Vec<&LoadedVariant> = self
+            .variants
+            .values()
+            .filter(|v| v.model == model)
+            .collect();
+        cands.sort_by_key(|v| v.variant.batch);
+        cands
+            .iter()
+            .find(|v| v.variant.batch >= n)
+            .copied()
+            .or_else(|| cands.last().copied())
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.variants.len()
+    }
+
+    /// Verify a model's numerics against its Python-produced golden pair.
+    /// Returns the max absolute element error.
+    pub fn verify_golden(&mut self, model: &str, tol: f32) -> Result<f32> {
+        let art = self
+            .manifest
+            .model(model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?
+            .clone();
+        let gfile = art
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow!("model {model} has no golden file"))?;
+        let golden = Golden::load(&self.manifest.dir, gfile)?;
+        self.load_variant(model, golden.batch)?;
+        let v = self.variant(model, golden.batch).unwrap();
+        let out = v.execute(&golden.input)?;
+        if out.len() != golden.output.len() {
+            bail!(
+                "{model}: output len {} != golden {}",
+                out.len(),
+                golden.output.len()
+            );
+        }
+        let mut max_err = 0f32;
+        for (a, b) in out.iter().zip(golden.output.iter()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        if max_err > tol {
+            bail!("{model}: golden mismatch, max |err| = {max_err} > tol {tol}");
+        }
+        Ok(max_err)
+    }
+}

@@ -1,0 +1,241 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the Rust runtime (which loads it).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled (model, batch) HLO variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub batch: usize,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+impl Variant {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// One zoo model with its batch-size ladder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub input_hwc: [usize; 3],
+    pub param_count: usize,
+    pub variants: Vec<Variant>,
+    pub golden: Option<String>,
+}
+
+impl ModelArtifact {
+    /// Smallest compiled batch >= `n` (the batcher pads up to it), falling
+    /// back to the largest variant when `n` exceeds the ladder.
+    pub fn variant_for(&self, n: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.batch >= n)
+            .min_by_key(|v| v.batch)
+            .or_else(|| self.variants.iter().max_by_key(|v| v.batch))
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.variants.iter().map(|v| v.batch).max().unwrap_or(0)
+    }
+
+    /// Per-request input element count (batch dimension stripped).
+    pub fn input_elems_per_request(&self) -> usize {
+        self.input_hwc.iter().product()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelArtifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        if j.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            bail!("manifest format is not 'hlo-text'");
+        }
+        let mut models = Vec::new();
+        for m in j
+            .get("models")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'models'"))?
+        {
+            let name = m
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("model missing 'name'"))?
+                .to_string();
+            let hwc = m
+                .get("input_hwc")
+                .and_then(|v| v.usizes())
+                .ok_or_else(|| anyhow!("model {name}: bad input_hwc"))?;
+            if hwc.len() != 3 {
+                bail!("model {name}: input_hwc must have 3 dims");
+            }
+            let mut variants = Vec::new();
+            for v in m
+                .get("variants")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("model {name}: missing variants"))?
+            {
+                variants.push(Variant {
+                    batch: v
+                        .get("batch")
+                        .and_then(|b| b.as_usize())
+                        .ok_or_else(|| anyhow!("model {name}: variant missing batch"))?,
+                    file: v
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .ok_or_else(|| anyhow!("model {name}: variant missing file"))?
+                        .to_string(),
+                    input_shape: v
+                        .get("input_shape")
+                        .and_then(|s| s.usizes())
+                        .ok_or_else(|| anyhow!("model {name}: bad input_shape"))?,
+                    output_shape: v
+                        .get("output_shape")
+                        .and_then(|s| s.usizes())
+                        .ok_or_else(|| anyhow!("model {name}: bad output_shape"))?,
+                });
+            }
+            variants.sort_by_key(|v| v.batch);
+            models.push(ModelArtifact {
+                name,
+                input_hwc: [hwc[0], hwc[1], hwc[2]],
+                param_count: m.get("param_count").and_then(|p| p.as_usize()).unwrap_or(0),
+                variants,
+                golden: m.get("golden").and_then(|g| g.as_str()).map(String::from),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelArtifact> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.iter().map(|m| m.name.as_str()).collect()
+    }
+}
+
+/// Golden input/output pair produced by aot.py for numerics verification.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub model: String,
+    pub batch: usize,
+    pub input: Vec<f32>,
+    pub output: Vec<f32>,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+impl Golden {
+    pub fn load(dir: &Path, file: &str) -> Result<Golden> {
+        let path = dir.join(file);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading golden {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing golden json")?;
+        let fetch = |k: &str| -> Result<Vec<f64>> {
+            j.get(k)
+                .and_then(|v| v.f64s())
+                .ok_or_else(|| anyhow!("golden missing '{k}'"))
+        };
+        Ok(Golden {
+            model: j
+                .get("model")
+                .and_then(|m| m.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            batch: j.get("batch").and_then(|b| b.as_usize()).unwrap_or(1),
+            input: fetch("input")?.into_iter().map(|x| x as f32).collect(),
+            output: fetch("output")?.into_iter().map(|x| x as f32).collect(),
+            input_shape: j
+                .get("input_shape")
+                .and_then(|s| s.usizes())
+                .ok_or_else(|| anyhow!("golden missing input_shape"))?,
+            output_shape: j
+                .get("output_shape")
+                .and_then(|s| s.usizes())
+                .ok_or_else(|| anyhow!("golden missing output_shape"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "models": [
+        {"name": "alexnet", "input_hwc": [32, 32, 3], "param_count": 93754,
+         "golden": "golden_alexnet.json",
+         "variants": [
+            {"batch": 1, "file": "alexnet_b1.hlo.txt",
+             "input_shape": [1, 32, 32, 3], "output_shape": [1, 10]},
+            {"batch": 8, "file": "alexnet_b8.hlo.txt",
+             "input_shape": [8, 32, 32, 3], "output_shape": [8, 10]}
+         ]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.names(), vec!["alexnet"]);
+        let a = m.model("alexnet").unwrap();
+        assert_eq!(a.param_count, 93754);
+        assert_eq!(a.max_batch(), 8);
+        assert_eq!(a.input_elems_per_request(), 32 * 32 * 3);
+    }
+
+    #[test]
+    fn variant_selection_rounds_up() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.model("alexnet").unwrap();
+        assert_eq!(a.variant_for(1).unwrap().batch, 1);
+        assert_eq!(a.variant_for(2).unwrap().batch, 8);
+        assert_eq!(a.variant_for(8).unwrap().batch, 8);
+        // beyond ladder -> largest
+        assert_eq!(a.variant_for(100).unwrap().batch, 8);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("hlo-text", "protobuf");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn variant_lengths() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let v = m.model("alexnet").unwrap().variant_for(8).unwrap();
+        assert_eq!(v.input_len(), 8 * 32 * 32 * 3);
+        assert_eq!(v.output_len(), 80);
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the serving hot path (Layer 3).  See DESIGN.md §6.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LoadedVariant};
+pub use manifest::{Golden, Manifest, ModelArtifact, Variant};

@@ -1,0 +1,136 @@
+//! Command-line parsing substrate (clap is unavailable offline).
+//!
+//! Supports `program <subcommand> [--flag] [--opt value | --opt=value]
+//! [positional...]` which is all the `igniter` binary and examples need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    /// `known_flags` lists valueless options; everything else starting with
+    /// `--` consumes the following token (or its `=` suffix) as a value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if known_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        out.options.insert(stripped.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list option.
+    pub fn opt_list(&self, name: &str) -> Option<Vec<String>> {
+        self.opt(name)
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), &["verbose", "json"])
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["experiment", "fig14", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig14", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["serve", "--gpus", "4", "--seed=99"]);
+        assert_eq!(a.opt("gpus"), Some("4"));
+        assert_eq!(a.opt_u64("seed", 0), 99);
+    }
+
+    #[test]
+    fn known_flags_do_not_eat_values() {
+        let a = parse(&["run", "--verbose", "pos1", "--out", "x.json"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.opt("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn trailing_unknown_flag() {
+        let a = parse(&["run", "--mystery"]);
+        assert!(a.flag("mystery"));
+    }
+
+    #[test]
+    fn unknown_option_before_another_option_is_flag() {
+        let a = parse(&["run", "--alpha", "--beta", "7"]);
+        assert!(a.flag("alpha"));
+        assert_eq!(a.opt("beta"), Some("7"));
+    }
+
+    #[test]
+    fn list_and_defaults() {
+        let a = parse(&["x", "--models", "alexnet, vgg19,ssd"]);
+        assert_eq!(
+            a.opt_list("models").unwrap(),
+            vec!["alexnet", "vgg19", "ssd"]
+        );
+        assert_eq!(a.opt_f64("rate", 2.5), 2.5);
+        assert_eq!(a.opt_or("missing", "dflt"), "dflt");
+    }
+}

@@ -1,0 +1,273 @@
+//! Least-squares fitting substrate (Sec. 3.1 "obtained by fitting ... using
+//! the least squares method").
+//!
+//! * `linear_lsq` — general linear least squares over arbitrary basis
+//!   functions via normal equations + Gaussian elimination with partial
+//!   pivoting (design matrices here are tiny: <= 11 x 5).
+//! * `polyfit` — polynomial basis convenience.
+//! * `fit_line` — slope/intercept (used for power & cache-util vs.
+//!   processing ability, Fig. 9, and scheduling delay vs. #workloads).
+//! * `fit_kact` — the paper's Eq. (11): nonlinear in k4 only, so a
+//!   golden-section search over k4 wraps a linear solve for (k1,k2,k3,k5).
+
+/// Solve `A x = b` (n x n) by Gaussian elimination with partial pivoting.
+pub fn solve(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    assert!(a.len() == n && a.iter().all(|r| r.len() == n));
+    let mut m: Vec<Vec<f64>> = a
+        .iter()
+        .zip(b.iter())
+        .map(|(row, &bi)| {
+            let mut r = row.clone();
+            r.push(bi);
+            r
+        })
+        .collect();
+
+    for col in 0..n {
+        // partial pivot
+        let piv = (col..n).max_by(|&i, &j| {
+            m[i][col]
+                .abs()
+                .partial_cmp(&m[j][col].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })?;
+        if m[piv][col].abs() < 1e-12 {
+            return None; // singular
+        }
+        m.swap(col, piv);
+        for row in 0..n {
+            if row != col {
+                let f = m[row][col] / m[col][col];
+                for k in col..=n {
+                    m[row][k] -= f * m[col][k];
+                }
+            }
+        }
+    }
+    Some((0..n).map(|i| m[i][n] / m[i][i]).collect())
+}
+
+/// Linear least squares: find `c` minimising `||X c - y||²` where
+/// `X[i][j] = basis_j(sample_i)` is given row-wise.
+pub fn linear_lsq(design: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let n = design.len();
+    if n == 0 || n != y.len() {
+        return None;
+    }
+    let p = design[0].len();
+    // Normal equations: (X^T X) c = X^T y, with tiny ridge for conditioning.
+    let mut xtx = vec![vec![0.0; p]; p];
+    let mut xty = vec![0.0; p];
+    for (row, &yi) in design.iter().zip(y.iter()) {
+        assert_eq!(row.len(), p);
+        for j in 0..p {
+            xty[j] += row[j] * yi;
+            for k in 0..p {
+                xtx[j][k] += row[j] * row[k];
+            }
+        }
+    }
+    for (j, row) in xtx.iter_mut().enumerate() {
+        row[j] += 1e-9;
+    }
+    solve(&xtx, &xty)
+}
+
+/// Fit `y = c[0] + c[1] x + ... + c[deg] x^deg`.
+pub fn polyfit(x: &[f64], y: &[f64], deg: usize) -> Option<Vec<f64>> {
+    let design: Vec<Vec<f64>> = x
+        .iter()
+        .map(|&xi| (0..=deg).map(|d| xi.powi(d as i32)).collect())
+        .collect();
+    linear_lsq(&design, y)
+}
+
+/// Fit `y = a x + b`; returns (a, b).
+pub fn fit_line(x: &[f64], y: &[f64]) -> Option<(f64, f64)> {
+    let c = polyfit(x, y, 1)?;
+    Some((c[1], c[0]))
+}
+
+/// Coefficients of the paper's Eq. (11):
+/// `k_act = (k1 b² + k2 b + k3) / (r + k4) + k5`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KactFit {
+    pub k1: f64,
+    pub k2: f64,
+    pub k3: f64,
+    pub k4: f64,
+    pub k5: f64,
+    /// Residual sum of squares of the winning fit.
+    pub rss: f64,
+}
+
+impl KactFit {
+    pub fn eval(&self, batch: f64, r: f64) -> f64 {
+        (self.k1 * batch * batch + self.k2 * batch + self.k3) / (r + self.k4) + self.k5
+    }
+}
+
+fn kact_rss_for_k4(samples: &[(f64, f64, f64)], k4: f64) -> Option<(f64, Vec<f64>)> {
+    // Given k4, the model is linear in (k1, k2, k3, k5) with basis
+    // [b²/(r+k4), b/(r+k4), 1/(r+k4), 1].
+    let design: Vec<Vec<f64>> = samples
+        .iter()
+        .map(|&(b, r, _)| {
+            let d = r + k4;
+            vec![b * b / d, b / d, 1.0 / d, 1.0]
+        })
+        .collect();
+    let y: Vec<f64> = samples.iter().map(|&(_, _, t)| t).collect();
+    let c = linear_lsq(&design, &y)?;
+    let rss: f64 = samples
+        .iter()
+        .map(|&(b, r, t)| {
+            let d = r + k4;
+            let pred = c[0] * b * b / d + c[1] * b / d + c[2] / d + c[3];
+            (pred - t).powi(2)
+        })
+        .sum();
+    Some((rss, c))
+}
+
+/// Fit Eq. (11) from `(batch, resources, active_time)` samples.
+/// `resources` in (0, 1]; golden-section search over `k4 ∈ [0, 1]`.
+pub fn fit_kact(samples: &[(f64, f64, f64)]) -> Option<KactFit> {
+    if samples.len() < 5 {
+        return None;
+    }
+    let phi = (5f64.sqrt() - 1.0) / 2.0;
+    let mut best: Option<(f64, f64, Vec<f64>)> = None;
+    // Golden-section over unimodal-ish RSS(k4); also coarse-scan to avoid
+    // local minima from noisy profiles.
+    for i in 0..=20 {
+        let k4 = i as f64 / 20.0;
+        if let Some((rss, c)) = kact_rss_for_k4(samples, k4) {
+            if best.as_ref().map_or(true, |(b, _, _)| rss < *b) {
+                best = Some((rss, k4, c));
+            }
+        }
+    }
+    let centre = best.as_ref()?.1;
+    let mut lo = (centre - 0.05).max(0.0);
+    let mut hi = (centre + 0.05).min(1.0);
+    for _ in 0..40 {
+        let m1 = hi - phi * (hi - lo);
+        let m2 = lo + phi * (hi - lo);
+        let r1 = kact_rss_for_k4(samples, m1).map(|(r, _)| r).unwrap_or(f64::INFINITY);
+        let r2 = kact_rss_for_k4(samples, m2).map(|(r, _)| r).unwrap_or(f64::INFINITY);
+        if r1 < r2 {
+            hi = m2;
+        } else {
+            lo = m1;
+        }
+    }
+    let k4 = 0.5 * (lo + hi);
+    let (rss, c) = kact_rss_for_k4(samples, k4)?;
+    let (rss, k4, c) = if rss < best.as_ref()?.0 {
+        (rss, k4, c)
+    } else {
+        best.unwrap()
+    };
+    Some(KactFit {
+        k1: c[0],
+        k2: c[1],
+        k3: c[2],
+        k4,
+        k5: c[3],
+        rss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = solve(&a, &[3.0, 4.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_is_none() {
+        let a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        assert!(solve(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn polyfit_exact_quadratic() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 2.0 * v * v - 3.0 * v + 1.0).collect();
+        let c = polyfit(&x, &y, 2).unwrap();
+        assert!((c[0] - 1.0).abs() < 1e-6, "{c:?}");
+        assert!((c[1] + 3.0).abs() < 1e-6, "{c:?}");
+        assert!((c[2] - 2.0).abs() < 1e-6, "{c:?}");
+    }
+
+    #[test]
+    fn fit_line_recovers() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.5, 4.5, 6.5, 8.5];
+        let (a, b) = fit_line(&x, &y).unwrap();
+        assert!((a - 2.0).abs() < 1e-9 && (b - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kact_fit_recovers_ground_truth() {
+        // Ground truth in paper units (active time ms, r in (0,1]).
+        let truth = KactFit {
+            k1: 0.002,
+            k2: 0.11,
+            k3: 0.35,
+            k4: 0.08,
+            k5: 0.12,
+            rss: 0.0,
+        };
+        let mut samples = Vec::new();
+        for &b in &[1.0, 4.0, 8.0, 16.0, 32.0] {
+            for &r in &[0.2, 0.4, 0.6, 0.8, 1.0] {
+                samples.push((b, r, truth.eval(b, r)));
+            }
+        }
+        let fit = fit_kact(&samples).unwrap();
+        for &(b, r, t) in &samples {
+            let rel = (fit.eval(b, r) - t).abs() / t.max(1e-9);
+            assert!(rel < 1e-3, "b={b} r={r} rel={rel} fit={fit:?}");
+        }
+        assert!((fit.k4 - truth.k4).abs() < 0.02, "{fit:?}");
+    }
+
+    #[test]
+    fn kact_fit_with_noise_is_close() {
+        let truth = KactFit {
+            k1: 0.001,
+            k2: 0.2,
+            k3: 0.5,
+            k4: 0.05,
+            k5: 0.3,
+            rss: 0.0,
+        };
+        let mut rng = crate::util::rng::Rng::new(17);
+        let mut samples = Vec::new();
+        for &b in &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0] {
+            for &r in &[0.2, 0.35, 0.5, 0.75, 1.0] {
+                let t = truth.eval(b, r) * (1.0 + 0.01 * rng.normal());
+                samples.push((b, r, t));
+            }
+        }
+        let fit = fit_kact(&samples).unwrap();
+        // predictions within a few percent despite 1% measurement noise
+        for &(b, r, _) in &samples {
+            let rel = (fit.eval(b, r) - truth.eval(b, r)).abs() / truth.eval(b, r);
+            assert!(rel < 0.05, "b={b} r={r} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn kact_fit_needs_enough_samples() {
+        assert!(fit_kact(&[(1.0, 0.5, 1.0); 4]).is_none());
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared substrates built from scratch for the offline toolchain:
+//! PRNG, streaming stats, least-squares fitting, JSON, CLI parsing,
+//! property testing, and table/CSV formatting.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod lsq;
+pub mod quick;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,218 @@
+//! Property-testing substrate (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it greedily shrinks the input via the value's `Shrink`
+//! implementation and panics with the minimal counterexample.  Used by the
+//! provisioner/coordinator invariant tests (routing, batching, placement).
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|x| x as usize).collect()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            if self.fract() != 0.0 {
+                out.push(self.trunc());
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for String {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(String::new());
+            let half: String = self.chars().take(self.chars().count() / 2).collect();
+            out.push(half);
+        }
+        out
+    }
+}
+
+impl Shrink for bool {
+    fn shrink(&self) -> Vec<Self> {
+        if *self {
+            vec![false]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // remove halves, remove single elements, shrink single elements
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() <= 8 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            for i in 0..self.len() {
+                for smaller in self[i].shrink() {
+                    let mut v = self.clone();
+                    v[i] = smaller;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Run a property over `cases` random inputs; shrink on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}):\n  \
+                 minimal counterexample: {min_input:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, P>(mut input: T, mut msg: String, prop: &P) -> (T, String)
+where
+    T: Shrink + Debug,
+    P: Fn(&T) -> PropResult,
+{
+    'outer: for _ in 0..200 {
+        for cand in input.shrink() {
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (input, msg)
+}
+
+/// Assert helper producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(
+            1,
+            200,
+            |r| r.below(1000),
+            |&x| {
+                if x < 1000 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        forall(
+            2,
+            500,
+            |r| r.below(10_000),
+            |&x| {
+                if x < 50 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_vec_reaches_small() {
+        // A vec property failing whenever it contains an element > 5
+        // should shrink near the minimal [6].
+        let bad = vec![9u64, 3, 7, 6, 2];
+        let (min, _) = shrink_loop(bad, "seed".into(), &|v: &Vec<u64>| {
+            if v.iter().any(|&x| x > 5) {
+                Err("has big".into())
+            } else {
+                Ok(())
+            }
+        });
+        assert!(min.len() <= 1, "minimal {min:?}");
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t = (10u64, 4u64);
+        let cands = t.shrink();
+        assert!(cands.iter().any(|&(a, _)| a < 10));
+        assert!(cands.iter().any(|&(_, b)| b < 4));
+    }
+}

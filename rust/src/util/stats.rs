@@ -1,0 +1,304 @@
+//! Streaming statistics substrate: Welford online moments, percentile
+//! estimation, and a fixed-bucket latency histogram (hdrhistogram is not
+//! available offline).  The SLO monitor computes P99 over sliding windows
+//! with these tools.
+
+/// Online mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64 / n as f64);
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact percentile of a sample (nearest-rank on a sorted copy).
+/// `q` in [0, 1]; e.g. `percentile(&lat, 0.99)` for P99.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile of an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = (q * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Log-bucketed latency histogram: 1 us .. ~100 s with ~2% relative
+/// resolution; O(1) record, O(buckets) percentile.  Values in seconds.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    /// exact tracking of min/max for reporting
+    min: f64,
+    max: f64,
+}
+
+const HIST_BUCKETS: usize = 1024;
+const HIST_LO: f64 = 1e-6; // 1 microsecond
+const HIST_HI: f64 = 100.0; // 100 seconds
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; HIST_BUCKETS],
+            total: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(x: f64) -> usize {
+        let x = x.clamp(HIST_LO, HIST_HI);
+        let t = (x / HIST_LO).ln() / (HIST_HI / HIST_LO).ln();
+        ((t * (HIST_BUCKETS - 1) as f64).round() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    fn bucket_value(i: usize) -> f64 {
+        let t = i as f64 / (HIST_BUCKETS - 1) as f64;
+        HIST_LO * (HIST_HI / HIST_LO).powf(t)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.counts[Self::bucket_of(x)] += 1;
+        self.total += 1;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.min = f64::INFINITY;
+        self.max = f64::NEG_INFINITY;
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.5, -1.0, 0.25, 9.0];
+        let mut o = OnlineStats::new();
+        xs.iter().for_each(|&x| o.push(x));
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((o.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(o.count(), 6);
+        assert_eq!(o.min(), -1.0);
+        assert_eq!(o.max(), 9.0);
+    }
+
+    #[test]
+    fn welford_merge() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        xs[..40].iter().for_each(|&x| a.push(x));
+        xs[40..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        let mut all = OnlineStats::new();
+        xs.iter().for_each(|&x| all.push(x));
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.std() - all.std()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_basic() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        let p50 = percentile(&xs, 0.5);
+        assert!((p50 - 50.0).abs() <= 1.0);
+        let p99 = percentile(&xs, 0.99);
+        assert!((p99 - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_percentile_accuracy() {
+        let mut h = LatencyHistogram::new();
+        let mut r = Rng::new(2);
+        let mut xs = Vec::new();
+        for _ in 0..50_000 {
+            // latencies around 5-50 ms
+            let x = 0.005 + 0.045 * r.f64();
+            h.record(x);
+            xs.push(x);
+        }
+        for q in [0.5, 0.9, 0.99] {
+            let exact = percentile(&xs, q);
+            let est = h.percentile(q);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.03, "q={q} exact={exact} est={est} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_clear_and_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(0.010);
+        b.record(0.030);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        a.clear();
+        assert_eq!(a.count(), 0);
+        assert!(a.percentile(0.5).is_nan());
+    }
+
+    #[test]
+    fn empty_stats_are_nan() {
+        assert!(mean(&[]).is_nan());
+        assert!(percentile(&[], 0.5).is_nan());
+        assert!(OnlineStats::new().mean().is_nan());
+    }
+}

@@ -1,0 +1,155 @@
+//! Workload definitions: the paper's App1-3 x {AlexNet, ResNet-50, VGG-19,
+//! SSD} SLO table (Table 3) and request arrival generators.
+
+pub mod trace;
+
+use crate::gpu::Model;
+use crate::provisioner::types::WorkloadSpec;
+use crate::util::rng::Rng;
+
+/// Table 3: (model, latency SLO ms, throughput req/s) per App.
+///
+/// W1..W4 = App1(A,R,V,S), W5..W8 = App2, W9..W12 = App3.
+pub const APP_TABLE: [(Model, f64, f64); 12] = [
+    (Model::AlexNet, 10.0, 1200.0),
+    (Model::ResNet50, 20.0, 400.0),
+    (Model::Vgg19, 20.0, 300.0),
+    (Model::Ssd, 25.0, 150.0),
+    (Model::AlexNet, 15.0, 400.0),
+    (Model::ResNet50, 30.0, 600.0),
+    (Model::Vgg19, 30.0, 400.0),
+    (Model::Ssd, 40.0, 50.0),
+    (Model::AlexNet, 20.0, 800.0),
+    (Model::ResNet50, 40.0, 200.0),
+    (Model::Vgg19, 40.0, 200.0),
+    (Model::Ssd, 55.0, 300.0),
+];
+
+/// The 12 paper workloads W1..W12.
+pub fn app_workloads() -> Vec<WorkloadSpec> {
+    APP_TABLE
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, slo, rate))| WorkloadSpec::new(i, m, slo, rate))
+        .collect()
+}
+
+/// The Table-1 illustrative trio (Sec. 2.3): A/R/V with SLOs 15/40/60 ms
+/// and rates 500/400/200 req/s.
+pub fn table1_workloads() -> Vec<WorkloadSpec> {
+    vec![
+        WorkloadSpec::new(0, Model::AlexNet, 15.0, 500.0),
+        WorkloadSpec::new(1, Model::ResNet50, 40.0, 400.0),
+        WorkloadSpec::new(2, Model::Vgg19, 60.0, 200.0),
+    ]
+}
+
+/// Request arrival process for one workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Constant spacing at the nominal rate (paper's client behaviour).
+    Constant,
+    /// Poisson process at the nominal rate.
+    Poisson,
+}
+
+/// Generates arrival times (ms) for a workload.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    pub kind: ArrivalKind,
+    pub rate_rps: f64,
+    rng: Rng,
+    next_ms: f64,
+}
+
+impl ArrivalGen {
+    pub fn new(kind: ArrivalKind, rate_rps: f64, seed: u64) -> ArrivalGen {
+        ArrivalGen {
+            kind,
+            rate_rps,
+            rng: Rng::new(seed),
+            next_ms: 0.0,
+        }
+    }
+
+    /// Next arrival timestamp (ms since start), monotone increasing.
+    pub fn next(&mut self) -> f64 {
+        let gap_ms = match self.kind {
+            ArrivalKind::Constant => 1000.0 / self.rate_rps,
+            ArrivalKind::Poisson => self.rng.exp(self.rate_rps / 1000.0),
+        };
+        self.next_ms += gap_ms;
+        self.next_ms
+    }
+}
+
+/// Synthetic workload sets for scalability studies (Fig. 21): `n` workloads
+/// cycling through the zoo with randomized-but-feasible SLOs and rates.
+pub fn synthetic_workloads(n: usize, seed: u64) -> Vec<WorkloadSpec> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let model = crate::gpu::ALL_MODELS[i % 4];
+            let (slo_lo, slo_hi, rate_lo, rate_hi) = match model {
+                Model::AlexNet => (10.0, 25.0, 200.0, 1200.0),
+                Model::ResNet50 => (20.0, 45.0, 100.0, 600.0),
+                Model::Vgg19 => (25.0, 60.0, 50.0, 400.0),
+                Model::Ssd => (30.0, 60.0, 30.0, 300.0),
+            };
+            WorkloadSpec::new(
+                i,
+                model,
+                rng.range_f64(slo_lo, slo_hi),
+                rng.range_f64(rate_lo, rate_hi).round(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_workloads() {
+        let w = app_workloads();
+        assert_eq!(w.len(), 12);
+        assert_eq!(w[0].name, "W1(alexnet)");
+        assert_eq!(w[11].name, "W12(ssd)");
+        assert_eq!(w[9].slo_ms, 40.0); // W10 = App3 ResNet-50
+        assert_eq!(w[3].rate_rps, 150.0); // W4 = App1 SSD
+    }
+
+    #[test]
+    fn constant_arrivals_are_evenly_spaced() {
+        let mut g = ArrivalGen::new(ArrivalKind::Constant, 500.0, 1);
+        let t1 = g.next();
+        let t2 = g.next();
+        assert!((t1 - 2.0).abs() < 1e-9);
+        assert!((t2 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn poisson_rate_approximately_right() {
+        let mut g = ArrivalGen::new(ArrivalKind::Poisson, 400.0, 7);
+        let mut last = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            last = g.next();
+        }
+        let measured = n as f64 / (last / 1000.0);
+        assert!(
+            (measured - 400.0).abs() < 15.0,
+            "measured rate {measured:.1}"
+        );
+    }
+
+    #[test]
+    fn synthetic_deterministic_and_sized() {
+        let a = synthetic_workloads(100, 3);
+        let b = synthetic_workloads(100, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|w| w.slo_ms > 0.0 && w.rate_rps > 0.0));
+    }
+}

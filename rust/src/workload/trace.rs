@@ -1,0 +1,163 @@
+//! Time-varying request-rate traces (the paper's future-work item (4):
+//! "deploying a dynamic temporal and spatial GPU sharing strategy for
+//! time-varying request arrival rates").
+//!
+//! A `RateTrace` maps epoch index -> per-workload arrival-rate multiplier;
+//! `experiments::dynamic` re-runs Alg. 1 each epoch and compares the
+//! epoch-by-epoch cost against static peak provisioning.
+
+use crate::util::rng::Rng;
+
+/// Shape of a synthetic rate trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceKind {
+    /// Sinusoidal day/night swing between `floor` and 1.0 of nominal.
+    Diurnal { period_epochs: usize, floor: f64 },
+    /// Mostly flat at `base`, with bursts to 1.0 with probability `p`.
+    Spiky { base: f64, p: f64 },
+    /// Linear ramp from `from` to `to` of nominal across the horizon.
+    Ramp { from: f64, to: f64 },
+}
+
+/// Per-workload rate multipliers across epochs.
+#[derive(Debug, Clone)]
+pub struct RateTrace {
+    pub kind: TraceKind,
+    pub epochs: usize,
+    /// multiplier\[epoch\]\[workload\]
+    pub multiplier: Vec<Vec<f64>>,
+}
+
+impl RateTrace {
+    /// Build a trace for `n_workloads` over `epochs` epochs.  Workloads are
+    /// phase-shifted so peaks do not all coincide (as in real multi-tenant
+    /// clusters).
+    pub fn generate(kind: TraceKind, epochs: usize, n_workloads: usize, seed: u64) -> RateTrace {
+        let mut rng = Rng::new(seed);
+        let phases: Vec<f64> = (0..n_workloads).map(|_| rng.f64()).collect();
+        let mut multiplier = Vec::with_capacity(epochs);
+        for e in 0..epochs {
+            let mut row = Vec::with_capacity(n_workloads);
+            for (w, &phase) in phases.iter().enumerate() {
+                let m = match kind {
+                    TraceKind::Diurnal {
+                        period_epochs,
+                        floor,
+                    } => {
+                        let t = (e as f64 / period_epochs.max(1) as f64 + phase)
+                            * 2.0
+                            * std::f64::consts::PI;
+                        floor + (1.0 - floor) * 0.5 * (1.0 + t.sin())
+                    }
+                    TraceKind::Spiky { base, p } => {
+                        let mut r = Rng::new(seed ^ ((e as u64) << 20) ^ w as u64);
+                        if r.f64() < p {
+                            1.0
+                        } else {
+                            base
+                        }
+                    }
+                    TraceKind::Ramp { from, to } => {
+                        from + (to - from) * e as f64 / (epochs.max(2) - 1) as f64
+                    }
+                };
+                row.push(m.clamp(0.01, 1.0));
+            }
+            multiplier.push(row);
+        }
+        RateTrace {
+            kind,
+            epochs,
+            multiplier,
+        }
+    }
+
+    /// Multiplier for (epoch, workload).
+    pub fn at(&self, epoch: usize, workload: usize) -> f64 {
+        self.multiplier[epoch][workload]
+    }
+
+    /// Mean multiplier of an epoch (cluster-wide load level).
+    pub fn epoch_mean(&self, epoch: usize) -> f64 {
+        crate::util::stats::mean(&self.multiplier[epoch])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_swings_within_bounds() {
+        let t = RateTrace::generate(
+            TraceKind::Diurnal {
+                period_epochs: 8,
+                floor: 0.3,
+            },
+            32,
+            12,
+            1,
+        );
+        for e in 0..32 {
+            for w in 0..12 {
+                let m = t.at(e, w);
+                assert!((0.3 - 1e-9..=1.0 + 1e-9).contains(&m), "m={m}");
+            }
+        }
+        // it actually swings: the range across epochs is wide
+        let w0: Vec<f64> = (0..32).map(|e| t.at(e, 0)).collect();
+        let lo = w0.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = w0.iter().cloned().fold(0.0, f64::max);
+        assert!(hi - lo > 0.5, "range {lo}..{hi}");
+    }
+
+    #[test]
+    fn phases_differ_between_workloads() {
+        let t = RateTrace::generate(
+            TraceKind::Diurnal {
+                period_epochs: 8,
+                floor: 0.2,
+            },
+            8,
+            6,
+            2,
+        );
+        // not all workloads peak at the same epoch
+        let peaks: Vec<usize> = (0..6)
+            .map(|w| {
+                (0..8)
+                    .max_by(|&a, &b| t.at(a, w).partial_cmp(&t.at(b, w)).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        let first = peaks[0];
+        assert!(peaks.iter().any(|&p| p != first), "all peaks at {first}");
+    }
+
+    #[test]
+    fn ramp_is_monotone() {
+        let t = RateTrace::generate(TraceKind::Ramp { from: 0.2, to: 1.0 }, 10, 3, 3);
+        for w in 0..3 {
+            for e in 1..10 {
+                assert!(t.at(e, w) >= t.at(e - 1, w) - 1e-12);
+            }
+        }
+        assert!((t.at(0, 0) - 0.2).abs() < 1e-9);
+        assert!((t.at(9, 0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spiky_hits_both_levels() {
+        let t = RateTrace::generate(TraceKind::Spiky { base: 0.3, p: 0.25 }, 40, 4, 4);
+        let all: Vec<f64> = t.multiplier.iter().flatten().cloned().collect();
+        assert!(all.iter().any(|&m| m > 0.9));
+        assert!(all.iter().any(|&m| m < 0.4));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = RateTrace::generate(TraceKind::Spiky { base: 0.5, p: 0.2 }, 10, 5, 9);
+        let b = RateTrace::generate(TraceKind::Spiky { base: 0.5, p: 0.2 }, 10, 5, 9);
+        assert_eq!(a.multiplier, b.multiplier);
+    }
+}

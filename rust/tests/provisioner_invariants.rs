@@ -1,0 +1,228 @@
+//! Property-based invariants of the provisioning layer (proptest-lite via
+//! `igniter::util::quick`): random SLO/rate workload sets must always yield
+//! structurally valid, SLO-meeting, deterministic plans.
+
+use igniter::gpu::{GpuKind, Model, ALL_MODELS};
+use igniter::perfmodel;
+use igniter::provisioner::{ffd, gpulets, igniter as ig, ProfiledSystem, WorkloadSpec};
+use igniter::util::quick::{forall, Shrink};
+use igniter::util::rng::Rng;
+use once_cell::sync::Lazy;
+
+static SYS: Lazy<ProfiledSystem> = Lazy::new(|| {
+    let (hw, wls) = igniter::profiler::profile_all(GpuKind::V100, 42);
+    ProfiledSystem {
+        hw,
+        coeffs: ALL_MODELS.iter().cloned().zip(wls).collect(),
+    }
+});
+
+/// A random feasible workload description for property generation.
+#[derive(Debug, Clone)]
+struct GenSpec {
+    model_idx: usize,
+    slo_ms: f64,
+    rate_rps: f64,
+}
+
+impl Shrink for GenSpec {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.rate_rps > 50.0 {
+            out.push(GenSpec {
+                rate_rps: self.rate_rps / 2.0,
+                ..self.clone()
+            });
+        }
+        if self.slo_ms < 100.0 {
+            out.push(GenSpec {
+                slo_ms: self.slo_ms * 1.5,
+                ..self.clone()
+            });
+        }
+        out
+    }
+}
+
+fn gen_specs(r: &mut Rng) -> Vec<GenSpec> {
+    let n = 1 + r.below(10) as usize;
+    (0..n)
+        .map(|_| {
+            let model_idx = r.below(4) as usize;
+            // SLO/rate bands chosen to be individually feasible on a V100
+            let (slo_lo, slo_hi, rate_lo, rate_hi) = match ALL_MODELS[model_idx] {
+                Model::AlexNet => (10.0, 30.0, 100.0, 1200.0),
+                Model::ResNet50 => (20.0, 50.0, 100.0, 600.0),
+                Model::Vgg19 => (25.0, 60.0, 50.0, 400.0),
+                Model::Ssd => (30.0, 60.0, 30.0, 300.0),
+            };
+            GenSpec {
+                model_idx,
+                slo_ms: r.range_f64(slo_lo, slo_hi),
+                rate_rps: r.range_f64(rate_lo, rate_hi).round(),
+            }
+        })
+        .collect()
+}
+
+fn to_specs(gs: &[GenSpec]) -> Vec<WorkloadSpec> {
+    gs.iter()
+        .enumerate()
+        .map(|(i, g)| WorkloadSpec::new(i, ALL_MODELS[g.model_idx], g.slo_ms, g.rate_rps))
+        .collect()
+}
+
+#[test]
+fn igniter_plans_always_valid_and_slo_meeting() {
+    forall(101, 60, gen_specs, |gs| {
+        let specs = to_specs(gs);
+        let plan = ig::provision(&SYS, &specs);
+        plan.validate(specs.len(), SYS.hw.r_max)
+            .map_err(|e| format!("invalid plan: {e}"))?;
+        for (w, t_inf, thpt) in ig::predict_plan(&SYS, &specs, &plan) {
+            if t_inf > specs[w].slo_ms / 2.0 + 1e-6 {
+                return Err(format!(
+                    "{}: predicted {t_inf:.2} ms > half-SLO {:.2}",
+                    specs[w].name,
+                    specs[w].slo_ms / 2.0
+                ));
+            }
+            if thpt < specs[w].rate_rps * 0.999 {
+                return Err(format!("{}: throughput {thpt:.0}", specs[w].name));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plans_are_deterministic() {
+    forall(202, 30, gen_specs, |gs| {
+        let specs = to_specs(gs);
+        if ig::provision(&SYS, &specs) != ig::provision(&SYS, &specs) {
+            return Err("igniter non-deterministic".into());
+        }
+        if gpulets::provision_gpulets(&SYS, &specs) != gpulets::provision_gpulets(&SYS, &specs) {
+            return Err("gpulets non-deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ffd_never_more_gpus_than_igniter_never_less_resources() {
+    forall(303, 40, gen_specs, |gs| {
+        let specs = to_specs(gs);
+        let ffd_plan = ffd::provision_ffd(&SYS, &specs);
+        let ig_plan = ig::provision(&SYS, &specs);
+        ffd_plan
+            .validate(specs.len(), SYS.hw.r_max)
+            .map_err(|e| format!("ffd invalid: {e}"))?;
+        if ffd_plan.num_gpus() > ig_plan.num_gpus() {
+            return Err(format!(
+                "FFD used more GPUs ({}) than iGniter ({})",
+                ffd_plan.num_gpus(),
+                ig_plan.num_gpus()
+            ));
+        }
+        // iGniter never allocates less than the lower bound
+        let derived = ig::derive_all(&SYS, &specs);
+        for (_, a) in ig_plan.all() {
+            let d = derived[a.workload].unwrap();
+            if a.resources < d.r_lower - 1e-9 {
+                return Err(format!(
+                    "w{} allocated {} < lower bound {}",
+                    a.workload, a.resources, d.r_lower
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eq17_18_monotonicity() {
+    // b_appr grows with rate; r_lower grows as the SLO tightens.
+    forall(404, 80, |r: &mut Rng| (r.below(3), r.range_f64(25.0, 60.0)), |&(mi, slo)| {
+        let model = ALL_MODELS[mi as usize];
+        let wc = SYS.coeffs_for(model);
+        let b1 = perfmodel::appropriate_batch(&SYS.hw, wc, slo, 100.0);
+        let b2 = perfmodel::appropriate_batch(&SYS.hw, wc, slo, 400.0);
+        if b1 > b2 {
+            return Err(format!("batch not monotone in rate: {b1} > {b2}"));
+        }
+        // (b_appr, r_lower) must be *feasible and tight*: within the
+        // half-SLO and meeting the rate.  Note r_lower is NOT monotone in
+        // the SLO — a looser SLO grows b_appr (Eq. 17), which can require
+        // marginally more resources; only feasibility is guaranteed.
+        for slo_k in [1.0, 1.5] {
+            if let Some((b, r)) =
+                perfmodel::lower_bound_resources(&SYS.hw, wc, slo * slo_k, 200.0)
+            {
+                let p = perfmodel::predict_solo(&SYS.hw, wc, b as f64, r);
+                if p.t_inf > slo * slo_k / 2.0 + 1e-6 {
+                    return Err(format!("infeasible bound: {} > {}", p.t_inf, slo * slo_k / 2.0));
+                }
+                if p.throughput_rps < 200.0 * 0.999 {
+                    return Err(format!("rate missed: {}", p.throughput_rps));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn alloc_gpus_supersets_never_shrink() {
+    // Adding a workload through Alg. 2 must never *reduce* any resident's
+    // allocation.
+    forall(505, 40, gen_specs, |gs| {
+        if gs.len() < 2 {
+            return Ok(());
+        }
+        let specs = to_specs(gs);
+        let derived = ig::derive_all(&SYS, &specs);
+        let d0 = derived[0].unwrap();
+        let resident = vec![igniter::provisioner::Alloc {
+            workload: 0,
+            resources: d0.r_lower,
+            batch: d0.batch,
+        }];
+        let d1 = derived[1].unwrap();
+        if let Some(alloc) = ig::alloc_gpus(&SYS, &specs, &resident, 1, d1.r_lower, d1.batch) {
+            let r0 = alloc.iter().find(|a| a.workload == 0).unwrap().resources;
+            if r0 < d0.r_lower - 1e-9 {
+                return Err(format!("resident shrunk from {} to {}", d0.r_lower, r0));
+            }
+            let total: f64 = alloc.iter().map(|a| a.resources).sum();
+            if total > SYS.hw.r_max + 1e-9 {
+                return Err(format!("over-allocated: {total}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gpulets_structural_invariants() {
+    forall(606, 40, gen_specs, |gs| {
+        let specs = to_specs(gs);
+        let plan = gpulets::provision_gpulets(&SYS, &specs);
+        plan.validate(specs.len(), SYS.hw.r_max)
+            .map_err(|e| format!("gpulets invalid: {e}"))?;
+        for g in &plan.gpus {
+            if g.len() > 2 {
+                return Err(format!("{} workloads on one GPU", g.len()));
+            }
+        }
+        for (_, a) in plan.all() {
+            if !gpulets::GPULETS_CHOICES
+                .iter()
+                .any(|&c| (c - a.resources).abs() < 1e-9)
+            {
+                return Err(format!("resource {} off-menu", a.resources));
+            }
+        }
+        Ok(())
+    });
+}

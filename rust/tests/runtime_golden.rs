@@ -1,0 +1,60 @@
+//! Integration: AOT HLO-text artifacts round-trip through the PJRT engine
+//! and match the Python-produced golden outputs (the core numerics signal).
+
+use igniter::runtime::{Engine, Manifest};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn golden_numerics_match_python() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let names: Vec<String> = manifest.models.iter().map(|m| m.name.clone()).collect();
+    let mut engine = Engine::new(manifest).unwrap();
+    for name in &names {
+        let err = engine.verify_golden(name, 1e-3).unwrap();
+        eprintln!("{name}: golden max |err| = {err:.2e}");
+    }
+}
+
+#[test]
+fn padded_execution_matches_full() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let Some(model) = manifest.models.first().map(|m| m.name.clone()) else {
+        return;
+    };
+    let art = manifest.model(&model).unwrap().clone();
+    let Some(v4) = art.variants.iter().find(|v| v.batch >= 2) else {
+        eprintln!("skipping: no batch>=2 variant");
+        return;
+    };
+    let batch = v4.batch;
+    let mut engine = Engine::new(manifest).unwrap();
+    engine.load_variant(&model, batch).unwrap();
+    let lv = engine.variant(&model, batch).unwrap();
+
+    let per_in = lv.variant.input_len() / batch;
+    let per_out = lv.variant.output_len() / batch;
+    // 1 real request + zero padding == full batch where request 0 matches
+    let req: Vec<f32> = (0..per_in).map(|i| (i % 7) as f32 * 0.1).collect();
+    let padded = lv.execute_padded(&req, 1).unwrap();
+    assert_eq!(padded.len(), per_out);
+
+    let mut full = vec![0f32; lv.variant.input_len()];
+    full[..per_in].copy_from_slice(&req);
+    let full_out = lv.execute(&full).unwrap();
+    for (a, b) in padded.iter().zip(full_out[..per_out].iter()) {
+        assert!((a - b).abs() < 1e-5, "padded/full mismatch: {a} vs {b}");
+    }
+}
