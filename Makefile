@@ -1,0 +1,33 @@
+# iGniter reproduction — build/verify entry points.
+#
+#   make verify      tier-1 gate: release build + full Rust test suite,
+#                    bench compilation, and the Python Layer-1 tests
+#   make artifacts   AOT-lower the model zoo to artifacts/ (needs jax)
+#   make clean       drop build + result artifacts
+
+CARGO ?= cargo
+PYTHON ?= python
+
+.PHONY: verify build test bench-build pytest artifacts clean
+
+verify: build test bench-build pytest
+	@echo "verify: OK"
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench-build:
+	$(CARGO) bench --no-run
+
+pytest:
+	$(PYTHON) -m pytest python/tests -q
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf results

@@ -3,11 +3,18 @@
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
-use anyhow::Result;
+use igniter::util::error::Result;
 use igniter::runtime::{Engine, Manifest};
 use std::path::Path;
 
 fn main() -> Result<()> {
+    if !igniter::runtime::PJRT_AVAILABLE {
+        println!(
+            "quickstart needs real PJRT compute, which this build stubs out \
+             (see DESIGN.md §PJRT runtime) — nothing to run."
+        );
+        return Ok(());
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let manifest = Manifest::load(&dir)?;
     println!("artifact zoo: {:?}", manifest.names());

@@ -10,7 +10,7 @@
 //!
 //!   make artifacts && cargo run --release --example serve_cluster
 
-use anyhow::Result;
+use igniter::util::error::Result;
 use igniter::coordinator::{realrun, ClusterSim, Policy};
 use igniter::gpu::GpuKind;
 use igniter::provisioner::{self, ProfiledSystem};
@@ -92,6 +92,15 @@ fn main() -> Result<()> {
     println!("SLO violations: {violations} (paper: 0 for iGniter)");
 
     // 4. Real compute through the compiled HLO executables.
+    if !igniter::runtime::PJRT_AVAILABLE {
+        println!(
+            "(PJRT runtime stubbed — skipping the real-compute stage; \
+             steps 1-3 above ran end-to-end)"
+        );
+        assert_eq!(violations, 0, "iGniter must meet every SLO");
+        println!("serve_cluster OK (virtual-time only)");
+        return Ok(());
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let manifest = Manifest::load(&dir)?;
     let mut engine = Engine::new(manifest)?;

@@ -1,0 +1,18 @@
+"""Test-session wiring for the Layer-1 suite.
+
+* Puts ``python/`` on ``sys.path`` so ``from compile import ...`` works
+  regardless of the pytest invocation directory.
+* Gates modules that import ``jax`` at collection time (missing
+  ``hypothesis`` is handled by ``pytest.importorskip`` inside the two
+  property-based modules, which also covers naming a file directly).
+"""
+
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+collect_ignore = []
+if importlib.util.find_spec("jax") is None:
+    collect_ignore += ["test_kernels.py", "test_conv_direct.py", "test_models.py"]

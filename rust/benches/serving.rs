@@ -35,7 +35,12 @@ fn main() {
         sim.run().len()
     });
 
-    // Real PJRT path (skipped when artifacts are absent).
+    // Real PJRT path (skipped when artifacts are absent or the runtime
+    // is the offline stub).
+    if !igniter::runtime::PJRT_AVAILABLE {
+        println!("(PJRT runtime stubbed — skipping real-compute benches)");
+        return;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("(artifacts not built — skipping real-compute benches)");

@@ -19,7 +19,7 @@
 use crate::gpu::{GpuKind, Model};
 use crate::provisioner::WorkloadSpec;
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::path::Path;
 
 /// Serving-section options.

@@ -8,7 +8,7 @@ use super::common::{emit, measure, profiled_system, SEED};
 use crate::gpu::{GpuDevice, GpuKind, Model};
 use crate::perfmodel::{self, model::ModelTerms, PlacedWorkload};
 use crate::util::table::{pct, Table};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Co-location scenarios used for the error measurement: the paper's
 /// Fig.-13 quad plus two heavy pairs and a 5-way stack.

@@ -18,7 +18,7 @@ use crate::provisioner::{self, online::OnlinePlanner, ProfiledSystem, WorkloadSp
 use crate::util::table::{f, Table};
 use crate::workload::trace::{RateTrace, TraceKind};
 use crate::workload::app_workloads;
-use anyhow::Result;
+use crate::util::error::Result;
 
 fn scaled(specs: &[WorkloadSpec], trace: &RateTrace, epoch: usize) -> Vec<WorkloadSpec> {
     specs

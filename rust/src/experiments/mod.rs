@@ -12,7 +12,7 @@ pub mod provisioning;
 pub mod validation;
 
 use crate::gpu::GpuKind;
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 /// All experiment ids, in paper order.
 pub const ALL: [&str; 17] = [

@@ -5,7 +5,7 @@
 use super::common::{emit, measure, profiled_system, MOTIVATION_MODELS, SEED};
 use crate::gpu::{GpuDevice, GpuKind, Model};
 use crate::util::table::{f, Table};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Fig. 3: normalized latency of A/R/V vs. 1-5 identical co-located
 /// workloads, each at 20 % of the GPU (batch 4, 3 repetitions).

@@ -7,7 +7,7 @@ use crate::gpu::GpuKind;
 use crate::provisioner::{heterogeneous, igniter};
 use crate::util::table::{f, Table};
 use crate::workload::{app_workloads, synthetic_workloads};
-use anyhow::Result;
+use crate::util::error::Result;
 use std::time::Instant;
 
 /// Fig. 20: heterogeneous cluster — provision the 12 workloads on T4s and

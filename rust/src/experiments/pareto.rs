@@ -13,7 +13,7 @@ use crate::gpu::GpuKind;
 use crate::provisioner::{self, WorkloadSpec};
 use crate::util::table::{f, Table};
 use crate::workload::app_workloads;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Scale all SLOs by `lambda`.
 fn scaled(specs: &[WorkloadSpec], lambda: f64) -> Vec<WorkloadSpec> {

@@ -9,7 +9,7 @@ use crate::provisioner::{
 };
 use crate::util::table::{f, pct, Table};
 use crate::workload::{app_workloads, table1_workloads, ArrivalKind};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Serve a plan in the DES and count P99 / throughput SLO violations.
 pub fn serve_and_count(

@@ -8,7 +8,7 @@ use crate::gpu::{GpuDevice, GpuKind, Model};
 use crate::perfmodel::{self, PlacedWorkload};
 use crate::provisioner::gpulets;
 use crate::util::table::{f, pct, Table};
-use anyhow::Result;
+use crate::util::error::Result;
 
 fn observe(kind: GpuKind, placed: &[(Model, f64, u32)], target: usize, seed: u64) -> f64 {
     let (mean, _) = measure(3, || {

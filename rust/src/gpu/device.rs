@@ -193,24 +193,31 @@ impl GpuDevice {
     }
 
     /// Aggregate L2 demand of all processes except `except_tag`.
+    /// Uses *effective* partitions so oversubscribed devices (GSLICE-style
+    /// force-growth past 100 %) time-slice instead of exceeding the
+    /// physical resource range.
     fn others_cache_util(&self, except_tag: u64) -> f64 {
         self.slots
             .iter()
             .filter(|s| s.tag != except_tag)
             .map(|s| {
                 self.prof(s.model)
-                    .cache_util(s.batch as f64, s.resources)
+                    .cache_util(s.batch as f64, self.effective_resources(s))
             })
             .sum()
     }
 
-    /// Total power demand (Eq. 10 ground truth): idle + per-process power.
+    /// Total power demand (Eq. 10 ground truth): idle + per-process power
+    /// at each process's effective partition.
     pub fn power_demand_w(&self) -> f64 {
         self.spec.idle_power_w
             + self
                 .slots
                 .iter()
-                .map(|s| self.prof(s.model).power_w(s.batch as f64, s.resources))
+                .map(|s| {
+                    self.prof(s.model)
+                        .power_w(s.batch as f64, self.effective_resources(s))
+                })
                 .sum::<f64>()
     }
 
@@ -270,7 +277,10 @@ impl GpuDevice {
         let total: f64 = self
             .slots
             .iter()
-            .map(|s| self.prof(s.model).cache_util(s.batch as f64, s.resources))
+            .map(|s| {
+                self.prof(s.model)
+                    .cache_util(s.batch as f64, self.effective_resources(s))
+            })
             .sum();
         let base = 0.85;
         base * (1.0 - 0.45 * total / (total + 0.35))

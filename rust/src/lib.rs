@@ -2,8 +2,14 @@
 //!
 //! Three-layer Rust + JAX + Pallas reproduction of "iGniter:
 //! Interference-Aware GPU Resource Provisioning for Predictable DNN
-//! Inference in the Cloud".  See DESIGN.md for the system inventory and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! Inference in the Cloud".
+//!
+//! See `DESIGN.md` (repo root) for the module inventory, build/verify
+//! instructions, and the PJRT/artifact gating rules, and `EXPERIMENTS.md`
+//! for the experiment index (`igniter experiment <id>` regenerates each
+//! paper table/figure).  The crate builds offline with zero crates.io
+//! dependencies; every external-crate niche is filled by an in-tree
+//! substrate under [`util`] (and [`runtime::xla_stub`] for PJRT).
 
 pub mod cluster;
 pub mod config;

@@ -13,7 +13,7 @@
 //!   igniter serve --policy shadow --horizon-s 30 --real-batches 2
 //!   igniter verify
 
-use anyhow::{anyhow, bail, Result};
+use igniter::util::error::{anyhow, bail, Result};
 use igniter::coordinator::{self, ClusterSim, Policy};
 use igniter::gpu::GpuKind;
 use igniter::provisioner::{ffd, gpulets, gslice, igniter as ig, Plan, ProfiledSystem};

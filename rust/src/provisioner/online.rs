@@ -9,7 +9,7 @@
 
 use super::igniter::{alloc_gpus, derive_all, provision_with_derived};
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 /// A live, mutable provisioning state.
 #[derive(Debug, Clone)]

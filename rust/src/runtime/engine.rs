@@ -7,8 +7,13 @@
 //! XlaComputation -> PjRtLoadedExecutable.
 
 use super::manifest::{Golden, Manifest, ModelArtifact, Variant};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
+
+// The native PJRT bindings are unavailable offline; `xla_stub` mirrors the
+// exact API surface used below.  To run real numerics, replace this alias
+// with the `xla` crate (see DESIGN.md §PJRT runtime).
+use crate::runtime::xla_stub as xla;
 
 use std::time::Instant;
 

@@ -2,7 +2,7 @@
 //! writes `artifacts/manifest.json`) and the Rust runtime (which loads it).
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One compiled (model, batch) HLO variant.

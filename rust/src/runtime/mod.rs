@@ -3,6 +3,13 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use engine::{Engine, LoadedVariant};
 pub use manifest::{Golden, Manifest, ModelArtifact, Variant};
+
+/// Whether real PJRT execution is available.  False while the engine is
+/// backed by [`xla_stub`]; artifact-driven tests and benches must check
+/// this in addition to artifact presence, since compiled artifacts can
+/// exist on a machine whose build still lacks the native bindings.
+pub const PJRT_AVAILABLE: bool = xla_stub::AVAILABLE;

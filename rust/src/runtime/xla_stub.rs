@@ -1,0 +1,212 @@
+//! Offline stand-in for the `xla` (PJRT) native bindings.
+//!
+//! The build environment has no XLA shared library and no network access,
+//! so the real `xla` crate cannot be used.  This module mirrors the exact
+//! API surface `engine.rs` consumes — client / HLO-text loading / compile /
+//! execute — with the same shapes and error plumbing.  Loading HLO text and
+//! "compiling" it succeed (the artifact pipeline and manifest contracts stay
+//! exercisable end-to-end); only `execute` reports that real numerics are
+//! unavailable.  Swapping this module for the real bindings is a one-line
+//! change in `engine.rs` (see DESIGN.md §PJRT runtime).
+
+use std::fmt;
+
+/// False: this is the stub backend — `execute` cannot produce real
+/// numerics.  Runtime-dependent tests/benches key off
+/// [`crate::runtime::PJRT_AVAILABLE`] to skip instead of failing.
+pub const AVAILABLE: bool = false;
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug)]
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> XlaError {
+        XlaError { msg: msg.into() }
+    }
+
+    fn unavailable(what: &str) -> XlaError {
+        XlaError::new(format!(
+            "{what}: XLA PJRT runtime is unavailable in this build \
+             (native `xla` bindings are stubbed; see DESIGN.md)"
+        ))
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+/// A host literal: flat f32 data plus a shape.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat f32 slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: data.to_vec(),
+        }
+    }
+
+    /// Reinterpret the literal under new dimensions (element count must
+    /// be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.data.len() as i64 {
+            return Err(XlaError::new(format!(
+                "reshape: {} elements cannot view as {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(XlaError::unavailable("to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable("to_vec"))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO-text module (the stub keeps the raw text).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load an `.hlo.txt` artifact.  Mirrors the real parser's contract:
+    /// the file must exist and look like an HLO module.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError::new(format!("reading HLO text {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return Err(XlaError::new(format!(
+                "{path} does not look like HLO text (missing 'HloModule')"
+            )));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            text: proto.text.clone(),
+        }
+    }
+}
+
+/// A "compiled" executable.  Executing it reports that the native runtime
+/// is unavailable; everything up to that point behaves like the real thing.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    #[allow(dead_code)]
+    text_len: usize,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable("execute"))
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable("to_literal_sync"))
+    }
+}
+
+/// The PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            text_len: comp.text.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shapes() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.element_count(), 6);
+        assert!(l.reshape(&[4, 4]).is_err());
+    }
+
+    #[test]
+    fn compile_pipeline_up_to_execute() {
+        let dir = std::env::temp_dir().join("igniter_xla_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.hlo.txt");
+        std::fs::write(&path, "HloModule m\nENTRY e { ROOT c = f32[] constant(0) }").unwrap();
+
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let lit = Literal::vec1(&[0.5f32]);
+        let err = exe.execute::<Literal>(&[lit]).unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+    }
+
+    #[test]
+    fn missing_or_malformed_files_error() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+        let dir = std::env::temp_dir().join("igniter_xla_stub_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.txt");
+        std::fs::write(&path, "not hlo").unwrap();
+        assert!(HloModuleProto::from_text_file(path.to_str().unwrap()).is_err());
+    }
+}

@@ -19,7 +19,9 @@ struct Scheduled<E> {
 
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        // Defined via `cmp` so Eq stays consistent with the total_cmp-based
+        // Ord (IEEE `==` would disagree on NaN and -0.0 timestamps).
+        self.cmp(other) == Ordering::Equal
     }
 }
 impl<E> Eq for Scheduled<E> {}
@@ -27,10 +29,12 @@ impl<E> Eq for Scheduled<E> {}
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap: earliest time first, then FIFO by sequence number.
+        // `total_cmp` gives a genuine total order even if a NaN timestamp
+        // ever slips in (with `partial_cmp(..).unwrap_or(Equal)` a NaN
+        // would silently corrupt the heap invariant instead).
         other
             .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.at)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -83,6 +87,7 @@ impl<E> EventQueue<E> {
 
     /// Schedule `payload` at absolute time `at` (clamped to now).
     pub fn schedule_at(&mut self, at: SimTime, payload: E) {
+        debug_assert!(at.is_finite(), "non-finite event time {at}");
         let at = if at < self.now { self.now } else { at };
         self.heap.push(Scheduled {
             at,
@@ -159,6 +164,14 @@ mod tests {
         let (t, e) = q.pop().unwrap();
         assert_eq!(e, "late");
         assert_eq!(t, 10.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite")]
+    fn nan_event_time_asserts_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, "bad");
     }
 
     #[test]

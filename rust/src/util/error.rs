@@ -1,0 +1,189 @@
+//! Error-handling substrate (anyhow is unavailable offline): a boxed-free
+//! error type carrying a context chain, the `anyhow!` / `bail!` macros, and
+//! a `Context` extension trait for `Result`.
+//!
+//! Mirrors the subset of the `anyhow` API this crate uses so call sites
+//! read identically: `anyhow!("model {name} missing")`, `bail!(...)`,
+//! `.context("parsing manifest.json")`, `.with_context(|| format!(...))`.
+//! `Display` prints the outermost message; the alternate form (`{:#}`)
+//! prints the whole chain separated by `: `, like `anyhow`.
+
+use std::fmt;
+
+/// Convenience alias used across the crate (same shape as `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message with an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, msg: impl fmt::Display) -> Error {
+        Error {
+            msg: msg.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The outermost message (without the cause chain).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, anyhow-style.
+            write!(f, "{}", self.chain().collect::<Vec<_>>().join(": "))
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Like `anyhow`, any std error converts implicitly (enables `?` on
+// `ParseIntError`, `io::Error`, etc.).  `Error` itself deliberately does
+// NOT implement `std::error::Error`, which keeps this blanket impl
+// coherent with `impl<T> From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to any
+/// `Result` whose error is displayable.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        // `{e:#}` so a wrapped `Error`'s own cause chain survives the
+        // re-wrap (plain `{e}` would keep only its outermost message);
+        // other error types ignore the alternate flag.
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (`anyhow!`-compatible).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] (`bail!`-compatible).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+// Make the macros importable as `use crate::util::error::{anyhow, bail}`
+// (or `igniter::util::error::{...}` from tests/benches/examples), matching
+// how the `anyhow` crate was imported before.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "inner 42");
+        assert_eq!(format!("{e:#}"), "inner 42");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e: Error = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(e.chain().count(), 2);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn context_on_error_result_keeps_chain() {
+        let inner: Result<()> = Err(anyhow!("root").context("mid"));
+        let e = inner.context("top").unwrap_err();
+        assert_eq!(format!("{e:#}"), "top: mid: root");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), std::num::ParseIntError> =
+            "x".parse::<i32>().map(|_| ());
+        let e = r.with_context(|| format!("parsing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "parsing x");
+        assert!(format!("{e:#}").contains("invalid digit"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let name = "vgg19";
+        let e = anyhow!("model {name} missing from artifacts");
+        assert_eq!(e.to_string(), "model vgg19 missing from artifacts");
+    }
+}

@@ -1,0 +1,72 @@
+//! Lazy statics substrate (once_cell is unavailable offline): a minimal
+//! `Lazy<T>` over `std::sync::OnceLock`, API-compatible with
+//! `once_cell::sync::Lazy` for the `static X: Lazy<T> = Lazy::new(|| ...)`
+//! pattern the integration tests use.
+
+use std::ops::Deref;
+use std::sync::OnceLock;
+
+/// A value initialized on first access.  Thread-safe; the initializer runs
+/// at most once even under concurrent first access.
+pub struct Lazy<T, F = fn() -> T> {
+    cell: OnceLock<T>,
+    init: F,
+}
+
+impl<T, F: Fn() -> T> Lazy<T, F> {
+    pub const fn new(init: F) -> Lazy<T, F> {
+        Lazy {
+            cell: OnceLock::new(),
+            init,
+        }
+    }
+
+    /// Force initialization and return the value.
+    pub fn force(this: &Lazy<T, F>) -> &T {
+        this.cell.get_or_init(|| (this.init)())
+    }
+}
+
+impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        Lazy::force(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn initializes_once() {
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        static V: Lazy<Vec<u32>> = Lazy::new(|| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            vec![1, 2, 3]
+        });
+        assert_eq!(V.len(), 3);
+        assert_eq!(V[2], 3);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+        assert_eq!(*Lazy::force(&V), vec![1, 2, 3]);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn concurrent_first_access_is_single_init() {
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        static V: Lazy<u64> = Lazy::new(|| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            99
+        });
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(|| *V))
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 99);
+        }
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+    }
+}

@@ -4,7 +4,9 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
+pub mod lazy;
 pub mod lsq;
 pub mod quick;
 pub mod rng;

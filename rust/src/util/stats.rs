@@ -93,8 +93,15 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Drop NaN samples up front: the old partial_cmp().unwrap() comparator
+    // panicked mid-sort on one bad sample, and total_cmp alone would place
+    // sign-bit NaNs (e.g. x86-64's 0.0/0.0) at the FRONT, corrupting low
+    // quantiles.  Ranks are taken over the valid samples only.
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, q)
 }
 
@@ -261,6 +268,21 @@ mod tests {
         assert!((p50 - 50.0).abs() <= 1.0);
         let p99 = percentile(&xs, 0.99);
         assert!((p99 - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: a single NaN sample used to panic the
+        // partial_cmp().unwrap() comparator inside sort.  NaNs are now
+        // excluded and ranks run over the valid samples — including
+        // sign-bit NaNs like 0.0/0.0, which total_cmp alone would sort
+        // to the front.
+        let xs = [3.0, f64::NAN, 1.0, 0.0 / 0.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        assert_eq!(percentile(&xs, 1.0), 3.0);
+        // all-NaN input degrades to NaN, same as empty
+        assert!(percentile(&[f64::NAN], 0.5).is_nan());
     }
 
     #[test]

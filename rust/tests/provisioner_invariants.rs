@@ -7,7 +7,7 @@ use igniter::perfmodel;
 use igniter::provisioner::{ffd, gpulets, igniter as ig, ProfiledSystem, WorkloadSpec};
 use igniter::util::quick::{forall, Shrink};
 use igniter::util::rng::Rng;
-use once_cell::sync::Lazy;
+use igniter::util::lazy::Lazy;
 
 static SYS: Lazy<ProfiledSystem> = Lazy::new(|| {
     let (hw, wls) = igniter::profiler::profile_all(GpuKind::V100, 42);

@@ -5,6 +5,10 @@ use igniter::runtime::{Engine, Manifest};
 use std::path::Path;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if !igniter::runtime::PJRT_AVAILABLE {
+        eprintln!("skipping: PJRT runtime stubbed (see DESIGN.md §PJRT runtime)");
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
 }

@@ -7,7 +7,7 @@ use igniter::gpu::{GpuKind, ALL_MODELS};
 use igniter::provisioner::{igniter as ig, ProfiledSystem};
 use igniter::util::quick::forall;
 use igniter::workload::{app_workloads, table1_workloads, ArrivalKind};
-use once_cell::sync::Lazy;
+use igniter::util::lazy::Lazy;
 
 static SYS: Lazy<ProfiledSystem> = Lazy::new(|| {
     let (hw, wls) = igniter::profiler::profile_all(GpuKind::V100, 42);
