@@ -1,17 +1,24 @@
 # iGniter reproduction — build/verify entry points.
 #
 #   make verify      tier-1 gate: release build + full Rust test suite,
-#                    bench compilation, and the Python Layer-1 tests
+#                    bench compilation, lint (fmt + clippy), and the
+#                    Python Layer-1 tests
 #   make artifacts   AOT-lower the model zoo to artifacts/ (needs jax)
 #   make clean       drop build + result artifacts
 
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: verify build test bench-build pytest artifacts clean
+.PHONY: verify build test bench-build fmt-check clippy pytest artifacts clean
 
-verify: build test bench-build pytest
+verify: build test bench-build fmt-check clippy pytest
 	@echo "verify: OK"
+
+fmt-check:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
 
 build:
 	$(CARGO) build --release

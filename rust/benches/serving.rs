@@ -35,6 +35,32 @@ fn main() {
         sim.run().len()
     });
 
+    // Long horizon: 120 s of virtual time serves ~12x the requests of the
+    // 10 s run.  With the sliding-window monitor the per-tick cost is
+    // O(window), so the mean here should scale ~linearly with the horizon
+    // (~12x the run above), not quadratically as the old rescan-everything
+    // monitor did.  Compare ns/served-request across the two lines.
+    let mut served_120s = 0u64;
+    let long = bench("cluster_sim 12wl x 120s virtual", 0, 3, || {
+        let mut sim = ClusterSim::new(
+            kind,
+            &plan,
+            &specs,
+            Policy::IgniterShadow,
+            ArrivalKind::Constant,
+            42,
+            &[],
+        );
+        sim.set_horizon(120_000.0, 1_000.0);
+        served_120s = sim.run().iter().map(|s| s.served).sum::<u64>();
+        served_120s
+    });
+    println!(
+        "  -> {:.0} ns per served request over {} requests (flat vs. horizon = monitor is O(window))",
+        long.mean_ns / served_120s.max(1) as f64,
+        served_120s
+    );
+
     // Real PJRT path (skipped when artifacts are absent or the runtime
     // is the offline stub).
     if !igniter::runtime::PJRT_AVAILABLE {

@@ -1,0 +1,154 @@
+//! The dynamic batcher, extracted behind the `BatchPolicy` trait so
+//! batch-formation policy is a swappable component rather than an enum
+//! arm baked into the event loop.
+//!
+//! The default `TritonAdaptive` policy mirrors Triton's dynamic batching:
+//! dispatch as soon as the preferred batch size is reached, or when the
+//! oldest queued request has waited out the `max_queue_delay` — here the
+//! slack of the half-SLO after the (rolling) batch execution estimate.
+
+/// What the batcher may observe about one replica's queue.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchView {
+    /// Requests currently waiting (not yet dispatched).
+    pub queue_len: usize,
+    /// Arrival time (ms) of the oldest waiting request.
+    pub oldest_arrival: Option<f64>,
+    /// Configured (preferred) batch size of the replica.
+    pub max_batch: u32,
+    /// The workload's latency SLO (ms).
+    pub slo_ms: f64,
+    /// Rolling estimate of batch execution latency (ms).
+    pub exec_estimate_ms: f64,
+}
+
+/// Outcome of a batching decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchDecision {
+    /// Dispatch a batch of this many requests now.
+    Dispatch(u32),
+    /// Hold; re-evaluate at this absolute virtual time (ms).
+    Wait(f64),
+    /// Queue empty — nothing to do until the next arrival.
+    Idle,
+}
+
+/// A batch-formation policy: pure decision logic, no queue ownership.
+pub trait BatchPolicy {
+    fn name(&self) -> &'static str;
+    /// Decide for one idle replica at virtual time `now`.
+    fn decide(&self, now: f64, view: &BatchView) -> BatchDecision;
+}
+
+/// Triton-style adaptive batching: full batch or queue-delay timeout.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TritonAdaptive;
+
+impl TritonAdaptive {
+    /// Dynamic batching timeout: the slack of the half-SLO after the
+    /// estimated execution time (Triton's max_queue_delay), floored so a
+    /// pessimistic estimate cannot wedge the queue.
+    pub fn timeout_ms(view: &BatchView) -> f64 {
+        (view.slo_ms / 2.0 - view.exec_estimate_ms).max(0.1)
+    }
+}
+
+impl BatchPolicy for TritonAdaptive {
+    fn name(&self) -> &'static str {
+        "triton-adaptive"
+    }
+
+    fn decide(&self, now: f64, view: &BatchView) -> BatchDecision {
+        let Some(oldest) = view.oldest_arrival else {
+            return BatchDecision::Idle;
+        };
+        let n = view.queue_len.min(view.max_batch as usize) as u32;
+        if n == 0 {
+            return BatchDecision::Idle;
+        }
+        let timeout = Self::timeout_ms(view);
+        let full = view.queue_len >= view.max_batch as usize;
+        if full || now - oldest >= timeout {
+            BatchDecision::Dispatch(n)
+        } else {
+            BatchDecision::Wait(oldest + timeout)
+        }
+    }
+}
+
+/// Degenerate baseline: dispatch whatever is queued immediately (batch
+/// size still capped).  Exists to prove the policy seam and to measure
+/// what adaptive batching buys.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EagerBatcher;
+
+impl BatchPolicy for EagerBatcher {
+    fn name(&self) -> &'static str {
+        "eager"
+    }
+
+    fn decide(&self, _now: f64, view: &BatchView) -> BatchDecision {
+        let n = view.queue_len.min(view.max_batch as usize) as u32;
+        if n == 0 {
+            BatchDecision::Idle
+        } else {
+            BatchDecision::Dispatch(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(queue_len: usize, oldest: Option<f64>) -> BatchView {
+        BatchView {
+            queue_len,
+            oldest_arrival: oldest,
+            max_batch: 8,
+            slo_ms: 40.0,
+            exec_estimate_ms: 10.0,
+        }
+    }
+
+    #[test]
+    fn empty_queue_is_idle() {
+        assert_eq!(TritonAdaptive.decide(5.0, &view(0, None)), BatchDecision::Idle);
+        assert_eq!(EagerBatcher.decide(5.0, &view(0, None)), BatchDecision::Idle);
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let d = TritonAdaptive.decide(100.0, &view(8, Some(99.9)));
+        assert_eq!(d, BatchDecision::Dispatch(8));
+        // over-full queue still capped at max_batch
+        let d = TritonAdaptive.decide(100.0, &view(20, Some(99.9)));
+        assert_eq!(d, BatchDecision::Dispatch(8));
+    }
+
+    #[test]
+    fn partial_batch_waits_until_timeout() {
+        // timeout = 40/2 - 10 = 10 ms after the oldest arrival
+        let d = TritonAdaptive.decide(100.0, &view(3, Some(95.0)));
+        assert_eq!(d, BatchDecision::Wait(105.0));
+        // once the oldest request has aged past the timeout: dispatch
+        let d = TritonAdaptive.decide(105.0, &view(3, Some(95.0)));
+        assert_eq!(d, BatchDecision::Dispatch(3));
+    }
+
+    #[test]
+    fn timeout_floored_for_pessimistic_estimates() {
+        let v = BatchView {
+            exec_estimate_ms: 100.0, // way past the half-SLO
+            ..view(2, Some(50.0))
+        };
+        assert!((TritonAdaptive::timeout_ms(&v) - 0.1).abs() < 1e-12);
+        assert_eq!(TritonAdaptive.decide(50.2, &v), BatchDecision::Dispatch(2));
+    }
+
+    #[test]
+    fn eager_dispatches_anything() {
+        assert_eq!(EagerBatcher.decide(0.0, &view(1, Some(0.0))), BatchDecision::Dispatch(1));
+        assert_eq!(EagerBatcher.decide(0.0, &view(30, Some(0.0))), BatchDecision::Dispatch(8));
+    }
+}

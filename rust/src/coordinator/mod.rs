@@ -1,9 +1,24 @@
-//! Layer-3 serving coordinator: deterministic discrete-event serving of a
-//! provisioning plan (router + dynamic batcher + SLO monitor + shadow
-//! failover + GSLICE tuner) and the real-compute bridge to the PJRT
-//! runtime.
+//! Layer-3 serving coordinator, decomposed into a composable pipeline:
+//!
+//! * `router`  — request routing across a workload's replica group
+//!   (least-outstanding-requests, weighted-by-resources);
+//! * `batcher` — the Triton-style adaptive batcher behind `BatchPolicy`;
+//! * `monitor` — SLO monitor actions behind `ServingPolicy` (iGniter
+//!   shadow failover, GSLICE reactive tuner, static);
+//! * `server`  — the deterministic discrete-event loop (`ClusterSim`)
+//!   that owns devices + replica state and delegates every decision;
+//! * `realrun` — the real-compute bridge to the PJRT runtime.
 
+pub mod batcher;
+pub mod monitor;
 pub mod realrun;
+pub mod router;
 pub mod server;
 
-pub use server::{ClusterSim, Policy, TimelinePoint, WorkloadStats};
+pub use batcher::{BatchDecision, BatchPolicy, BatchView, EagerBatcher, TritonAdaptive};
+pub use monitor::{
+    GsliceTuner, PolicyCtx, ServingPolicy, ShadowFailover, StaticPolicy, MONITOR_PERIOD_MS,
+    SHADOW_EXTRA,
+};
+pub use router::{RouteStrategy, Router};
+pub use server::{ClusterSim, Policy, ReplicaState, TimelinePoint, WorkloadStats};

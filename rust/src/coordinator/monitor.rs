@@ -1,0 +1,156 @@
+//! SLO monitoring policies behind the `ServingPolicy` trait: the iGniter
+//! shadow failover (Sec. 4.2 "Dealing with Performance Prediction
+//! Errors"), the GSLICE reactive threshold tuner, and the static
+//! no-adjustment baseline.
+//!
+//! A policy observes per-replica latency windows on every monitor tick
+//! (and optional tuner period) through `PolicyCtx`, and may act on the
+//! devices — grow a partition, kill/relaunch a process.  The event loop
+//! in `server.rs` knows nothing about any specific policy.
+
+use super::server::ReplicaState;
+use crate::gpu::GpuDevice;
+
+/// Extra GPU resources granted to an activated shadow process: the smaller
+/// of 10 % (the paper's measured max prediction error) and the remaining
+/// resources on the device.
+pub const SHADOW_EXTRA: f64 = 0.10;
+/// SLO monitor period (paper: clients evaluate every second, iGniter
+/// re-checks 0.5 s after a violation).
+pub const MONITOR_PERIOD_MS: f64 = 500.0;
+/// Minimum samples in a window before a P99 verdict is trusted.
+pub const MIN_P99_SAMPLES: usize = 20;
+
+/// Mutable view a policy gets on monitor/tune ticks.
+pub struct PolicyCtx<'a> {
+    pub devices: &'a mut [GpuDevice],
+    pub replicas: &'a mut [ReplicaState],
+}
+
+/// An online serving policy applied while the event loop runs.
+pub trait ServingPolicy {
+    fn name(&self) -> &'static str;
+    /// Called every `MONITOR_PERIOD_MS`.
+    fn on_monitor(&mut self, _now: f64, _ctx: &mut PolicyCtx) {}
+    /// Period of dedicated tune ticks, if the policy wants them.
+    fn tune_period_ms(&self) -> Option<f64> {
+        None
+    }
+    /// Called every `tune_period_ms()` when `Some`.
+    fn on_tune(&mut self, _now: f64, _ctx: &mut PolicyCtx) {}
+}
+
+/// Static plan: no runtime adjustment.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticPolicy;
+
+impl ServingPolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// iGniter shadow failover: per replica, when the 1-second P99 violates
+/// the SLO, kill the process and activate the pre-launched standby with
+/// extra resources (capped by the device's free room).  One switch per
+/// replica.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShadowFailover;
+
+impl ShadowFailover {
+    fn activate(ctx: &mut PolicyCtx, p: usize) {
+        let gpu = ctx.replicas[p].gpu;
+        let tag = ctx.replicas[p].tag;
+        let free = ctx.devices[gpu].free_resources();
+        let extra = SHADOW_EXTRA.min(free);
+        let new_r = ctx.replicas[p].resources + extra;
+        ctx.devices[gpu].kill(tag);
+        // shadow takes over under the same tag with the grown partition
+        ctx.devices[gpu].launch_unchecked(
+            tag,
+            ctx.replicas[p].spec.model,
+            new_r,
+            ctx.replicas[p].batch,
+        );
+        let rep = &mut ctx.replicas[p];
+        rep.resources = new_r;
+        rep.shadow_active = true;
+        rep.switches += 1;
+        // restart the latency records: the new process starts clean, so
+        // final stats (P99 / achieved rate) describe the post-switch
+        // process — the pre-switch violations are what the switch fixed
+        rep.window.clear();
+        rep.hist.clear();
+        rep.recorded = 0;
+        rep.lat_sum = 0.0;
+        rep.queue_sum = 0.0;
+        rep.exec_sum = 0.0;
+    }
+}
+
+impl ServingPolicy for ShadowFailover {
+    fn name(&self) -> &'static str {
+        "igniter-shadow"
+    }
+
+    fn on_monitor(&mut self, now: f64, ctx: &mut PolicyCtx) {
+        for p in 0..ctx.replicas.len() {
+            if ctx.replicas[p].shadow_active {
+                continue; // one switch per replica
+            }
+            let rep = &ctx.replicas[p];
+            if let Some(p99) = rep
+                .window
+                .percentile_since(now - 1_000.0, 0.99, MIN_P99_SAMPLES)
+            {
+                if p99 > rep.spec.slo_ms {
+                    Self::activate(ctx, p);
+                }
+            }
+        }
+    }
+}
+
+/// GSLICE's reactive threshold tuner (interference-unaware): per replica,
+/// grow when the observed 10-second average violates half the SLO, shrink
+/// when it undershoots by the tuning threshold — ignoring co-residents
+/// entirely (it may oversubscribe the device, which the hardware then
+/// time-slices).
+#[derive(Debug, Clone, Copy)]
+pub struct GsliceTuner {
+    /// adjustment period (ms)
+    pub period_ms: f64,
+}
+
+impl ServingPolicy for GsliceTuner {
+    fn name(&self) -> &'static str {
+        "gslice-tuner"
+    }
+
+    fn tune_period_ms(&self) -> Option<f64> {
+        Some(self.period_ms)
+    }
+
+    fn on_tune(&mut self, now: f64, ctx: &mut PolicyCtx) {
+        for p in 0..ctx.replicas.len() {
+            let rep = &ctx.replicas[p];
+            let Some(avg) = rep.window.mean_since(now - 10_000.0, 10) else {
+                continue;
+            };
+            let half = rep.spec.slo_ms / 2.0;
+            let gpu = rep.gpu;
+            let tag = rep.tag;
+            let step = ctx.devices[gpu].spec.r_unit * 2.0;
+            if avg > half {
+                let r = rep.resources + step;
+                // interference-unaware: force the grow regardless of room
+                ctx.devices[gpu].force_resources(tag, r);
+                ctx.replicas[p].resources = r;
+            } else if avg < half * (1.0 - crate::provisioner::gslice::TUNING_THRESHOLD) {
+                let r = (rep.resources - step).max(ctx.devices[gpu].spec.r_unit);
+                ctx.devices[gpu].force_resources(tag, r);
+                ctx.replicas[p].resources = r;
+            }
+        }
+    }
+}

@@ -32,8 +32,10 @@ pub struct RealRunStats {
     pub mean_abs_output: f64,
 }
 
-/// Execute `batches_per_workload` real batches for every workload of the
-/// plan through the compiled HLO executables.
+/// Execute `batches_per_workload` real batches for every allocation of
+/// the plan (one run per replica — a workload split across several
+/// gpulets exercises each replica's batch variant) through the compiled
+/// HLO executables.
 pub fn serve_real(
     engine: &mut Engine,
     plan: &Plan,
@@ -43,8 +45,16 @@ pub fn serve_real(
 ) -> Result<Vec<RealRunStats>> {
     let mut rng = Rng::new(seed);
     let mut out = Vec::new();
+    let mut replica_no = vec![0usize; specs.len()];
     for (_, alloc) in plan.all() {
         let spec = &specs[alloc.workload];
+        let k = plan.replica_count(alloc.workload);
+        replica_no[alloc.workload] += 1;
+        let label = if k > 1 {
+            format!("{}#{}", spec.name, replica_no[alloc.workload])
+        } else {
+            spec.name.clone()
+        };
         let model_name = spec.model.name();
         let art = engine
             .manifest()
@@ -76,7 +86,7 @@ pub fn serve_real(
             out_mag.push(mag);
         }
         out.push(RealRunStats {
-            name: spec.name.clone(),
+            name: label,
             model: model_name.to_string(),
             batch: alloc.batch,
             batches_run: batches_per_workload,

@@ -1,0 +1,129 @@
+//! Request routing across a workload's replica group.
+//!
+//! The provisioner may place several allocations under one workload id
+//! (a workload whose rate exceeds a single gpulet — see
+//! `provisioner::igniter::replica_split`); at serving time every arrival
+//! of that workload must be steered to exactly one replica.  Two
+//! deterministic strategies:
+//!
+//! * `LeastOutstanding` — pick the replica with the fewest outstanding
+//!   requests (waiting + in-flight), lowest replica index on ties.  This
+//!   is the join-the-shortest-queue default: it adapts to transient
+//!   imbalance (a replica slowed by co-runner interference drains less,
+//!   so it receives less).
+//! * `WeightedByResources` — smooth weighted round-robin keyed on each
+//!   replica's current GPU partition, for heterogeneous replica sizes
+//!   (e.g. after a shadow switch grew one replica).
+//!
+//! Both are pure functions of the observed state plus per-workload credit
+//! counters, so identical seeds replay to identical routes.
+
+/// Routing strategy across the replicas of one workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteStrategy {
+    /// Join the replica with the fewest outstanding requests.
+    LeastOutstanding,
+    /// Smooth weighted round-robin proportional to replica resources.
+    WeightedByResources,
+}
+
+/// Per-workload routing state (credit counters for the weighted strategy).
+#[derive(Debug, Clone)]
+pub struct Router {
+    strategy: RouteStrategy,
+    /// credits[w][j]: accumulated weight of workload w's j-th replica.
+    credits: Vec<Vec<f64>>,
+}
+
+impl Router {
+    /// `group_sizes[w]` = number of replicas of workload `w`.
+    pub fn new(strategy: RouteStrategy, group_sizes: &[usize]) -> Router {
+        Router {
+            strategy,
+            credits: group_sizes.iter().map(|&n| vec![0.0; n]).collect(),
+        }
+    }
+
+    /// Route one arrival of workload `w` to a member of `group` (global
+    /// replica indices).  `outstanding(p)` and `weight(p)` observe the
+    /// replica's queue depth and current resources.
+    pub fn route<F, W>(&mut self, w: usize, group: &[usize], outstanding: F, weight: W) -> usize
+    where
+        F: Fn(usize) -> usize,
+        W: Fn(usize) -> f64,
+    {
+        assert!(!group.is_empty(), "workload {w} has no replicas");
+        if group.len() == 1 {
+            return group[0];
+        }
+        match self.strategy {
+            RouteStrategy::LeastOutstanding => {
+                // min_by_key returns the first minimum: lowest replica
+                // index wins ties, deterministically.
+                *group.iter().min_by_key(|&&p| outstanding(p)).unwrap()
+            }
+            RouteStrategy::WeightedByResources => {
+                let credits = &mut self.credits[w];
+                debug_assert_eq!(credits.len(), group.len());
+                let mut total = 0.0;
+                for (j, &p) in group.iter().enumerate() {
+                    // a replica always drains at least a floor share, so a
+                    // zero-resource corner cannot starve the credit walk
+                    let wgt = weight(p).max(1e-6);
+                    credits[j] += wgt;
+                    total += wgt;
+                }
+                let mut best = 0;
+                for j in 1..credits.len() {
+                    if credits[j] > credits[best] + 1e-12 {
+                        best = j;
+                    }
+                }
+                credits[best] -= total;
+                group[best]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_replica_short_circuits() {
+        let mut r = Router::new(RouteStrategy::LeastOutstanding, &[1]);
+        assert_eq!(r.route(0, &[7], |_| 99, |_| 1.0), 7);
+    }
+
+    #[test]
+    fn least_outstanding_picks_shortest_queue_with_fifo_ties() {
+        let mut r = Router::new(RouteStrategy::LeastOutstanding, &[3]);
+        let depths = [4usize, 2, 2];
+        let picked = r.route(0, &[10, 11, 12], |p| depths[p - 10], |_| 1.0);
+        assert_eq!(picked, 11, "first of the tied minima wins");
+        let depths2 = [0usize, 2, 2];
+        assert_eq!(r.route(0, &[10, 11, 12], |p| depths2[p - 10], |_| 1.0), 10);
+    }
+
+    #[test]
+    fn weighted_round_robin_tracks_resources() {
+        // replica 0 has twice the resources of replica 1: over 300 routes
+        // it must receive ~2/3 of the traffic, deterministically.
+        let mut r = Router::new(RouteStrategy::WeightedByResources, &[2]);
+        let weights = [0.5, 0.25];
+        let mut counts = [0usize; 2];
+        for _ in 0..300 {
+            let p = r.route(0, &[0, 1], |_| 0, |p| weights[p]);
+            counts[p] += 1;
+        }
+        assert_eq!(counts[0] + counts[1], 300);
+        assert_eq!(counts[0], 200, "smooth WRR is exact on rational weights");
+        // identical fresh router replays identically
+        let mut r2 = Router::new(RouteStrategy::WeightedByResources, &[2]);
+        let first: Vec<usize> = (0..10).map(|_| r2.route(0, &[0, 1], |_| 0, |p| weights[p])).collect();
+        let mut r3 = Router::new(RouteStrategy::WeightedByResources, &[2]);
+        let second: Vec<usize> = (0..10).map(|_| r3.route(0, &[0, 1], |_| 0, |p| weights[p])).collect();
+        assert_eq!(first, second);
+    }
+}

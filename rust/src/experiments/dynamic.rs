@@ -32,12 +32,16 @@ fn scaled(specs: &[WorkloadSpec], trace: &RateTrace, epoch: usize) -> Vec<Worklo
         .collect()
 }
 
-/// Count predicted violations of a plan against a spec set.
+/// Count predicted violations of a plan against a spec set.  Each
+/// allocation is held to its *replica share* of the workload's rate, so
+/// plans that split an over-capacity workload across gpulets are judged
+/// per replica (predict_plan emits one entry per allocation).
 fn violations(sys: &ProfiledSystem, specs: &[WorkloadSpec], plan: &provisioner::Plan) -> usize {
     provisioner::predict_plan(sys, specs, plan)
         .iter()
         .filter(|(w, t, h)| {
-            *t > specs[*w].slo_ms / 2.0 + 1e-6 || *h < specs[*w].rate_rps * 0.999
+            let share = specs[*w].rate_rps / plan.replica_count(*w).max(1) as f64;
+            *t > specs[*w].slo_ms / 2.0 + 1e-6 || *h < share * 0.999
         })
         .count()
 }

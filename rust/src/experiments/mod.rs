@@ -45,6 +45,7 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
         "pareto" => pareto::pareto(kind),
         "fig21" => overhead::fig21(kind),
         "overhead" => overhead::overhead(),
+        "replicas" => validation::replica_shares(kind),
         "all" => {
             for id in ALL {
                 println!("\n=== {id} ===");
@@ -52,10 +53,11 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
             }
             run("fig21", kind)?;
             run("overhead", kind)?;
+            run("replicas", kind)?;
             run("ablation", kind)?;
             run("dynamic", kind)?;
             run("pareto", kind)
         }
-        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, ablation, dynamic, pareto, all"),
+        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, pareto, all"),
     }
 }

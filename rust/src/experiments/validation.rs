@@ -175,6 +175,65 @@ pub fn fig13(kind: GpuKind) -> Result<()> {
     Ok(())
 }
 
+/// Replica-share validation: for a workload whose rate exceeds one V100
+/// gpulet, Alg. 2 splits it into even rate-sharing replicas; compare each
+/// replica's *predicted* latency/throughput (analytical model on its
+/// share) against the *observed* serving behaviour of the multi-replica
+/// `ClusterSim` pipeline.
+pub fn replica_shares(kind: GpuKind) -> Result<()> {
+    use crate::coordinator::{ClusterSim, Policy};
+    use crate::provisioner::WorkloadSpec;
+    use crate::workload::ArrivalKind;
+
+    let sys = profiled_system(kind, SEED);
+    // deterministic search for a just-over-capacity ResNet-50 rate
+    let rate = crate::provisioner::igniter::over_capacity_rate(&sys, Model::ResNet50, 40.0, 400.0);
+    let specs = vec![WorkloadSpec::new(0, Model::ResNet50, 40.0, rate)];
+    let plan = crate::provisioner::provision(&sys, &specs);
+    let k = plan.replica_count(0);
+    let share = rate / k as f64;
+
+    let horizon_ms = 10_000.0;
+    let mut sim = ClusterSim::new(
+        kind,
+        &plan,
+        &specs,
+        Policy::IgniterShadow,
+        ArrivalKind::Constant,
+        SEED,
+        &[],
+    );
+    sim.set_horizon(horizon_ms, 1_000.0);
+    let stats = sim.run();
+
+    let mut t = Table::new(
+        "Replica-share validation — over-capacity workload split across \
+         gpulets: per-replica predicted t_inf / share vs. observed serving",
+        &[
+            "replica", "gpu", "resources", "batch", "pred_t_inf", "share_rps", "obs_rps",
+        ],
+    );
+    let preds = crate::provisioner::predict_plan(&sys, &specs, &plan);
+    for (j, ((g, a), (_, t_inf, _))) in plan.replicas(0).iter().zip(preds.iter()).enumerate() {
+        let obs_rps = stats[0].replica_served[j] as f64 / horizon_ms * 1000.0;
+        t.row(&[
+            format!("{}#{}", specs[0].name, j + 1),
+            format!("GPU{}", g + 1),
+            pct(a.resources),
+            a.batch.to_string(),
+            f(*t_inf, 2),
+            f(share, 0),
+            f(obs_rps, 0),
+        ]);
+    }
+    emit(&t, "replica_shares");
+    println!(
+        "{} replicas, workload P99 {:.2} ms vs SLO {:.0} ms",
+        k, stats[0].p99_ms, specs[0].slo_ms
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +264,17 @@ mod tests {
             let e = perfmodel::rel_error(pred, obs);
             assert!(e < 0.12, "{ti}: err {:.1}%", e * 100.0);
         }
+    }
+
+    #[test]
+    fn replica_share_validation_runs_and_splits_evenly() {
+        replica_shares(GpuKind::V100).unwrap();
+        let out = std::fs::read_to_string(
+            super::super::common::results_dir().join("replica_shares.csv"),
+        )
+        .unwrap();
+        // at least two replica rows behind the header
+        assert!(out.lines().count() >= 3, "{out}");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! observed average latency — oscillating around the SLO (Fig. 15/16) and
 //! never shrinking an allocation that currently meets its SLO.  The static
 //! plan below captures the state after the paper's "five adjustments"
-//! (Sec. 5.3); the live adjustment loop runs in `coordinator::gslice_tuner`
+//! (Sec. 5.3); the live adjustment loop is `coordinator::monitor::GsliceTuner`
 //! for the Fig. 15/16 experiment.
 
 use super::igniter::derive_all;

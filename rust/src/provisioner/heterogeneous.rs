@@ -30,34 +30,22 @@ pub fn replicate_for(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Option<Rep
         let wc = sys.coeffs_for(spec.model);
         let mut k = 1usize;
         loop {
-            let per = WorkloadSpec {
-                id: out.specs.len(),
-                name: if k == 1 {
-                    spec.name.clone()
-                } else {
-                    format!("{}/x{k}", spec.name)
-                },
-                model: spec.model,
-                slo_ms: spec.slo_ms,
-                rate_rps: spec.rate_rps / k as f64,
-            };
-            if perfmodel::lower_bound_resources(&sys.hw, wc, per.slo_ms, per.rate_rps).is_some() {
-                for i in 0..k {
-                    let mut s = per.clone();
+            // Even per-replica traffic split (workload::replica_shares);
+            // feasibility is checked on the first share — they are equal.
+            let shares = crate::workload::replica_shares(spec, k);
+            if perfmodel::lower_bound_resources(&sys.hw, wc, shares[0].slo_ms, shares[0].rate_rps)
+                .is_some()
+            {
+                for mut s in shares {
                     s.id = out.specs.len();
-                    s.name = if k == 1 {
-                        spec.name.clone()
-                    } else {
-                        format!("{}#{}", spec.name, i + 1)
-                    };
                     out.specs.push(s);
                     out.origin.push(w);
                 }
                 break;
             }
             k += 1;
-            if k > 16 {
-                return None; // infeasible even with 16 replicas
+            if k > igniter::MAX_REPLICAS {
+                return None; // infeasible even with MAX_REPLICAS replicas
             }
         }
     }

@@ -2,9 +2,22 @@
 //! minimum interference growth) and Algorithm 2 (`alloc_gpus`, iterative
 //! GPU resource reallocation until every resident workload meets half its
 //! SLO under the predicted interference).
+//!
+//! Workloads whose rate exceeds what a single gpulet can sustain at full
+//! resources are split into the minimum number of even rate-sharing
+//! **replicas** (`replica_split`), each placed independently — the plan
+//! then carries several allocations under one workload id (see
+//! `Plan::replicas`), and `validate_replica_shares` checks every replica's
+//! predicted latency/throughput against its share of the traffic.
 
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
+use crate::gpu::Model;
 use crate::perfmodel::{self, PlacedWorkload};
+use crate::workload::replica_shares;
+
+/// Replication cap: a workload needing more than this many gpulets is
+/// treated as infeasible (matches `heterogeneous::replicate_for`).
+pub const MAX_REPLICAS: usize = 16;
 
 /// Per-workload derived quantities (Theorem 1).
 #[derive(Debug, Clone, Copy)]
@@ -84,57 +97,129 @@ pub fn alloc_gpus(
     Some(allocs)
 }
 
-/// Algorithm 1: the iGniter cost-efficient provisioning strategy.
-///
-/// Workloads whose `derive` entry is `None` are skipped (the heterogeneous
-/// wrapper replicates them first); panics in the homogeneous API if any is
-/// infeasible so callers notice.
-pub fn provision(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
-    let derived = derive_all(sys, specs);
-    for (w, d) in derived.iter().enumerate() {
-        assert!(
-            d.is_some(),
-            "workload {} infeasible on {} at full resources",
-            specs[w].name,
-            sys.hw.gpu
-        );
+/// Minimum replica count `k` (with the per-replica `Derived`) such that an
+/// even 1/k rate share of the workload is feasible on this GPU type at
+/// full resources.  `None` when even `MAX_REPLICAS` shares stay infeasible
+/// (an SLO so tight that `delta <= 0` no amount of replication fixes).
+pub fn replica_split(sys: &ProfiledSystem, spec: &WorkloadSpec) -> Option<(usize, Derived)> {
+    for k in 1..=MAX_REPLICAS {
+        let shares = replica_shares(spec, k);
+        let share = &shares[0];
+        if let Some((batch, r_lower)) = perfmodel::lower_bound_resources(
+            &sys.hw,
+            sys.coeffs_for(spec.model),
+            share.slo_ms,
+            share.rate_rps,
+        ) {
+            return Some((k, Derived { batch, r_lower }));
+        }
     }
-    provision_with_derived(sys, specs, &derived)
+    None
 }
 
+/// Deterministically find a rate just past what one gpulet of this GPU
+/// type can sustain for `(model, slo_ms)`: geometric search upward from
+/// `start_rps` until `lower_bound_resources` turns infeasible.  Shared by
+/// the replica-validation experiment and the over-capacity tests so the
+/// search never diverges between them.
+pub fn over_capacity_rate(sys: &ProfiledSystem, model: Model, slo_ms: f64, start_rps: f64) -> f64 {
+    let wc = sys.coeffs_for(model);
+    let mut rate = start_rps;
+    while perfmodel::lower_bound_resources(&sys.hw, wc, slo_ms, rate).is_some() {
+        rate *= 1.5;
+    }
+    rate
+}
+
+/// Algorithm 1: the iGniter cost-efficient provisioning strategy.
+///
+/// Workloads whose `derive` entry is `None` (rate beyond a full gpulet)
+/// are split into even rate-sharing replicas and every replica placed
+/// independently; panics only when a workload stays infeasible past
+/// `MAX_REPLICAS` (i.e. the SLO itself cannot be met at any rate).
+pub fn provision(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
+    let derived = derive_all(sys, specs);
+    let mut items: Vec<(usize, Derived)> = Vec::new();
+    for (w, d) in derived.iter().enumerate() {
+        match d {
+            Some(d) => items.push((w, *d)),
+            None => {
+                let (k, d) = replica_split(sys, &specs[w]).unwrap_or_else(|| {
+                    panic!(
+                        "workload {} infeasible on {} even with {MAX_REPLICAS} replicas",
+                        specs[w].name, sys.hw.gpu
+                    )
+                });
+                for _ in 0..k {
+                    items.push((w, d));
+                }
+            }
+        }
+    }
+    let plan = place_items(sys, specs, items);
+    debug_assert!(
+        validate_replica_shares(sys, specs, &plan).is_ok(),
+        "{:?}",
+        validate_replica_shares(sys, specs, &plan)
+    );
+    plan
+}
+
+/// Alg. 1 over an externally derived set (the heterogeneous wrapper
+/// expands infeasible workloads into replica *specs* first, so each entry
+/// here is exactly one placement item).
 pub fn provision_with_derived(
     sys: &ProfiledSystem,
     specs: &[WorkloadSpec],
     derived: &[Option<Derived>],
 ) -> Plan {
+    let items: Vec<(usize, Derived)> = derived
+        .iter()
+        .enumerate()
+        .filter_map(|(w, d)| d.map(|d| (w, d)))
+        .collect();
+    place_items(sys, specs, items)
+}
+
+/// Shared placement loop of Alg. 1: sort items by `r_lower` descending
+/// and greedily place each on the GPU with minimum increased-interference
+/// resources, provisioning a fresh GPU when none fits.
+fn place_items(
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+    mut items: Vec<(usize, Derived)>,
+) -> Plan {
     let hw = &sys.hw;
     let mut plan = Plan::new("iGniter", hw);
     plan.gpus.push(Vec::new()); // g <- 1
 
-    // Sort by r_lower descending (line 3).
-    let mut order: Vec<usize> = (0..specs.len()).filter(|&w| derived[w].is_some()).collect();
-    order.sort_by(|&a, &b| {
-        let ra = derived[a].unwrap().r_lower;
-        let rb = derived[b].unwrap().r_lower;
-        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
+    // Sort by r_lower descending (line 3); the sort is stable, so equal
+    // keys — in particular replicas of one workload — keep their order.
+    items.sort_by(|(wa, da), (wb, db)| {
+        db.r_lower
+            .partial_cmp(&da.r_lower)
+            .unwrap()
+            .then(wa.cmp(wb))
     });
 
-    for &w in &order {
-        let d = derived[w].unwrap();
+    for &(w, d) in &items {
         // Greedily find the GPU with minimum increased-interference
         // resources (lines 5-12).
         let mut best: Option<(usize, Vec<Alloc>, f64)> = None;
         for g in 0..plan.gpus.len() {
             if let Some(alloc) = alloc_gpus(sys, specs, &plan.gpus[g], w, d.r_lower, d.batch) {
                 // r_inter = sum of increases over current residents plus
-                // the new workload's growth above its own lower bound.
+                // the new item's growth above its own lower bound.
+                // `alloc_gpus` preserves order (residents first, the new
+                // item last), so the comparison is positional — replicas
+                // of one workload co-resident on a device stay distinct.
                 let mut r_inter = 0.0;
-                for a in &alloc {
-                    let before = plan.gpus[g]
-                        .iter()
-                        .find(|x| x.workload == a.workload)
-                        .map(|x| x.resources)
-                        .unwrap_or(if a.workload == w { d.r_lower } else { 0.0 });
+                for (i, a) in alloc.iter().enumerate() {
+                    let before = if i < plan.gpus[g].len() {
+                        plan.gpus[g][i].resources
+                    } else {
+                        d.r_lower
+                    };
                     r_inter += a.resources - before;
                 }
                 let better = match &best {
@@ -159,6 +244,48 @@ pub fn provision_with_derived(
         }
     }
     plan
+}
+
+/// Validate every allocation of a plan against its *replica share* of the
+/// workload's traffic: predicted `t_inf <= T_slo / 2` and predicted
+/// throughput covering `rate / replica_count` (the even per-replica
+/// arrival split the coordinator's router realizes).
+pub fn validate_replica_shares(
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+    plan: &Plan,
+) -> Result<(), String> {
+    for g in 0..plan.gpus.len() {
+        let placed: Vec<PlacedWorkload> = plan.gpus[g]
+            .iter()
+            .map(|a| PlacedWorkload {
+                coeffs: sys.coeffs_for(specs[a.workload].model),
+                batch: a.batch as f64,
+                resources: a.resources,
+            })
+            .collect();
+        for (i, a) in plan.gpus[g].iter().enumerate() {
+            let spec = &specs[a.workload];
+            let k = plan.replica_count(a.workload).max(1);
+            let share = spec.rate_rps / k as f64;
+            let p = perfmodel::predict(&sys.hw, &placed, i);
+            if p.t_inf > spec.slo_ms / 2.0 + 1e-6 {
+                return Err(format!(
+                    "gpu {g}: {} replica predicted t_inf {:.2} > half-SLO {:.2}",
+                    spec.name,
+                    p.t_inf,
+                    spec.slo_ms / 2.0
+                ));
+            }
+            if p.throughput_rps < share * 0.999 {
+                return Err(format!(
+                    "gpu {g}: {} replica predicted throughput {:.0} < share {:.0} (k={k})",
+                    spec.name, p.throughput_rps, share
+                ));
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Predict the latency/throughput of every placed workload of a plan.
@@ -319,5 +446,39 @@ mod tests {
         let s = sys();
         let specs = crate::workload::app_workloads();
         assert_eq!(provision(&s, &specs), provision(&s, &specs));
+    }
+
+    #[test]
+    fn replica_split_covers_over_capacity_rate() {
+        let s = sys();
+        let rate = over_capacity_rate(&s, Model::ResNet50, 40.0, 400.0);
+        let spec = WorkloadSpec::new(0, Model::ResNet50, 40.0, rate);
+        let (k, d) = replica_split(&s, &spec).expect("split must be feasible");
+        assert!(k >= 2, "over-capacity rate needs >1 replica, got {k}");
+        // the per-share bound must itself be feasible
+        assert!(d.r_lower <= s.hw.r_max + 1e-9);
+        // sanity: an infeasible SLO (sub-ms) cannot be saved by replication
+        let bad = WorkloadSpec::new(0, Model::ResNet50, 0.5, 100.0);
+        assert!(replica_split(&s, &bad).is_none());
+    }
+
+    #[test]
+    fn provision_splits_over_capacity_workload_into_replicas() {
+        let s = sys();
+        let rate = over_capacity_rate(&s, Model::ResNet50, 40.0, 400.0);
+        let specs = vec![
+            WorkloadSpec::new(0, Model::ResNet50, 40.0, rate),
+            WorkloadSpec::new(1, Model::AlexNet, 15.0, 500.0),
+        ];
+        let plan = provision(&s, &specs);
+        plan.validate(2, s.hw.r_max).unwrap();
+        assert!(
+            plan.replica_count(0) >= 2,
+            "workload beyond one GPU must replicate: {plan:?}"
+        );
+        assert_eq!(plan.replica_count(1), 1);
+        validate_replica_shares(&s, &specs, &plan).unwrap();
+        // deterministic across runs
+        assert_eq!(plan, provision(&s, &specs));
     }
 }

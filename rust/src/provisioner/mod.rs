@@ -10,5 +10,8 @@ pub mod igniter;
 pub mod online;
 pub mod types;
 
-pub use igniter::{alloc_gpus, derive_all, predict_plan, provision, Derived};
+pub use igniter::{
+    alloc_gpus, derive_all, predict_plan, provision, replica_split, validate_replica_shares,
+    Derived, MAX_REPLICAS,
+};
 pub use types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};

@@ -78,7 +78,7 @@ impl Plan {
         self.gpus[gpu].iter().map(|a| a.resources).sum()
     }
 
-    /// Find a workload's (gpu, alloc).
+    /// Find a workload's (gpu, alloc) — the first replica when several.
     pub fn find(&self, workload: usize) -> Option<(usize, Alloc)> {
         for (g, allocs) in self.gpus.iter().enumerate() {
             if let Some(a) = allocs.iter().find(|a| a.workload == workload) {
@@ -86,6 +86,22 @@ impl Plan {
             }
         }
         None
+    }
+
+    /// A workload's replica group: every allocation carrying its id, in
+    /// (gpu, position) order.  The j-th entry is replica j; a workload
+    /// whose rate exceeds one gpulet gets several, possibly on different
+    /// GPUs, each sized for an even share of the arrival rate.
+    pub fn replicas(&self, workload: usize) -> Vec<(usize, Alloc)> {
+        self.all()
+            .filter(|(_, a)| a.workload == workload)
+            .map(|(g, a)| (g, *a))
+            .collect()
+    }
+
+    /// Number of replicas provisioned for a workload (0 if unplaced).
+    pub fn replica_count(&self, workload: usize) -> usize {
+        self.all().filter(|(_, a)| a.workload == workload).count()
     }
 
     /// All allocations as (gpu, alloc) pairs.
@@ -241,6 +257,28 @@ mod tests {
     #[test]
     fn validate_ok() {
         assert!(plan().validate(3, 1.0).is_ok());
+    }
+
+    #[test]
+    fn replica_groups() {
+        let mut p = plan();
+        assert_eq!(p.replica_count(0), 1);
+        assert_eq!(p.replica_count(9), 0);
+        // add a second replica of workload 2 on GPU 0
+        p.gpus[0].push(Alloc {
+            workload: 2,
+            resources: 0.05,
+            batch: 2,
+        });
+        assert_eq!(p.replica_count(2), 2);
+        let reps = p.replicas(2);
+        assert_eq!(reps.len(), 2);
+        // (gpu, position) order: GPU0's copy precedes GPU1's
+        assert_eq!(reps[0].0, 0);
+        assert_eq!(reps[1].0, 1);
+        assert!((reps[1].1.resources - 0.9).abs() < 1e-12);
+        // replicated placement still validates (Constraint 16 allows it)
+        assert!(p.validate(3, 1.0).is_ok());
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Streaming statistics substrate: Welford online moments, percentile
-//! estimation, and a fixed-bucket latency histogram (hdrhistogram is not
-//! available offline).  The SLO monitor computes P99 over sliding windows
-//! with these tools.
+//! estimation, a fixed-bucket latency histogram (hdrhistogram is not
+//! available offline), and the time-bounded `SlidingWindow` the SLO
+//! monitor computes P99 over.
+
+use std::collections::VecDeque;
 
 /// Online mean/variance (Welford).
 #[derive(Debug, Clone, Default)]
@@ -129,6 +131,96 @@ pub fn std(xs: &[f64]) -> f64 {
     }
     let m = mean(xs);
     (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Time-bounded sample window over a monotonic clock: a ring buffer of
+/// `(timestamp, value)` pairs that retains only the last `span_ms` of
+/// samples.  `push` is amortized O(1) (each sample is enqueued once and
+/// evicted once), so long-horizon serving runs never rescan their full
+/// lifetime history; percentile/mean queries cost O(window), bounded by
+/// `span_ms x arrival rate` rather than total served requests.
+///
+/// Determinism: the retained contents are a pure function of the pushed
+/// `(t, value)` sequence — eviction compares timestamps only, so identical
+/// seeds replay to bit-identical windows.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    span_ms: f64,
+    buf: VecDeque<(f64, f64)>,
+}
+
+impl SlidingWindow {
+    pub fn new(span_ms: f64) -> SlidingWindow {
+        SlidingWindow {
+            span_ms,
+            buf: VecDeque::new(),
+        }
+    }
+
+    pub fn span_ms(&self) -> f64 {
+        self.span_ms
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Record `value` at time `t` (ms).  Timestamps must be non-decreasing
+    /// (the DES pops events in time order); samples older than
+    /// `t - span_ms` are evicted from the front.
+    pub fn push(&mut self, t: f64, value: f64) {
+        debug_assert!(
+            self.buf.back().map_or(true, |&(t0, _)| t >= t0),
+            "SlidingWindow timestamps must be monotonic"
+        );
+        self.buf.push_back((t, value));
+        let cutoff = t - self.span_ms;
+        while let Some(&(t0, _)) = self.buf.front() {
+            if t0 < cutoff {
+                self.buf.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Values recorded at `t >= since` (newest-bounded by the span).
+    pub fn values_since(&self, since: f64) -> Vec<f64> {
+        self.buf
+            .iter()
+            .filter(|(t, _)| *t >= since)
+            .map(|(_, v)| *v)
+            .collect()
+    }
+
+    /// Percentile of the samples at `t >= since`; `None` below
+    /// `min_samples` (an SLO verdict needs statistical mass).
+    pub fn percentile_since(&self, since: f64, q: f64, min_samples: usize) -> Option<f64> {
+        let vals = self.values_since(since);
+        if vals.len() < min_samples.max(1) {
+            None
+        } else {
+            Some(percentile(&vals, q))
+        }
+    }
+
+    /// Mean of the samples at `t >= since`; `None` below `min_samples`.
+    pub fn mean_since(&self, since: f64, min_samples: usize) -> Option<f64> {
+        let vals = self.values_since(since);
+        if vals.len() < min_samples.max(1) {
+            None
+        } else {
+            Some(mean(&vals))
+        }
+    }
 }
 
 /// Log-bucketed latency histogram: 1 us .. ~100 s with ~2% relative
@@ -315,6 +407,45 @@ mod tests {
         a.clear();
         assert_eq!(a.count(), 0);
         assert!(a.percentile(0.5).is_nan());
+    }
+
+    #[test]
+    fn sliding_window_evicts_old_samples() {
+        let mut w = SlidingWindow::new(1_000.0);
+        for i in 0..100 {
+            w.push(i as f64 * 100.0, i as f64);
+        }
+        // last push at t=9900 -> cutoff 8900 -> retains t in [8900, 9900]
+        assert_eq!(w.len(), 11, "window holds only the last second");
+        let vals = w.values_since(9_500.0);
+        assert_eq!(vals, vec![95.0, 96.0, 97.0, 98.0, 99.0]);
+    }
+
+    #[test]
+    fn sliding_window_percentile_and_mean() {
+        let mut w = SlidingWindow::new(10_000.0);
+        for i in 1..=100 {
+            w.push(i as f64, i as f64);
+        }
+        let p99 = w.percentile_since(0.0, 0.99, 20).unwrap();
+        assert!((p99 - 99.0).abs() <= 1.0);
+        assert!(w.percentile_since(0.0, 0.99, 200).is_none(), "min_samples");
+        let m = w.mean_since(51.0, 1).unwrap();
+        assert!((m - 75.5).abs() < 1e-9);
+        assert!(w.mean_since(1_000.0, 1).is_none(), "no samples in range");
+    }
+
+    #[test]
+    fn sliding_window_bounded_versus_lifetime() {
+        // The size after N pushes depends on the span, not on N — the
+        // property that makes long-horizon monitor ticks O(window).
+        let mut w = SlidingWindow::new(500.0);
+        for i in 0..1_000_000u64 {
+            w.push(i as f64, 1.0);
+        }
+        assert!(w.len() <= 502, "window grew with lifetime: {}", w.len());
+        w.clear();
+        assert!(w.is_empty());
     }
 
     #[test]

@@ -44,6 +44,24 @@ pub fn table1_workloads() -> Vec<WorkloadSpec> {
     ]
 }
 
+/// Split one workload's arrival stream into `k` even rate shares — the
+/// per-replica traffic split used when a single gpulet (or a whole weaker
+/// GPU) cannot sustain the workload's rate.  The SLO is unchanged: every
+/// replica must individually meet the latency target on its share.
+pub fn replica_shares(spec: &WorkloadSpec, k: usize) -> Vec<WorkloadSpec> {
+    let k = k.max(1);
+    (0..k)
+        .map(|i| {
+            let mut s = spec.clone();
+            s.rate_rps = spec.rate_rps / k as f64;
+            if k > 1 {
+                s.name = format!("{}#{}", spec.name, i + 1);
+            }
+            s
+        })
+        .collect()
+}
+
 /// Request arrival process for one workload.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ArrivalKind {
@@ -118,6 +136,22 @@ mod tests {
         assert_eq!(w[11].name, "W12(ssd)");
         assert_eq!(w[9].slo_ms, 40.0); // W10 = App3 ResNet-50
         assert_eq!(w[3].rate_rps, 150.0); // W4 = App1 SSD
+    }
+
+    #[test]
+    fn replica_shares_preserve_total_rate_and_slo() {
+        let spec = WorkloadSpec::new(3, Model::Ssd, 25.0, 450.0);
+        let shares = replica_shares(&spec, 3);
+        assert_eq!(shares.len(), 3);
+        let total: f64 = shares.iter().map(|s| s.rate_rps).sum();
+        assert!((total - 450.0).abs() < 1e-9);
+        assert!(shares.iter().all(|s| s.slo_ms == 25.0));
+        assert_eq!(shares[0].name, "W4(ssd)#1");
+        assert_eq!(shares[2].name, "W4(ssd)#3");
+        // k = 1 keeps the original name and rate
+        let one = replica_shares(&spec, 1);
+        assert_eq!(one[0].name, spec.name);
+        assert_eq!(one[0].rate_rps, 450.0);
     }
 
     #[test]

@@ -42,6 +42,56 @@ fn fifo_order_survives_incremental_scheduling() {
 }
 
 #[test]
+fn serving_pipeline_bit_identical_per_seed() {
+    // Identical seeds must replay bit-identically through the decomposed
+    // router/batcher/monitor pipeline — exercised on a multi-replica plan
+    // so the routing path itself is covered.
+    use igniter::coordinator::{ClusterSim, Policy};
+    use igniter::gpu::Model;
+    use igniter::provisioner::{self, ProfiledSystem, WorkloadSpec};
+    use igniter::workload::ArrivalKind;
+
+    let (hw, wls) = igniter::profiler::profile_all(GpuKind::V100, 42);
+    let sys = ProfiledSystem {
+        hw,
+        coeffs: igniter::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    };
+    // a rate just beyond one gpulet forces a replica split
+    let rate =
+        igniter::provisioner::igniter::over_capacity_rate(&sys, Model::ResNet50, 40.0, 400.0);
+    let specs = vec![WorkloadSpec::new(0, Model::ResNet50, 40.0, rate)];
+    let plan = provisioner::provision(&sys, &specs);
+    assert!(plan.replica_count(0) >= 2, "{plan:?}");
+
+    let run = |seed: u64| {
+        let mut sim = ClusterSim::new(
+            GpuKind::V100,
+            &plan,
+            &specs,
+            Policy::IgniterShadow,
+            ArrivalKind::Poisson,
+            seed,
+            &[],
+        );
+        sim.set_horizon(6_000.0, 500.0);
+        sim.run()
+            .iter()
+            .map(|s| {
+                (
+                    s.served,
+                    s.arrivals,
+                    s.p99_ms.to_bits(),
+                    s.mean_ms.to_bits(),
+                    s.replica_served.clone(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(9), run(9), "same seed drifted");
+    assert_ne!(run(9), run(10), "seed has no effect on serving");
+}
+
+#[test]
 fn profiler_is_bit_identical_per_seed() {
     // Two independent profiling passes with the same seed must agree on
     // every fitted coefficient exactly (PartialEq on f64 = bitwise here,

@@ -3,11 +3,11 @@
 //! failover semantics.
 
 use igniter::coordinator::{ClusterSim, Policy};
-use igniter::gpu::{GpuKind, ALL_MODELS};
-use igniter::provisioner::{igniter as ig, ProfiledSystem};
+use igniter::gpu::{GpuKind, Model, ALL_MODELS};
+use igniter::provisioner::{igniter as ig, ProfiledSystem, WorkloadSpec};
+use igniter::util::lazy::Lazy;
 use igniter::util::quick::forall;
 use igniter::workload::{app_workloads, table1_workloads, ArrivalKind};
-use igniter::util::lazy::Lazy;
 
 static SYS: Lazy<ProfiledSystem> = Lazy::new(|| {
     let (hw, wls) = igniter::profiler::profile_all(GpuKind::V100, 42);
@@ -202,6 +202,94 @@ fn shadow_with_no_headroom_still_switches() {
     // (shadow extra is capped by the remaining headroom)
     assert!(stats[0].shadow_switches <= 1);
     assert!(stats[0].final_resources <= 1.0 + 1e-9);
+}
+
+#[test]
+fn over_capacity_workload_replicates_and_meets_slo() {
+    // A workload whose rate exceeds what a single V100 gpulet can sustain
+    // must provision >= 2 rate-sharing replicas (possibly on different
+    // GPUs) and still meet its P99 SLO end-to-end through the
+    // router/batcher/monitor pipeline.
+    let rate = ig::over_capacity_rate(&SYS, Model::ResNet50, 40.0, 400.0);
+    let specs = vec![WorkloadSpec::new(0, Model::ResNet50, 40.0, rate)];
+    let plan = ig::provision(&SYS, &specs);
+    assert!(
+        plan.replica_count(0) >= 2,
+        "rate {rate:.0} should need replicas: {plan:?}"
+    );
+    plan.validate(1, SYS.hw.r_max).unwrap();
+    ig::validate_replica_shares(&SYS, &specs, &plan).unwrap();
+
+    let mut sim = ClusterSim::new(
+        GpuKind::V100,
+        &plan,
+        &specs,
+        Policy::IgniterShadow,
+        ArrivalKind::Constant,
+        17,
+        &[],
+    );
+    sim.set_horizon(10_000.0, 1_000.0);
+    let stats = sim.run();
+    assert_eq!(stats.len(), 1, "stats aggregate per workload");
+    assert!(
+        !stats[0].violation,
+        "P99 {:.2} > SLO {:.0}",
+        stats[0].p99_ms, specs[0].slo_ms
+    );
+    assert!(
+        !stats[0].throughput_violation,
+        "achieved {:.0} < rate {rate:.0}",
+        stats[0].achieved_rps
+    );
+    assert_eq!(stats[0].replica_served.len(), plan.replica_count(0));
+    assert!(
+        stats[0].replica_served.iter().all(|&s| s > 0),
+        "a replica was starved: {:?}",
+        stats[0].replica_served
+    );
+}
+
+#[test]
+fn request_conservation_property() {
+    // Arrivals observed inside the horizon == served + still-queued
+    // (waiting or in flight) per workload, across random seeds, rate
+    // scalings (including overload), and all three serving policies.
+    let base = table1_workloads();
+    let plan = ig::provision(&SYS, &base);
+    forall(
+        33,
+        10,
+        |r| ((r.next_u64(), 0.2 + 2.8 * r.f64()), r.below(3)),
+        |&((seed, scale), policy_idx)| {
+            let mut specs = table1_workloads();
+            for s in &mut specs {
+                s.rate_rps = (s.rate_rps * scale).max(1.0);
+            }
+            let policy = match policy_idx {
+                0 => Policy::Static,
+                1 => Policy::IgniterShadow,
+                _ => Policy::GsliceTuner { period_ms: 2_000.0 },
+            };
+            let arrival = if seed % 2 == 0 {
+                ArrivalKind::Constant
+            } else {
+                ArrivalKind::Poisson
+            };
+            let mut sim =
+                ClusterSim::new(GpuKind::V100, &plan, &specs, policy, arrival, seed, &[]);
+            sim.set_horizon(5_000.0, 500.0);
+            for st in sim.run() {
+                if st.arrivals != st.served + st.still_queued {
+                    return Err(format!(
+                        "{}: arrivals {} != served {} + queued {} (seed {seed}, x{scale:.2})",
+                        st.name, st.arrivals, st.served, st.still_queued
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
