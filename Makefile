@@ -9,10 +9,19 @@
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: verify build test bench-build fmt-check clippy pytest artifacts clean
+.PHONY: verify build test test-invariants bench-build fmt-check clippy pytest artifacts clean
 
+# `test` already runs every integration target (serving invariants,
+# determinism, provisioner properties — the migration/autoscale sweep);
+# `bench-build` compiles the autoscale closed-loop bench.
 verify: build test bench-build fmt-check clippy pytest
 	@echo "verify: OK"
+
+# Standalone pass over just the serving/provisioning invariant +
+# determinism suites (subset of `make test`; handy while iterating on
+# the coordinator/provisioner).
+test-invariants:
+	$(CARGO) test -q --test serving_invariants --test determinism --test provisioner_invariants
 
 fmt-check:
 	$(CARGO) fmt --check

@@ -2,11 +2,12 @@
 //! run per strategy) and the real PJRT execution path per (model, batch)
 //! variant (the wall-clock compute cost behind EXPERIMENTS.md §Perf L3).
 
-use igniter::coordinator::{ClusterSim, Policy};
+use igniter::coordinator::{ClusterSim, Policy, Reprovisioner};
 use igniter::gpu::GpuKind;
 use igniter::provisioner::{self, ProfiledSystem};
 use igniter::runtime::{Engine, Manifest};
 use igniter::util::bench::{bench, bench_once};
+use igniter::workload::trace::{RateTrace, TraceKind};
 use igniter::workload::{app_workloads, ArrivalKind};
 use std::path::Path;
 
@@ -60,6 +61,42 @@ fn main() {
         long.mean_ns / served_120s.max(1) as f64,
         served_120s
     );
+
+    // Closed loop: estimator + online re-plans + shadow migrations on a
+    // live 60 s diurnal trace.  The overhead vs the static 120 s line
+    // above is the price of re-provisioning (per-tick EWMA + occasional
+    // Alg.-1 incremental placements) — it should stay a small multiple.
+    let epochs = 24;
+    let epoch_ms = 2_500.0;
+    let trace = RateTrace::generate(
+        TraceKind::Diurnal {
+            period_epochs: epochs,
+            floor: 0.35,
+        },
+        epochs,
+        specs.len(),
+        42,
+    );
+    bench("autoscale closed loop 12wl x 60s diurnal", 0, 3, || {
+        let mut sim = ClusterSim::new(
+            kind,
+            &plan,
+            &specs,
+            Policy::Static,
+            ArrivalKind::Constant,
+            42,
+            &[],
+        );
+        sim.set_serving_policy(Box::new(Reprovisioner::new(
+            sys.clone(),
+            specs.clone(),
+            plan.clone(),
+        )));
+        sim.set_rate_trace(&trace, epoch_ms);
+        sim.set_horizon(epochs as f64 * epoch_ms, 1_000.0);
+        let served: u64 = sim.run().iter().map(|s| s.served).sum();
+        (served, sim.migrations())
+    });
 
     // Real PJRT path (skipped when artifacts are absent or the runtime
     // is the offline stub).

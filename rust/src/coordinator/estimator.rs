@@ -1,0 +1,210 @@
+//! Online per-workload arrival-rate estimation — the sensing half of the
+//! closed re-provisioning loop (iGniter Sec. 5.3 adapts to workload
+//! changes by periodically re-provisioning only the affected workloads;
+//! this module decides *which* workloads those are).
+//!
+//! A `RateEstimator` counts arrivals in a time-bounded `SlidingWindow`
+//! and smooths the instantaneous rate with an EWMA on every monitor
+//! tick.  It flags **sustained** drift relative to the rate the current
+//! allocation was planned for: a short burst inside the plan's headroom
+//! is absorbed, but `SUSTAIN_TICKS` consecutive out-of-band ticks raise
+//! `Drift::Up` / `Drift::Down`.  The reprovisioner combines this with a
+//! predicted-SLO headroom check (observed rate approaching the predicted
+//! capacity of the allocation) to trigger a re-plan before queues build.
+//!
+//! Everything is a pure function of the pushed `(t, arrival)` sequence
+//! and the tick times, so closed-loop runs stay bit-identical per seed.
+
+use crate::util::stats::SlidingWindow;
+
+/// Span of the arrival-counting window (ms).  Long enough to smooth
+/// Poisson noise at low rates, short enough to react within a few ticks.
+pub const EST_WINDOW_MS: f64 = 5_000.0;
+/// EWMA smoothing factor applied to the windowed rate on each tick.
+pub const EWMA_ALPHA: f64 = 0.3;
+/// Sustained observed rate above `planned x UP_DRIFT` flags `Drift::Up`.
+pub const UP_DRIFT: f64 = 1.10;
+/// Sustained observed rate below `planned x DOWN_DRIFT` flags `Drift::Down`.
+pub const DOWN_DRIFT: f64 = 0.70;
+/// Consecutive out-of-band ticks before a drift verdict is trusted.
+pub const SUSTAIN_TICKS: u32 = 3;
+
+/// Direction of a sustained arrival-rate drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Drift {
+    /// The workload outgrew its allocation: re-plan eagerly.
+    Up,
+    /// The workload shrank well below its allocation: re-plan lazily to
+    /// release resources.
+    Down,
+}
+
+/// EWMA arrival-rate tracker for one workload.
+#[derive(Debug, Clone)]
+pub struct RateEstimator {
+    arrivals: SlidingWindow,
+    /// Rate the current allocation was planned for (req/s).
+    planned_rps: f64,
+    ewma_rps: f64,
+    ticked: bool,
+    verdict: Option<Drift>,
+    sustained: u32,
+}
+
+impl RateEstimator {
+    pub fn new(planned_rps: f64) -> RateEstimator {
+        RateEstimator {
+            arrivals: SlidingWindow::new(EST_WINDOW_MS),
+            planned_rps,
+            ewma_rps: planned_rps,
+            ticked: false,
+            verdict: None,
+            sustained: 0,
+        }
+    }
+
+    /// Record one arrival at virtual time `t` (ms).
+    pub fn on_arrival(&mut self, t: f64) {
+        self.arrivals.push(t, 1.0);
+    }
+
+    /// Update the estimate at a monitor tick; returns the smoothed rate.
+    pub fn on_tick(&mut self, now: f64) -> f64 {
+        let span_ms = EST_WINDOW_MS.min(now).max(1.0);
+        let n = self.arrivals.count_since(now - span_ms);
+        let inst = n as f64 / span_ms * 1000.0;
+        self.ewma_rps = if self.ticked {
+            EWMA_ALPHA * inst + (1.0 - EWMA_ALPHA) * self.ewma_rps
+        } else {
+            self.ticked = true;
+            inst
+        };
+        let v = if self.ewma_rps > self.planned_rps * UP_DRIFT {
+            Some(Drift::Up)
+        } else if self.ewma_rps < self.planned_rps * DOWN_DRIFT {
+            Some(Drift::Down)
+        } else {
+            None
+        };
+        if v == self.verdict {
+            if v.is_some() {
+                self.sustained += 1;
+            }
+        } else {
+            self.verdict = v;
+            self.sustained = u32::from(v.is_some());
+        }
+        self.ewma_rps
+    }
+
+    /// Current smoothed arrival rate (req/s).
+    pub fn rate_rps(&self) -> f64 {
+        self.ewma_rps
+    }
+
+    /// Rate the current allocation was planned for (req/s).
+    pub fn planned_rps(&self) -> f64 {
+        self.planned_rps
+    }
+
+    /// The drift verdict, once it has held for `SUSTAIN_TICKS` ticks.
+    pub fn sustained_drift(&self) -> Option<Drift> {
+        if self.sustained >= SUSTAIN_TICKS {
+            self.verdict
+        } else {
+            None
+        }
+    }
+
+    /// The workload was re-planned for `new_planned_rps`: rebase drift
+    /// detection on the new design point.
+    pub fn replanned(&mut self, new_planned_rps: f64) {
+        self.planned_rps = new_planned_rps;
+        self.verdict = None;
+        self.sustained = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(est: &mut RateEstimator, rate_rps: f64, from_ms: f64, to_ms: f64) {
+        let gap = 1000.0 / rate_rps;
+        let mut t = from_ms;
+        while t < to_ms {
+            est.on_arrival(t);
+            t += gap;
+        }
+    }
+
+    #[test]
+    fn tracks_a_steady_rate() {
+        let mut e = RateEstimator::new(200.0);
+        feed(&mut e, 200.0, 0.0, 6_000.0);
+        for tick in 1..=12 {
+            e.on_tick(tick as f64 * 500.0);
+        }
+        assert!((e.rate_rps() - 200.0).abs() < 20.0, "ewma {}", e.rate_rps());
+        assert_eq!(e.sustained_drift(), None);
+    }
+
+    #[test]
+    fn sustained_up_drift_flags_after_sustain_ticks() {
+        let mut e = RateEstimator::new(100.0);
+        // 3x the planned rate, long enough to dominate the window
+        feed(&mut e, 300.0, 0.0, 8_000.0);
+        let mut first_flag_tick = None;
+        for tick in 1..=16 {
+            e.on_tick(tick as f64 * 500.0);
+            if e.sustained_drift().is_some() && first_flag_tick.is_none() {
+                first_flag_tick = Some(tick);
+            }
+        }
+        assert_eq!(e.sustained_drift(), Some(Drift::Up));
+        let t = first_flag_tick.expect("never flagged");
+        assert!(t >= SUSTAIN_TICKS as usize, "flagged too early (tick {t})");
+    }
+
+    #[test]
+    fn short_burst_within_headroom_does_not_flag() {
+        // A 0.2 s 3x burst adds ~40 arrivals to the 5 s window: the
+        // windowed rate peaks below planned x UP_DRIFT, so no verdict.
+        let mut e = RateEstimator::new(100.0);
+        feed(&mut e, 100.0, 0.0, 4_000.0);
+        feed(&mut e, 300.0, 4_000.0, 4_200.0);
+        feed(&mut e, 100.0, 4_200.0, 10_000.0);
+        for tick in 1..=20 {
+            e.on_tick(tick as f64 * 500.0);
+            assert_eq!(e.sustained_drift(), None, "flagged at tick {tick}");
+        }
+    }
+
+    #[test]
+    fn down_drift_and_replanned_rebase() {
+        let mut e = RateEstimator::new(400.0);
+        feed(&mut e, 100.0, 0.0, 8_000.0);
+        for tick in 1..=16 {
+            e.on_tick(tick as f64 * 500.0);
+        }
+        assert_eq!(e.sustained_drift(), Some(Drift::Down));
+        // after re-planning for the observed rate the verdict resets
+        e.replanned(e.rate_rps() * 1.2);
+        assert_eq!(e.sustained_drift(), None);
+        feed(&mut e, 100.0, 8_000.0, 12_000.0);
+        for tick in 17..=24 {
+            e.on_tick(tick as f64 * 500.0);
+        }
+        assert_eq!(e.sustained_drift(), None, "re-flagged at the new design point");
+    }
+
+    #[test]
+    fn deterministic_per_input_sequence() {
+        let run = || {
+            let mut e = RateEstimator::new(250.0);
+            feed(&mut e, 320.0, 0.0, 7_000.0);
+            (1..=14).map(|t| e.on_tick(t as f64 * 500.0).to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,24 +1,34 @@
 //! Layer-3 serving coordinator, decomposed into a composable pipeline:
 //!
-//! * `router`  — request routing across a workload's replica group
+//! * `router`    — request routing across a workload's replica group
 //!   (least-outstanding-requests, weighted-by-resources);
-//! * `batcher` — the Triton-style adaptive batcher behind `BatchPolicy`;
-//! * `monitor` — SLO monitor actions behind `ServingPolicy` (iGniter
-//!   shadow failover, GSLICE reactive tuner, static);
-//! * `server`  — the deterministic discrete-event loop (`ClusterSim`)
-//!   that owns devices + replica state and delegates every decision;
-//! * `realrun` — the real-compute bridge to the PJRT runtime.
+//! * `batcher`   — the Triton-style adaptive batcher behind `BatchPolicy`;
+//! * `estimator` — online per-workload arrival-rate EWMA + sustained
+//!   drift detection (the sensing half of the closed loop);
+//! * `monitor`   — SLO monitor actions behind `ServingPolicy` (iGniter
+//!   shadow failover, GSLICE reactive tuner, static, and the closed-loop
+//!   `Reprovisioner` that re-plans drifted workloads online);
+//! * `server`    — the deterministic discrete-event loop (`ClusterSim`)
+//!   that owns devices + replica state, delegates every decision, and
+//!   realizes plan-deltas via shadow-instance migration (warm up, switch
+//!   over, drain before retire);
+//! * `realrun`   — the real-compute bridge to the PJRT runtime.
 
 pub mod batcher;
+pub mod estimator;
 pub mod monitor;
 pub mod realrun;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchDecision, BatchPolicy, BatchView, EagerBatcher, TritonAdaptive};
+pub use estimator::{Drift, RateEstimator};
 pub use monitor::{
-    GsliceTuner, PolicyCtx, ServingPolicy, ShadowFailover, StaticPolicy, MONITOR_PERIOD_MS,
-    SHADOW_EXTRA,
+    GsliceTuner, PolicyCtx, Reprovisioner, ServingPolicy, ShadowFailover, StaticPolicy,
+    DEFAULT_SAFETY, MONITOR_PERIOD_MS, SHADOW_EXTRA,
 };
 pub use router::{RouteStrategy, Router};
-pub use server::{ClusterSim, Policy, ReplicaState, TimelinePoint, WorkloadStats};
+pub use server::{
+    ClusterSim, Policy, ReplicaPhase, ReplicaState, TimelinePoint, WorkloadStats,
+    MIGRATION_WARMUP_MS,
+};

@@ -1,15 +1,21 @@
 //! SLO monitoring policies behind the `ServingPolicy` trait: the iGniter
 //! shadow failover (Sec. 4.2 "Dealing with Performance Prediction
-//! Errors"), the GSLICE reactive threshold tuner, and the static
-//! no-adjustment baseline.
+//! Errors"), the GSLICE reactive threshold tuner, the static
+//! no-adjustment baseline, and the closed-loop `Reprovisioner` (Sec. 5.3:
+//! periodically re-provision only the workloads whose arrival rate
+//! drifted, migrating them via shadow instances).
 //!
 //! A policy observes per-replica latency windows on every monitor tick
 //! (and optional tuner period) through `PolicyCtx`, and may act on the
-//! devices — grow a partition, kill/relaunch a process.  The event loop
-//! in `server.rs` knows nothing about any specific policy.
+//! devices — grow a partition, kill/relaunch a process.  A policy may
+//! also return `PlanDelta`s from `reprovision`; the event loop realizes
+//! them (shadow warm-up, drain-before-retire) without knowing which
+//! policy asked.  `server.rs` knows nothing about any specific policy.
 
-use super::server::ReplicaState;
+use super::estimator::{Drift, RateEstimator};
+use super::server::{ReplicaPhase, ReplicaState};
 use crate::gpu::GpuDevice;
+use crate::provisioner::{diff_plans, OnlinePlanner, Plan, PlanDelta, ProfiledSystem, WorkloadSpec};
 
 /// Extra GPU resources granted to an activated shadow process: the smaller
 /// of 10 % (the paper's measured max prediction error) and the remaining
@@ -30,8 +36,17 @@ pub struct PolicyCtx<'a> {
 /// An online serving policy applied while the event loop runs.
 pub trait ServingPolicy {
     fn name(&self) -> &'static str;
+    /// Called on every request arrival with its workload id (rate-sensing
+    /// policies feed their estimators here; default: ignore).
+    fn on_arrival(&mut self, _now: f64, _workload: usize) {}
     /// Called every `MONITOR_PERIOD_MS`.
     fn on_monitor(&mut self, _now: f64, _ctx: &mut PolicyCtx) {}
+    /// Called every `MONITOR_PERIOD_MS`, after `on_monitor`: plan deltas
+    /// the event loop must realize via in-place resize or shadow-instance
+    /// migration (default: none).
+    fn reprovision(&mut self, _now: f64, _ctx: &mut PolicyCtx) -> Vec<PlanDelta> {
+        Vec::new()
+    }
     /// Period of dedicated tune ticks, if the policy wants them.
     fn tune_period_ms(&self) -> Option<f64> {
         None
@@ -95,8 +110,9 @@ impl ServingPolicy for ShadowFailover {
 
     fn on_monitor(&mut self, now: f64, ctx: &mut PolicyCtx) {
         for p in 0..ctx.replicas.len() {
-            if ctx.replicas[p].shadow_active {
-                continue; // one switch per replica
+            if ctx.replicas[p].shadow_active || ctx.replicas[p].phase != ReplicaPhase::Active {
+                continue; // one switch per replica; never touch a
+                          // warming/draining/retired migration replica
             }
             let rep = &ctx.replicas[p];
             if let Some(p99) = rep
@@ -134,6 +150,9 @@ impl ServingPolicy for GsliceTuner {
     fn on_tune(&mut self, now: f64, ctx: &mut PolicyCtx) {
         for p in 0..ctx.replicas.len() {
             let rep = &ctx.replicas[p];
+            if rep.phase != ReplicaPhase::Active {
+                continue;
+            }
             let Some(avg) = rep.window.mean_since(now - 10_000.0, 10) else {
                 continue;
             };
@@ -152,5 +171,337 @@ impl ServingPolicy for GsliceTuner {
                 ctx.replicas[p].resources = r;
             }
         }
+    }
+}
+
+/// Observed rate above this fraction of the allocation's predicted
+/// capacity counts as headroom collapse (re-plan before queues build).
+pub const HEADROOM_COLLAPSE: f64 = 0.90;
+/// Consecutive collapsed ticks before the headroom trigger fires.
+pub const COLLAPSE_SUSTAIN: u32 = 2;
+/// Default re-plan padding: allocations target `observed x this`, so the
+/// plan keeps absorbing rate growth while the estimator chases it.
+pub const DEFAULT_SAFETY: f64 = 1.2;
+
+/// The closed re-provisioning loop (iGniter Sec. 5.3): per-workload
+/// `RateEstimator`s sense sustained arrival-rate drift or predicted-SLO
+/// headroom collapse; on a trigger the embedded `OnlinePlanner` re-plans
+/// **only the drifted workload** (`OnlinePlanner::respec`) and the
+/// resulting plan-delta is returned to the event loop, which realizes it
+/// via in-place partition resizes or shadow-instance migration (warm up
+/// the new replicas, drain the old).  A periodic `rebalance` re-packs the
+/// whole active set when that releases devices.
+pub struct Reprovisioner {
+    planner: OnlinePlanner,
+    /// serving workload id -> current planner id
+    live_ids: Vec<usize>,
+    estimators: Vec<RateEstimator>,
+    collapse_ticks: Vec<u32>,
+    last_migration_ms: Vec<f64>,
+    last_rebalance_ms: f64,
+    migrations_planned: u32,
+    /// Re-plan for `observed x safety` so the fresh allocation keeps
+    /// headroom while the estimator chases a rising rate.
+    pub safety: f64,
+    /// Per-workload cooldown between re-plans (ms).
+    pub min_gap_ms: f64,
+    /// Period of whole-cluster re-pack attempts (ms); 0 disables.
+    pub rebalance_period_ms: f64,
+}
+
+impl Reprovisioner {
+    /// `specs`/`plan` must be the set the plan was provisioned for — the
+    /// estimators treat each spec's rate as its planned design point.
+    pub fn new(sys: ProfiledSystem, specs: Vec<WorkloadSpec>, plan: Plan) -> Reprovisioner {
+        let n = specs.len();
+        let estimators = specs.iter().map(|s| RateEstimator::new(s.rate_rps)).collect();
+        Reprovisioner {
+            planner: OnlinePlanner::from_plan(sys, specs, plan),
+            live_ids: (0..n).collect(),
+            estimators,
+            collapse_ticks: vec![0; n],
+            last_migration_ms: vec![f64::NEG_INFINITY; n],
+            last_rebalance_ms: 0.0,
+            migrations_planned: 0,
+            safety: DEFAULT_SAFETY,
+            // three monitor ticks: short enough to track a steep diurnal
+            // slope step-by-step, long enough to stop per-tick churn
+            min_gap_ms: 1_500.0,
+            rebalance_period_ms: 10_000.0,
+        }
+    }
+
+    /// Number of re-plans (drift respecs + adopted rebalances) so far.
+    pub fn migrations_planned(&self) -> u32 {
+        self.migrations_planned
+    }
+
+    /// The planner's current view of the cluster.
+    pub fn plan(&self) -> &Plan {
+        self.planner.plan()
+    }
+
+    /// Smoothed observed arrival rate of a serving workload (req/s).
+    pub fn observed_rps(&self, workload: usize) -> f64 {
+        self.estimators[workload].rate_rps()
+    }
+
+    /// Predicted capacity (req/s) of a workload's current allocation.
+    fn capacity_rps(&self, workload: usize) -> Option<f64> {
+        let id = self.live_ids[workload];
+        let (_, thpt) = self.planner.predict(id)?;
+        Some(thpt * self.planner.plan().replica_count(id).max(1) as f64)
+    }
+
+    fn migration_in_flight(ctx: &PolicyCtx, workload: Option<usize>) -> bool {
+        ctx.replicas.iter().any(|r| {
+            workload.map_or(true, |w| r.workload == w)
+                && matches!(r.phase, ReplicaPhase::Warming | ReplicaPhase::Draining)
+        })
+    }
+}
+
+impl ServingPolicy for Reprovisioner {
+    fn name(&self) -> &'static str {
+        "reprovisioner"
+    }
+
+    fn on_arrival(&mut self, now: f64, workload: usize) {
+        self.estimators[workload].on_arrival(now);
+    }
+
+    fn reprovision(&mut self, now: f64, ctx: &mut PolicyCtx) -> Vec<PlanDelta> {
+        // 1. tick every estimator (the EWMA must advance even for
+        //    workloads that cannot act this tick)
+        for est in &mut self.estimators {
+            est.on_tick(now);
+        }
+        let mut deltas = Vec::new();
+
+        // 2. drift / headroom triggers, one workload at a time
+        for w in 0..self.estimators.len() {
+            let observed = self.estimators[w].rate_rps();
+            // collapse = the observed rate is eating into the allocation's
+            // predicted capacity.  On a safety-padded plan (capacity ~=
+            // 1.2x observed) this fires ~8% above the last design point —
+            // before saturation.  On a plan provisioned with no pad it
+            // fires once at the steady rate, the re-plan establishes the
+            // pad, and the loop goes quiet (cap then > observed / 0.9).
+            let collapsed = self
+                .capacity_rps(w)
+                .map_or(false, |cap| observed > cap * HEADROOM_COLLAPSE);
+            self.collapse_ticks[w] = if collapsed { self.collapse_ticks[w] + 1 } else { 0 };
+            if now - self.last_migration_ms[w] < self.min_gap_ms {
+                continue;
+            }
+            if Self::migration_in_flight(ctx, Some(w)) {
+                continue; // one migration per workload at a time
+            }
+            let drift = self.estimators[w].sustained_drift();
+            if drift.is_none() && self.collapse_ticks[w] < COLLAPSE_SUSTAIN {
+                continue;
+            }
+            // Down-drift re-plans are lazy by construction (DOWN_DRIFT
+            // hysteresis in the estimator); up-drift and collapse are
+            // eager.  Re-plan only this workload, for the observed rate
+            // plus safety headroom — falling back toward the bare
+            // observed rate when the padded target is infeasible on one
+            // gpulet (near a workload's peak), and never churning on a
+            // target that would not actually change the design point.
+            let planned = self.estimators[w].planned_rps();
+            let candidates = [
+                (observed * self.safety).max(1.0),
+                (observed * 1.05).max(1.0),
+                observed.max(1.0),
+            ];
+            let mut adopted = None;
+            let before = self.planner.plan().clone();
+            for &target in &candidates {
+                let gains = if drift == Some(Drift::Down) {
+                    target < planned
+                } else {
+                    target > planned * 1.02
+                };
+                if !gains {
+                    break;
+                }
+                if let Ok((new_id, _)) = self.planner.respec(self.live_ids[w], target) {
+                    adopted = Some((new_id, target));
+                    break;
+                }
+            }
+            self.collapse_ticks[w] = 0;
+            self.last_migration_ms[w] = now; // cooldown even on no-op
+            if let Some((new_id, target)) = adopted {
+                let mut new_ids = self.live_ids.clone();
+                new_ids[w] = new_id;
+                deltas.extend(diff_plans(
+                    &before,
+                    self.planner.plan(),
+                    &self.live_ids,
+                    &new_ids,
+                ));
+                self.live_ids = new_ids;
+                self.estimators[w].replanned(target);
+                self.migrations_planned += 1;
+            }
+        }
+
+        // 3. periodic whole-cluster re-pack, only in quiet moments
+        if self.rebalance_period_ms > 0.0
+            && now - self.last_rebalance_ms >= self.rebalance_period_ms
+            && deltas.is_empty()
+            && !Self::migration_in_flight(ctx, None)
+        {
+            self.last_rebalance_ms = now;
+            let before = self.planner.plan().clone();
+            if self.planner.rebalance().is_some() {
+                let moved = diff_plans(
+                    &before,
+                    self.planner.plan(),
+                    &self.live_ids,
+                    &self.live_ids,
+                );
+                for d in &moved {
+                    if let PlanDelta::Migrate(m) = d {
+                        self.last_migration_ms[m.workload] = now;
+                    }
+                }
+                if !moved.is_empty() {
+                    self.migrations_planned += 1;
+                }
+                deltas.extend(moved);
+            }
+        }
+        deltas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuKind;
+    use crate::provisioner::{self, PlanDelta};
+    use crate::workload::table1_workloads;
+
+    fn sys() -> ProfiledSystem {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        ProfiledSystem {
+            hw,
+            coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+        }
+    }
+
+    /// Drive the reprovisioner directly (no event loop): feed every
+    /// workload constant arrivals at `rates[w]` over the tick range,
+    /// carrying per-workload arrival clocks in `t_next`.
+    fn drive(
+        rp: &mut Reprovisioner,
+        rates: &[f64],
+        ticks: std::ops::RangeInclusive<u32>,
+        t_next: &mut [f64],
+    ) -> Vec<PlanDelta> {
+        let mut devices: Vec<GpuDevice> = Vec::new();
+        let mut replicas: Vec<ReplicaState> = Vec::new();
+        let mut out = Vec::new();
+        for tick in ticks {
+            let now = tick as f64 * MONITOR_PERIOD_MS;
+            for (w, &rate) in rates.iter().enumerate() {
+                let gap = 1000.0 / rate;
+                while t_next[w] < now {
+                    rp.on_arrival(t_next[w], w);
+                    t_next[w] += gap;
+                }
+            }
+            let mut ctx = PolicyCtx {
+                devices: &mut devices,
+                replicas: &mut replicas,
+            };
+            out.extend(rp.reprovision(now, &mut ctx));
+        }
+        out
+    }
+
+    fn planned_rates(specs: &[crate::provisioner::WorkloadSpec]) -> Vec<f64> {
+        specs.iter().map(|s| s.rate_rps).collect()
+    }
+
+    #[test]
+    fn reprovisioner_replans_on_sustained_up_drift() {
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let mut rp = Reprovisioner::new(s, specs.clone(), plan);
+        rp.rebalance_period_ms = 0.0; // isolate the drift path
+        // W1 (planned 500 rps) observes a sustained 1000 rps; the others
+        // stay at their design points
+        let mut rates = planned_rates(&specs);
+        rates[0] = 1000.0;
+        let mut clocks = vec![0.0; specs.len()];
+        let deltas = drive(&mut rp, &rates, 1..=24, &mut clocks);
+        assert!(rp.migrations_planned() >= 1, "never re-planned");
+        assert!(
+            deltas.iter().any(|d| match d {
+                PlanDelta::Migrate(m) => m.workload == 0,
+                PlanDelta::Resize { workload, .. } => *workload == 0,
+            }),
+            "no delta for the drifted workload: {deltas:?}"
+        );
+        // the new design point covers the observed rate with headroom
+        assert!(rp.observed_rps(0) > 900.0, "ewma {}", rp.observed_rps(0));
+        // ...and its allocation is predicted-SLO feasible
+        let cap = rp.capacity_rps(0).expect("workload lost its allocation");
+        assert!(cap >= 1000.0 * 0.999, "capacity {cap:.0} below observed");
+    }
+
+    #[test]
+    fn reprovisioner_shrinks_on_sustained_down_drift() {
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let before_alloc = plan.find(0).unwrap().1.resources;
+        let mut rp = Reprovisioner::new(s, specs.clone(), plan);
+        rp.rebalance_period_ms = 0.0;
+        // W1 collapses to a tenth of its planned rate
+        let mut rates = planned_rates(&specs);
+        rates[0] = 50.0;
+        let mut clocks = vec![0.0; specs.len()];
+        let deltas = drive(&mut rp, &rates, 1..=24, &mut clocks);
+        assert!(rp.migrations_planned() >= 1, "never re-planned");
+        assert!(!deltas.is_empty());
+        let after = rp.plan().replicas(rp.live_ids[0]);
+        assert_eq!(after.len(), 1);
+        assert!(
+            after[0].1.resources < before_alloc - 1e-9,
+            "allocation did not shrink: {} -> {}",
+            before_alloc,
+            after[0].1.resources
+        );
+    }
+
+    #[test]
+    fn reprovisioner_steady_rate_converges_and_goes_quiet() {
+        // At a steady rate the loop may re-plan the fed workload at most
+        // once — establishing its safety pad on a plan that was
+        // provisioned without one — and must then stay quiet: once
+        // capacity ~= observed x safety, neither drift nor headroom
+        // collapse can re-trigger.
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let mut rp = Reprovisioner::new(s, specs.clone(), plan);
+        rp.rebalance_period_ms = 0.0;
+        let rates = planned_rates(&specs);
+        let mut clocks = vec![0.0; specs.len()];
+        drive(&mut rp, &rates, 1..=24, &mut clocks);
+        let settled = rp.migrations_planned();
+        assert!(
+            settled <= specs.len() as u32,
+            "steady rates churned {settled} re-plans"
+        );
+        // a further long stretch at the same rates changes nothing
+        let late = drive(&mut rp, &rates, 25..=48, &mut clocks);
+        assert!(late.is_empty(), "late churn: {late:?}");
+        assert_eq!(rp.migrations_planned(), settled);
     }
 }

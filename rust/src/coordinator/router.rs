@@ -64,7 +64,13 @@ impl Router {
             }
             RouteStrategy::WeightedByResources => {
                 let credits = &mut self.credits[w];
-                debug_assert_eq!(credits.len(), group.len());
+                // The eligible set changes across a shadow migration (new
+                // replicas join, draining ones leave): restart the credit
+                // walk at the new size.  Deterministic — a pure function
+                // of the routed group sizes.
+                if credits.len() != group.len() {
+                    *credits = vec![0.0; group.len()];
+                }
                 let mut total = 0.0;
                 for (j, &p) in group.iter().enumerate() {
                     // a replica always drains at least a floor share, so a
@@ -104,6 +110,23 @@ mod tests {
         assert_eq!(picked, 11, "first of the tied minima wins");
         let depths2 = [0usize, 2, 2];
         assert_eq!(r.route(0, &[10, 11, 12], |p| depths2[p - 10], |_| 1.0), 10);
+    }
+
+    #[test]
+    fn weighted_credits_restart_on_group_size_change() {
+        // Simulates a shadow switch: one replica group is replaced by a
+        // two-replica group mid-run; the credit walk must adapt instead
+        // of panicking or starving a member.
+        let mut r = Router::new(RouteStrategy::WeightedByResources, &[1]);
+        assert_eq!(r.route(0, &[0], |_| 0, |_| 0.5), 0);
+        let weights = [0.0, 0.25, 0.25];
+        let mut counts = [0usize; 3];
+        for _ in 0..100 {
+            let p = r.route(0, &[1, 2], |_| 0, |p| weights[p]);
+            counts[p] += 1;
+        }
+        assert_eq!(counts[1], 50);
+        assert_eq!(counts[2], 50);
     }
 
     #[test]

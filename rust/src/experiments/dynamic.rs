@@ -46,7 +46,32 @@ fn violations(sys: &ProfiledSystem, specs: &[WorkloadSpec], plan: &provisioner::
         .count()
 }
 
-pub fn dynamic(kind: GpuKind) -> Result<()> {
+/// Summary of the epoch-replay comparison — structured so the golden
+/// regression test can pin the whole output while the live closed-loop
+/// path (`experiments::autoscale`) evolves next to it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicSummary {
+    pub epochs: usize,
+    pub static_cost: f64,
+    pub re_cost: f64,
+    pub re_viol: usize,
+    pub online_cost: f64,
+    pub online_viol: usize,
+}
+
+impl DynamicSummary {
+    /// Stable text form for the checked-in golden (6 decimals: immune to
+    /// last-bit float noise, sensitive to any real behavioral drift).
+    pub fn golden_lines(&self) -> String {
+        format!(
+            "epochs {}\nstatic_cost {:.6}\nre_cost {:.6}\nre_viol {}\nonline_cost {:.6}\nonline_viol {}\n",
+            self.epochs, self.static_cost, self.re_cost, self.re_viol,
+            self.online_cost, self.online_viol
+        )
+    }
+}
+
+pub fn dynamic_summary(kind: GpuKind) -> Result<DynamicSummary> {
     let sys = profiled_system(kind, SEED);
     let specs = app_workloads();
     let epochs = 24; // one simulated day, hourly re-provisioning
@@ -121,6 +146,26 @@ pub fn dynamic(kind: GpuKind) -> Result<()> {
         }
     }
 
+    Ok(DynamicSummary {
+        epochs,
+        static_cost,
+        re_cost,
+        re_viol,
+        online_cost,
+        online_viol,
+    })
+}
+
+pub fn dynamic(kind: GpuKind) -> Result<()> {
+    let DynamicSummary {
+        static_cost,
+        re_cost,
+        re_viol,
+        online_cost,
+        online_viol,
+        ..
+    } = dynamic_summary(kind)?;
+
     let mut t = Table::new(
         "Dynamic provisioning over a 24-epoch diurnal trace (future-work 4): \
          GPU-hours and predicted violations per policy",
@@ -184,5 +229,38 @@ mod tests {
     #[test]
     fn dynamic_harness_runs() {
         dynamic(GpuKind::V100).unwrap();
+    }
+
+    #[test]
+    fn golden_summary_regression() {
+        // Pin the full epoch-replay output so it cannot silently drift
+        // while the live autoscale path is grown beside it.  First run on
+        // a fresh machine blesses rust/tests/golden/dynamic_summary.txt;
+        // every later run must reproduce it exactly (at 1e-6 precision).
+        let a = dynamic_summary(GpuKind::V100).unwrap();
+        let b = dynamic_summary(GpuKind::V100).unwrap();
+        assert_eq!(a, b, "epoch replay is not deterministic");
+        // structural floor, golden or not: re-provisioning must save cost
+        // with zero predicted violations in every policy
+        assert!(a.static_cost > 0.0);
+        assert!(a.re_cost < a.static_cost);
+        assert!(a.online_cost < a.static_cost);
+        assert_eq!(a.re_viol, 0, "epoch re-provisioning violated SLOs");
+        assert_eq!(a.online_viol, 0, "online planner violated SLOs");
+
+        let text = a.golden_lines();
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/tests/golden/dynamic_summary.txt");
+        match std::fs::read_to_string(&path) {
+            Ok(want) => assert_eq!(
+                text, want,
+                "dynamic summary drifted from the golden; if the change is \
+                 intentional, delete {path:?} and re-run to re-bless"
+            ),
+            Err(_) => {
+                std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+                std::fs::write(&path, &text).unwrap();
+            }
+        }
     }
 }

@@ -3,6 +3,7 @@
 //! writes results/<id>.{txt,csv}.
 
 pub mod ablation;
+pub mod autoscale;
 pub mod common;
 pub mod dynamic;
 pub mod pareto;
@@ -41,6 +42,7 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
         "fig19" => provisioning::fig19(kind),
         "fig20" => overhead::fig20(),
         "ablation" => ablation::ablation(kind),
+        "autoscale" => autoscale::autoscale(kind),
         "dynamic" => dynamic::dynamic(kind),
         "pareto" => pareto::pareto(kind),
         "fig21" => overhead::fig21(kind),
@@ -56,8 +58,9 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
             run("replicas", kind)?;
             run("ablation", kind)?;
             run("dynamic", kind)?;
+            run("autoscale", kind)?;
             run("pareto", kind)
         }
-        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, pareto, all"),
+        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, autoscale, pareto, all"),
     }
 }

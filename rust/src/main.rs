@@ -14,12 +14,13 @@
 //!   igniter verify
 
 use igniter::util::error::{anyhow, bail, Result};
-use igniter::coordinator::{self, ClusterSim, Policy};
+use igniter::coordinator::{self, ClusterSim, Policy, Reprovisioner};
 use igniter::gpu::GpuKind;
 use igniter::provisioner::{ffd, gpulets, gslice, igniter as ig, Plan, ProfiledSystem};
 use igniter::runtime::{Engine, Manifest};
 use igniter::util::cli::Args;
 use igniter::util::table::{f, pct, Table};
+use igniter::workload::trace::{RateTrace, TraceKind};
 use igniter::workload::{self, ArrivalKind};
 use std::path::{Path, PathBuf};
 
@@ -117,7 +118,8 @@ fn dispatch(args: &Args) -> Result<()> {
                  usage: igniter <profile|provision|serve|verify|experiment> [options]\n\
                  \x20 profile     [--gpu v100|t4] [--seed N]\n\
                  \x20 provision   [--strategy igniter|ffd|ffd++|gslice|gpulets] [--workloads app|table1|synthetic:N]\n\
-                 \x20 serve       [--policy shadow|static|gslice] [--horizon-s S] [--poisson] [--real-batches N]\n\
+                 \x20 serve       [--policy shadow|static|gslice|autoscale] [--trace diurnal|spiky|ramp]\n\
+                 \x20             [--epochs N] [--epoch-s S] [--horizon-s S] [--poisson] [--real-batches N]\n\
                  \x20 deploy      [--strategy ...] [--script] — emit the launcher manifest\n\
                  \x20 verify\n\
                  \x20 experiment  [fig3..fig21|table1|overhead|all]"
@@ -204,6 +206,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "shadow" => Policy::IgniterShadow,
         "static" => Policy::Static,
         "gslice" => Policy::GsliceTuner { period_ms: 10_000.0 },
+        // the closed loop is installed below (it needs the plan + system)
+        "autoscale" => Policy::Static,
         other => bail!("unknown policy '{other}'"),
     };
     let arrival = if args.flag("poisson") || cfg.as_ref().map_or(false, |c| c.serving.poisson) {
@@ -225,6 +229,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.opt_u64("seed", 42),
         &[],
     );
+    if policy_s == "autoscale" {
+        // estimator -> online re-plan -> shadow-instance migration, with
+        // the submitted rates as the planned design points
+        sim.set_serving_policy(Box::new(Reprovisioner::new(
+            sys.clone(),
+            specs.clone(),
+            plan.clone(),
+        )));
+    }
+    if let Some(trace_s) = args.opt("trace") {
+        let epochs = args.opt_usize("epochs", 24).max(1);
+        let epoch_ms = args.opt_f64("epoch-s", horizon / 1000.0 / epochs as f64) * 1000.0;
+        let tk = match trace_s {
+            "diurnal" => TraceKind::Diurnal {
+                period_epochs: epochs,
+                floor: 0.35,
+            },
+            "spiky" => TraceKind::Spiky { base: 0.3, p: 0.2 },
+            "ramp" => TraceKind::Ramp { from: 0.3, to: 1.0 },
+            other => bail!("unknown trace '{other}' (diurnal|spiky|ramp)"),
+        };
+        let trace = RateTrace::generate(tk, epochs, specs.len(), args.opt_u64("seed", 42));
+        sim.set_rate_trace(&trace, epoch_ms);
+    }
     sim.set_horizon(horizon, 1000.0);
     let stats = sim.run();
     let mut t = Table::new(
@@ -249,6 +277,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    if policy_s == "autoscale" || args.opt("trace").is_some() {
+        println!(
+            "gpu-seconds {:.1}  migrations {}",
+            sim.gpu_seconds(),
+            sim.migrations()
+        );
+    }
 
     let real_batches = args.opt_usize("real-batches", 0);
     if real_batches > 0 {

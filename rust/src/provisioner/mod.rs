@@ -14,4 +14,5 @@ pub use igniter::{
     alloc_gpus, derive_all, predict_plan, provision, replica_split, validate_replica_shares,
     Derived, MAX_REPLICAS,
 };
-pub use types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
+pub use online::{OnlinePlanner, Placed};
+pub use types::{diff_plans, Alloc, Migration, Plan, PlanDelta, ProfiledSystem, WorkloadSpec};

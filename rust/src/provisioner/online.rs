@@ -7,7 +7,7 @@
 //! from-scratch Alg.-1 plan to decide whether a full re-pack would save
 //! instances (the paper's periodic execution).
 
-use super::igniter::{alloc_gpus, derive_all, provision_with_derived};
+use super::igniter::{alloc_gpus, derive_all, provision_with_derived, replica_split, Derived};
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
 use crate::util::error::{anyhow, Result};
 
@@ -77,17 +77,31 @@ impl OnlinePlanner {
 
     /// Handle a newly-arrived workload: place on the device with the
     /// minimum interference-induced resource growth; provision a new
-    /// device if none fits.  Returns the workload's id and where it went.
+    /// device if none fits.  A rate beyond one gpulet at full resources
+    /// is split into the minimum number of even rate-sharing replicas
+    /// (as in offline `provision`), each placed independently under the
+    /// same id.  Returns the workload's id and where its last replica
+    /// went.
     pub fn add(&mut self, mut spec: WorkloadSpec) -> Result<(usize, Placed)> {
         let id = self.specs.len();
         spec.id = id;
-        let derived = derive_all(&self.sys, std::slice::from_ref(&spec))[0]
-            .ok_or_else(|| anyhow!("{} infeasible on {}", spec.name, self.sys.hw.gpu))?;
+        let (k, derived) = match derive_all(&self.sys, std::slice::from_ref(&spec))[0] {
+            Some(d) => (1, d),
+            None => replica_split(&self.sys, &spec)
+                .ok_or_else(|| anyhow!("{} infeasible on {}", spec.name, self.sys.hw.gpu))?,
+        };
         self.specs.push(spec);
         self.active.push(true);
+        let mut placed = Placed::NewGpu(self.plan.gpus.len());
+        for _ in 0..k {
+            placed = self.place(id, derived);
+        }
+        Ok((id, placed))
+    }
 
-        // Greedy min-interference placement over live devices (Alg. 1 inner
-        // loop against the current allocations).
+    /// Greedy min-interference placement of one allocation item (Alg. 1
+    /// inner loop against the current live allocations).
+    fn place(&mut self, id: usize, derived: Derived) -> Placed {
         let mut best: Option<(usize, Vec<Alloc>, f64)> = None;
         for g in 0..self.plan.gpus.len() {
             if let Some(alloc) = alloc_gpus(
@@ -98,13 +112,17 @@ impl OnlinePlanner {
                 derived.r_lower,
                 derived.batch,
             ) {
+                // `alloc_gpus` preserves order (residents first, the new
+                // item last), so the growth comparison is positional —
+                // replicas of one workload co-resident on a device stay
+                // distinct (same rule as igniter::place_items).
                 let mut r_inter = 0.0;
-                for a in &alloc {
-                    let before = self.plan.gpus[g]
-                        .iter()
-                        .find(|x| x.workload == a.workload)
-                        .map(|x| x.resources)
-                        .unwrap_or(if a.workload == id { derived.r_lower } else { 0.0 });
+                for (i, a) in alloc.iter().enumerate() {
+                    let before = if i < self.plan.gpus[g].len() {
+                        self.plan.gpus[g][i].resources
+                    } else {
+                        derived.r_lower
+                    };
                     r_inter += a.resources - before;
                 }
                 if best.as_ref().map_or(true, |(_, _, b)| r_inter < *b - 1e-12) {
@@ -112,10 +130,10 @@ impl OnlinePlanner {
                 }
             }
         }
-        Ok(match best {
+        match best {
             Some((g, alloc, _)) => {
                 self.plan.gpus[g] = alloc;
-                (id, Placed::Existing(g))
+                Placed::Existing(g)
             }
             None => {
                 self.plan.gpus.push(vec![Alloc {
@@ -123,9 +141,9 @@ impl OnlinePlanner {
                     resources: derived.r_lower,
                     batch: derived.batch,
                 }]);
-                (id, Placed::NewGpu(self.plan.gpus.len() - 1))
+                Placed::NewGpu(self.plan.gpus.len() - 1)
             }
-        })
+        }
     }
 
     /// Handle a departed workload: free its partition.  Co-residents keep
@@ -139,6 +157,33 @@ impl OnlinePlanner {
             g.retain(|a| a.workload != id);
         }
         Ok(())
+    }
+
+    /// Re-provision a single active workload for a new arrival rate —
+    /// iGniter's Sec.-5.3 response to workload changes: only the affected
+    /// workload is re-placed (min-interference, possibly growing
+    /// co-residents), everything else stays put.  Atomic: when the new
+    /// rate is infeasible the planner state is left exactly as it was.
+    /// Returns the workload's new id and placement.  Note: each re-spec
+    /// retires the old id and appends a fresh spec entry (ids are never
+    /// reused), so planner state grows linearly in the number of
+    /// re-plans — fine at simulation scale, by design.
+    pub fn respec(&mut self, id: usize, new_rate_rps: f64) -> Result<(usize, Placed)> {
+        if id >= self.specs.len() || !self.active[id] {
+            return Err(anyhow!("workload {id} not active"));
+        }
+        let saved_plan = self.plan.clone();
+        let (model, slo_ms) = (self.specs[id].model, self.specs[id].slo_ms);
+        self.remove(id)?;
+        match self.add(WorkloadSpec::new(0, model, slo_ms, new_rate_rps)) {
+            Ok(placed) => Ok(placed),
+            Err(e) => {
+                // rollback: re-activate the old placement untouched
+                self.active[id] = true;
+                self.plan = saved_plan;
+                Err(e)
+            }
+        }
     }
 
     /// Periodic re-pack: run Alg. 1 from scratch on the active set and
@@ -161,10 +206,15 @@ impl OnlinePlanner {
             s.id = i;
         }
         let derived = derive_all(&self.sys, &dense);
-        if derived.iter().any(|d| d.is_none()) {
-            return None;
-        }
-        let fresh = provision_with_derived(&self.sys, &dense, &derived);
+        let fresh = if derived.iter().any(|d| d.is_none()) {
+            // some active workload needs replicas: use the full Alg.-1
+            // front-end, which splits.  Feasibility is guaranteed —
+            // every active workload was placed by add/respec, so its
+            // replica_split succeeds.
+            super::igniter::provision(&self.sys, &dense)
+        } else {
+            provision_with_derived(&self.sys, &dense, &derived)
+        };
         if fresh.num_gpus() < self.occupied_gpus() {
             // translate back to original ids
             let mut gpus = Vec::new();
@@ -288,6 +338,70 @@ mod tests {
         assert_eq!(op.active_count(), 12);
         for w in 0..12 {
             assert!(op.predict(w).is_some());
+        }
+    }
+
+    #[test]
+    fn respec_replans_one_workload_and_rolls_back_on_failure() {
+        let mut op = OnlinePlanner::new(sys());
+        let (a, _) = op.add(WorkloadSpec::new(0, Model::AlexNet, 15.0, 400.0)).unwrap();
+        let (r, _) = op.add(WorkloadSpec::new(0, Model::ResNet50, 30.0, 300.0)).unwrap();
+        let plan_before = op.plan().clone();
+        // grow AlexNet's rate: new id, still feasible, ResNet untouched
+        let (a2, _) = op.respec(a, 900.0).unwrap();
+        assert_ne!(a2, a);
+        assert_eq!(op.active_count(), 2);
+        let (t_inf, thpt) = op.predict(a2).unwrap();
+        assert!(t_inf <= 15.0 / 2.0 + 1e-6);
+        assert!(thpt >= 900.0 * 0.999);
+        assert!(op.predict(r).is_some(), "co-resident lost its allocation");
+        // infeasible respec: a rate past one gpulet now replica-splits,
+        // so exceed what even MAX_REPLICAS even shares can cover —
+        // planner state must be exactly what it was before the attempt
+        let plan_mid = op.plan().clone();
+        let one_gpulet =
+            crate::provisioner::igniter::over_capacity_rate(&op.sys, Model::AlexNet, 15.0, 900.0);
+        let huge = one_gpulet * 2.0 * crate::provisioner::igniter::MAX_REPLICAS as f64;
+        assert!(op.respec(a2, huge).is_err());
+        assert_eq!(*op.plan(), plan_mid, "failed respec mutated the plan");
+        assert_eq!(op.active_count(), 2);
+        assert!(op.predict(a2).is_some());
+        // double respec of a stale id fails cleanly
+        assert!(op.respec(a, 100.0).is_err());
+        let _ = plan_before;
+    }
+
+    #[test]
+    fn add_and_respec_replicate_over_capacity_rates() {
+        // The closed loop must be able to scale a workload back *past*
+        // one gpulet: add/respec split into even rate-sharing replicas
+        // exactly like offline provision() (regression: respec used to
+        // collapse a group to one replica and then fail forever on the
+        // way back up).
+        let s = sys();
+        let rate =
+            crate::provisioner::igniter::over_capacity_rate(&s, Model::ResNet50, 40.0, 400.0);
+        let mut op = OnlinePlanner::new(s);
+        let (id, _) = op
+            .add(WorkloadSpec::new(0, Model::ResNet50, 40.0, rate))
+            .unwrap();
+        assert!(op.plan().replica_count(id) >= 2, "{:?}", op.plan());
+        // trough: collapses to a single replica
+        let (id2, _) = op.respec(id, 100.0).unwrap();
+        assert_eq!(op.plan().replica_count(id2), 1);
+        assert_eq!(op.plan().replica_count(id), 0, "old group lingers");
+        // peak again: the split must come back
+        let (id3, _) = op.respec(id2, rate).unwrap();
+        assert!(op.plan().replica_count(id3) >= 2, "{:?}", op.plan());
+        // never overcommitted along the way
+        for g in 0..op.plan().gpus.len() {
+            assert!(op.plan().allocated(g) <= op.sys.hw.r_max + 1e-9);
+        }
+        for w in 0..op.specs().len() {
+            if w == id3 {
+                let (t_inf, _) = op.predict(w).unwrap();
+                assert!(t_inf <= 40.0 / 2.0 + 1e-6);
+            }
         }
     }
 

@@ -171,6 +171,83 @@ impl Plan {
     }
 }
 
+/// Shadow-instance migration of one workload's replica group (the paper's
+/// Sec. 4.2/5.3 mechanism, generalized): the serving layer warms the `to`
+/// replicas up while the current ones keep serving, then switches new
+/// arrivals over and drains the old replicas to completion — no request is
+/// ever dropped and in-flight work finishes on the old gpulets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Migration {
+    /// Serving workload id (index into the submitted spec set).
+    pub workload: usize,
+    /// New replica placement: `(gpu, alloc)` pairs in group order.
+    pub to: Vec<(usize, Alloc)>,
+}
+
+/// One step of a plan-delta produced by online re-provisioning: what the
+/// serving layer must do to realize the planner's new allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanDelta {
+    /// Replace the workload's replica group via shadow-instance migration.
+    Migrate(Migration),
+    /// Adjust a co-resident allocation in place (same gpu, same batch —
+    /// an MPS partition resize, no process restart needed).
+    Resize {
+        workload: usize,
+        gpu: usize,
+        resources: f64,
+    },
+}
+
+/// Diff two plans into the serving-layer deltas that turn `old` into
+/// `new`.  The plans may index workloads differently (the `OnlinePlanner`
+/// assigns a fresh id on every re-add): `old_ids[w]` / `new_ids[w]` map
+/// serving workload `w` to its id in each plan.  A workload whose replica
+/// set keeps the same `(gpu, batch)` shape gets in-place `Resize` steps
+/// for changed partitions; any placement change becomes a `Migrate`.
+pub fn diff_plans(old: &Plan, new: &Plan, old_ids: &[usize], new_ids: &[usize]) -> Vec<PlanDelta> {
+    assert_eq!(old_ids.len(), new_ids.len());
+    let mut out = Vec::new();
+    for w in 0..old_ids.len() {
+        let o = old.replicas(old_ids[w]);
+        let n = new.replicas(new_ids[w]);
+        // Two replicas of one workload on the same device cannot be told
+        // apart by a (workload, gpu) resize — migrate such groups instead.
+        let dup_gpu = n
+            .iter()
+            .enumerate()
+            .any(|(j, (g, _))| n[..j].iter().any(|(g2, _)| g2 == g));
+        let same_shape = !dup_gpu
+            && o.len() == n.len()
+            && o.iter()
+                .zip(&n)
+                .all(|((og, oa), (ng, na))| og == ng && oa.batch == na.batch);
+        if same_shape {
+            for ((g, oa), (_, na)) in o.iter().zip(&n) {
+                if (oa.resources - na.resources).abs() > 1e-12 {
+                    out.push(PlanDelta::Resize {
+                        workload: w,
+                        gpu: *g,
+                        resources: na.resources,
+                    });
+                }
+            }
+        } else {
+            out.push(PlanDelta::Migrate(Migration {
+                workload: w,
+                to: n
+                    .into_iter()
+                    .map(|(g, mut a)| {
+                        a.workload = w;
+                        (g, a)
+                    })
+                    .collect(),
+            }));
+        }
+    }
+    out
+}
+
 /// Bundle of profiled knowledge the strategies work from.
 #[derive(Debug, Clone)]
 pub struct ProfiledSystem {
@@ -296,6 +373,65 @@ mod tests {
     fn validate_catches_unplaced() {
         let p = plan();
         assert!(p.validate(4, 1.0).unwrap_err().contains("unplaced"));
+    }
+
+    #[test]
+    fn diff_plans_resize_vs_migrate() {
+        let old = plan();
+        // same shape, grown partition for w1 on gpu 0 -> Resize
+        let mut grown = plan();
+        grown.gpus[0][1].resources = 0.55;
+        let ids = [0, 1, 2];
+        let d = diff_plans(&old, &grown, &ids, &ids);
+        assert_eq!(
+            d,
+            vec![PlanDelta::Resize {
+                workload: 1,
+                gpu: 0,
+                resources: 0.55
+            }]
+        );
+        // moved gpu -> Migrate carrying the new placement
+        let mut moved = plan();
+        let a = moved.gpus[0].remove(1);
+        moved.gpus[1].push(a);
+        let d = diff_plans(&old, &moved, &ids, &ids);
+        assert_eq!(d.len(), 1);
+        match &d[0] {
+            PlanDelta::Migrate(m) => {
+                assert_eq!(m.workload, 1);
+                assert_eq!(m.to.len(), 1);
+                assert_eq!(m.to[0].0, 1);
+                assert_eq!(m.to[0].1.workload, 1);
+            }
+            other => panic!("expected Migrate, got {other:?}"),
+        }
+        // batch change also requires a restart -> Migrate
+        let mut rebatched = plan();
+        rebatched.gpus[1][0].batch = 4;
+        let d = diff_plans(&old, &rebatched, &ids, &ids);
+        assert!(matches!(&d[0], PlanDelta::Migrate(m) if m.workload == 2));
+        // identical plans diff to nothing
+        assert!(diff_plans(&old, &plan(), &ids, &ids).is_empty());
+    }
+
+    #[test]
+    fn diff_plans_translates_renumbered_ids() {
+        // The online planner re-ids a workload on every re-add: the diff
+        // must follow the id maps and stamp the serving id on the output.
+        let old = plan();
+        let mut new = plan();
+        new.gpus[0][1].workload = 7; // w1 re-added under planner id 7
+        new.gpus[0][1].resources = 0.6;
+        let d = diff_plans(&old, &new, &[0, 1, 2], &[0, 7, 2]);
+        assert_eq!(
+            d,
+            vec![PlanDelta::Resize {
+                workload: 1,
+                gpu: 0,
+                resources: 0.6
+            }]
+        );
     }
 
     #[test]

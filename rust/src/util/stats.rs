@@ -192,6 +192,12 @@ impl SlidingWindow {
         }
     }
 
+    /// Number of samples recorded at `t >= since` (no allocation — the
+    /// rate estimator counts arrivals in its window every monitor tick).
+    pub fn count_since(&self, since: f64) -> usize {
+        self.buf.iter().filter(|(t, _)| *t >= since).count()
+    }
+
     /// Values recorded at `t >= since` (newest-bounded by the span).
     pub fn values_since(&self, since: f64) -> Vec<f64> {
         self.buf
@@ -419,6 +425,8 @@ mod tests {
         assert_eq!(w.len(), 11, "window holds only the last second");
         let vals = w.values_since(9_500.0);
         assert_eq!(vals, vec![95.0, 96.0, 97.0, 98.0, 99.0]);
+        assert_eq!(w.count_since(9_500.0), 5);
+        assert_eq!(w.count_since(0.0), w.len());
     }
 
     #[test]

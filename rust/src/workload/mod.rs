@@ -101,6 +101,26 @@ impl ArrivalGen {
     }
 }
 
+/// One workload's arrival process as the serving event loop consumes it:
+/// either a steady `ArrivalGen` at the spec's nominal rate or a
+/// `trace::TracedArrivalGen` whose instantaneous rate follows a
+/// `RateTrace` (the closed-loop autoscaling scenarios).
+#[derive(Debug, Clone)]
+pub enum ArrivalStream {
+    Steady(ArrivalGen),
+    Traced(trace::TracedArrivalGen),
+}
+
+impl ArrivalStream {
+    /// Next arrival timestamp (ms since start), monotone increasing.
+    pub fn next(&mut self) -> f64 {
+        match self {
+            ArrivalStream::Steady(g) => g.next(),
+            ArrivalStream::Traced(g) => g.next(),
+        }
+    }
+}
+
 /// Synthetic workload sets for scalability studies (Fig. 21): `n` workloads
 /// cycling through the zoo with randomized-but-feasible SLOs and rates.
 pub fn synthetic_workloads(n: usize, seed: u64) -> Vec<WorkloadSpec> {

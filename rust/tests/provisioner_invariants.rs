@@ -4,7 +4,7 @@
 
 use igniter::gpu::{GpuKind, Model, ALL_MODELS};
 use igniter::perfmodel;
-use igniter::provisioner::{ffd, gpulets, igniter as ig, ProfiledSystem, WorkloadSpec};
+use igniter::provisioner::{ffd, gpulets, igniter as ig, OnlinePlanner, ProfiledSystem, WorkloadSpec};
 use igniter::util::quick::{forall, Shrink};
 use igniter::util::rng::Rng;
 use igniter::util::lazy::Lazy;
@@ -197,6 +197,126 @@ fn alloc_gpus_supersets_never_shrink() {
             let total: f64 = alloc.iter().map(|a| a.resources).sum();
             if total > SYS.hw.r_max + 1e-9 {
                 return Err(format!("over-allocated: {total}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// One step of a random online-planner history.
+#[derive(Debug, Clone)]
+struct OnlineOp {
+    /// 0..=4 add, 5 remove, 6 respec, 7 rebalance
+    action: u8,
+    spec: GenSpec,
+    /// which live workload a remove/respec targets (mod live count)
+    pick: usize,
+}
+
+impl Shrink for OnlineOp {
+    fn shrink(&self) -> Vec<Self> {
+        self.spec
+            .shrink()
+            .into_iter()
+            .map(|spec| OnlineOp {
+                spec,
+                ..self.clone()
+            })
+            .collect()
+    }
+}
+
+fn gen_online_ops(r: &mut Rng) -> Vec<OnlineOp> {
+    let n = 2 + r.below(18) as usize;
+    (0..n)
+        .map(|_| {
+            let spec = gen_specs(r).pop().unwrap();
+            OnlineOp {
+                action: r.below(8) as u8,
+                spec,
+                pick: r.below(32) as usize,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn online_planner_never_overcommits_and_keeps_slos() {
+    // Any sequence of arrivals, departures, rate re-specs, and rebalances
+    // must leave (a) every device within its physical partition budget
+    // (sum of partitions <= r_max, i.e. 100 %) and (b) every active
+    // workload with a predicted-SLO-feasible allocation for its rate.
+    forall(707, 30, gen_online_ops, |ops| {
+        let mut op = OnlinePlanner::new((*SYS).clone());
+        let mut live: Vec<usize> = Vec::new();
+        for (step, o) in ops.iter().enumerate() {
+            let model = ALL_MODELS[o.spec.model_idx];
+            match o.action {
+                0..=4 => {
+                    let spec = WorkloadSpec::new(0, model, o.spec.slo_ms, o.spec.rate_rps);
+                    let id = op
+                        .add(spec)
+                        .map_err(|e| format!("step {step}: feasible add rejected: {e}"))?
+                        .0;
+                    live.push(id);
+                }
+                5 => {
+                    if !live.is_empty() {
+                        let id = live.remove(o.pick % live.len());
+                        op.remove(id)
+                            .map_err(|e| format!("step {step}: remove failed: {e}"))?;
+                    }
+                }
+                6 => {
+                    if !live.is_empty() {
+                        let i = o.pick % live.len();
+                        // the random rate may be infeasible for *this*
+                        // workload's model/SLO (bands differ per model);
+                        // a rejected respec must leave the planner
+                        // untouched — invariant (b) below proves it did
+                        if let Ok((id, _)) = op.respec(live[i], o.spec.rate_rps) {
+                            live[i] = id;
+                        }
+                    }
+                }
+                _ => {
+                    op.rebalance();
+                }
+            }
+            // (a) no overcommitted device, ever
+            for g in 0..op.plan().gpus.len() {
+                let total = op.plan().allocated(g);
+                if total > SYS.hw.r_max + 1e-6 {
+                    return Err(format!(
+                        "step {step}: gpu {g} overcommitted at {total:.4}"
+                    ));
+                }
+            }
+            // (b) every active workload stays predicted-SLO feasible
+            for &id in &live {
+                let (t_inf, thpt) = op
+                    .predict(id)
+                    .ok_or(format!("step {step}: workload {id} lost its allocation"))?;
+                let spec = &op.specs()[id];
+                if t_inf > spec.slo_ms / 2.0 + 1e-6 {
+                    return Err(format!(
+                        "step {step}: {} predicted {t_inf:.2} ms > half-SLO {:.2}",
+                        spec.name,
+                        spec.slo_ms / 2.0
+                    ));
+                }
+                // predict() reports the first replica; a respec onto a
+                // cross-band rate may replica-split, so the group's
+                // capacity is per-share throughput x replica count
+                let k = op.plan().replica_count(id).max(1);
+                if thpt * k as f64 < spec.rate_rps * 0.999 {
+                    return Err(format!(
+                        "step {step}: {} group capacity {:.0} (x{k}) < rate {:.0}",
+                        spec.name,
+                        thpt * k as f64,
+                        spec.rate_rps
+                    ));
+                }
             }
         }
         Ok(())
