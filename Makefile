@@ -1,27 +1,34 @@
 # iGniter reproduction — build/verify entry points.
 #
-#   make verify      tier-1 gate: release build + full Rust test suite,
-#                    bench compilation, lint (fmt + clippy), and the
-#                    Python Layer-1 tests
-#   make artifacts   AOT-lower the model zoo to artifacts/ (needs jax)
-#   make clean       drop build + result artifacts
+#   make verify       tier-1 gate: release build + full Rust test suite,
+#                     bench compilation, lint (fmt + clippy), the Python
+#                     Layer-1 tests, and the CI-quick sweep + bench gate
+#                     (verify mirrors .github/workflows/ci.yml exactly)
+#   make sweep-quick  the CI sweep invocation + baseline gate, standalone
+#   make bless-golden regenerate + overwrite the dynamic-summary golden
+#   make bless-bench  re-bless BENCH_baseline.json from a fresh local run
+#   make artifacts    AOT-lower the model zoo to artifacts/ (needs jax)
+#   make clean        drop build + result artifacts
 
 CARGO ?= cargo
 PYTHON ?= python
 
-.PHONY: verify build test test-invariants bench-build fmt-check clippy pytest artifacts clean
+.PHONY: verify build test test-invariants bench-build fmt-check clippy pytest \
+        sweep-quick bless-golden bless-bench artifacts clean
 
 # `test` already runs every integration target (serving invariants,
-# determinism, provisioner properties — the migration/autoscale sweep);
-# `bench-build` compiles the autoscale closed-loop bench.
-verify: build test bench-build fmt-check clippy pytest
+# determinism, sweep determinism, provisioner properties); `bench-build`
+# compiles the closed-loop + sweep benches; `sweep-quick` runs the same
+# sweep + regression gate as the CI bench-sweep job.
+verify: build test bench-build fmt-check clippy pytest sweep-quick
 	@echo "verify: OK"
 
 # Standalone pass over just the serving/provisioning invariant +
 # determinism suites (subset of `make test`; handy while iterating on
-# the coordinator/provisioner).
+# the coordinator/provisioner/sweep).
 test-invariants:
-	$(CARGO) test -q --test serving_invariants --test determinism --test provisioner_invariants
+	$(CARGO) test -q --test serving_invariants --test determinism \
+		--test provisioner_invariants --test sweep_determinism
 
 fmt-check:
 	$(CARGO) fmt --check
@@ -38,6 +45,27 @@ test:
 bench-build:
 	$(CARGO) bench --no-run
 
+# Exactly the CI bench-sweep job: quick sweep -> BENCH_sweep.json ->
+# gate against the committed baseline (>20% regression fails; a
+# provisional baseline gates at 5x until re-blessed).
+sweep-quick: build
+	$(CARGO) run --release -- sweep --scenarios 200 --seeds 2 --parallel 8 \
+		--out BENCH_sweep.json
+	$(PYTHON) scripts/check_bench_regression.py BENCH_baseline.json BENCH_sweep.json
+
+# Regenerate the dynamic-summary golden from this machine's run and
+# overwrite the checked-in file (commit the result; see
+# rust/tests/golden/README.md for when re-blessing is legitimate).
+bless-golden:
+	IGNITER_BLESS=1 $(CARGO) test -q golden_summary_regression
+
+# Promote a fresh sweep run to the committed bench baseline (drops the
+# provisional marker by replacing the file with measured numbers).
+bless-bench: build
+	$(CARGO) run --release -- sweep --scenarios 200 --seeds 2 --parallel 8 \
+		--out BENCH_baseline.json
+	@echo "BENCH_baseline.json re-blessed from this run — review and commit it"
+
 pytest:
 	$(PYTHON) -m pytest python/tests -q
 
@@ -46,4 +74,4 @@ artifacts:
 
 clean:
 	$(CARGO) clean
-	rm -rf results
+	rm -rf results BENCH_sweep.json

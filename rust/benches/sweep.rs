@@ -1,0 +1,56 @@
+//! Bench: fleet-scale sweep throughput — the numbers behind the CI
+//! `bench-sweep` gate.  Reports (a) single closed-loop scenario latency,
+//! (b) sequential vs parallel sweep wall-clock over the same task set
+//! (the speedup is the whole point of the scoped-worker fan-out), and
+//! (c) served virtual requests per wall second, the sim-throughput
+//! metric `BENCH_sweep.json` tracks run-over-run.
+
+use igniter::sweep::{profiled_pair, run_sweep, run_task, ScenarioSpace, SweepConfig};
+use igniter::util::bench::{bench, bench_once};
+
+fn cfg(parallel: usize, scenarios: usize) -> SweepConfig {
+    SweepConfig {
+        scenarios,
+        seeds: 1,
+        parallel,
+        master_seed: 42,
+        space: ScenarioSpace::quick(),
+    }
+}
+
+fn main() {
+    println!("== sweep benches ==");
+
+    // Single-task latency: provision + closed-loop serve of one quick
+    // scenario (the unit of work the fan-out schedules).
+    let systems = profiled_pair(42);
+    let one = cfg(1, 1);
+    bench("sweep_task quick scenario (provision+serve)", 1, 5, || {
+        let r = run_task(&one, &systems, 0);
+        assert!(r.feasible && r.dropped == 0);
+        r.served
+    });
+
+    // Sequential vs parallel over an identical 32-task set.  The merged
+    // results are bit-identical (tests/sweep_determinism.rs proves it);
+    // here we measure the wall-clock ratio.
+    let (seq, seq_ns) = bench_once("sweep 32 scenarios sequential", || {
+        run_sweep(&cfg(1, 32))
+    });
+    let (par, par_ns) = bench_once("sweep 32 scenarios parallel x8", || {
+        run_sweep(&cfg(8, 32))
+    });
+    assert_eq!(
+        seq.fingerprint(),
+        par.fingerprint(),
+        "parallel sweep diverged from sequential"
+    );
+    let agg = par.aggregate();
+    println!(
+        "  -> speedup {:.2}x  ({} tasks, {} served; {:.0} served req/s of wall at x8)",
+        seq_ns / par_ns.max(1.0),
+        agg.tasks,
+        agg.total_served,
+        agg.total_served as f64 / (par_ns / 1e9).max(1e-9),
+    );
+}

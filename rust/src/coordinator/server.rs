@@ -34,7 +34,7 @@ use super::router::{RouteStrategy, Router};
 use crate::gpu::{GpuDevice, GpuKind};
 use crate::provisioner::{Plan, PlanDelta, WorkloadSpec};
 use crate::sim::EventQueue;
-use crate::util::stats::{mean, percentile, LatencyHistogram, SlidingWindow};
+use crate::util::stats::{mean, percentile_sorted, LatencyHistogram, SlidingWindow};
 use crate::workload::trace::{RateTrace, TracedArrivalGen};
 use crate::workload::{ArrivalGen, ArrivalKind, ArrivalStream};
 use std::collections::VecDeque;
@@ -263,6 +263,9 @@ pub struct ClusterSim {
     last_occupancy_ms: f64,
     /// executed shadow migrations (plan-deltas with a placement change)
     migrations: u32,
+    /// pooled latency scratch reused by `sample_timeline` (one buffer for
+    /// the whole sim instead of one allocation per group per tick)
+    lat_scratch: Vec<f64>,
 }
 
 impl ClusterSim {
@@ -354,6 +357,7 @@ impl ClusterSim {
             gpu_ms: 0.0,
             last_occupancy_ms: 0.0,
             migrations: 0,
+            lat_scratch: Vec::new(),
         }
     }
 
@@ -563,14 +567,18 @@ impl ClusterSim {
 
     fn sample_timeline(&mut self) {
         let now = self.events.now();
+        // take the pooled scratch out so group/replica borrows stay clean;
+        // sorting it once serves both the P99 and (order-free) the mean —
+        // latency records are finite by construction, so the sort is the
+        // same total_cmp order `percentile` would use after NaN filtering
+        let mut lat = std::mem::take(&mut self.lat_scratch);
         for g in 0..self.groups.len() {
             let since = now - 1_000.0;
-            // one pooled scan per group serves both the P99 and the mean
-            let mut lat: Vec<f64> = Vec::new();
+            lat.clear();
             let mut resources = 0.0;
             let mut batch = 0u32;
             for &p in &self.groups[g].members {
-                lat.extend(self.replicas[p].window.values_since(since));
+                self.replicas[p].window.values_since_into(since, &mut lat);
                 if self.replicas[p].phase != ReplicaPhase::Retired {
                     resources += self.replicas[p].resources;
                     batch = batch.max(self.replicas[p].batch);
@@ -579,7 +587,8 @@ impl ClusterSim {
             let p99 = if lat.len() < MIN_P99_SAMPLES {
                 f64::NAN
             } else {
-                percentile(&lat, 0.99)
+                lat.sort_unstable_by(f64::total_cmp);
+                percentile_sorted(&lat, 0.99)
             };
             let mean_ms = mean(&lat);
             let grp = &mut self.groups[g];
@@ -596,6 +605,7 @@ impl ClusterSim {
             grp.served_since_sample = 0;
             grp.last_sample_ms = now;
         }
+        self.lat_scratch = lat;
     }
 
     /// Run the simulation to the horizon; returns per-workload stats.

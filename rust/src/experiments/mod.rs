@@ -10,6 +10,7 @@ pub mod pareto;
 pub mod motivation;
 pub mod overhead;
 pub mod provisioning;
+pub mod sweep;
 pub mod validation;
 
 use crate::gpu::GpuKind;
@@ -48,6 +49,7 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
         "fig21" => overhead::fig21(kind),
         "overhead" => overhead::overhead(),
         "replicas" => validation::replica_shares(kind),
+        "sweep" => sweep::sweep(kind),
         "all" => {
             for id in ALL {
                 println!("\n=== {id} ===");
@@ -59,8 +61,9 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
             run("ablation", kind)?;
             run("dynamic", kind)?;
             run("autoscale", kind)?;
+            run("sweep", kind)?;
             run("pareto", kind)
         }
-        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, autoscale, pareto, all"),
+        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, autoscale, sweep, pareto, all"),
     }
 }

@@ -1,0 +1,94 @@
+//! Sweep experiment harness: a small CI-quick fleet-scale sweep printed
+//! as the usual results table (and persisted to `results/sweep.{txt,csv}`).
+//! The heavyweight entry point is `igniter sweep ...` (see `main.rs`),
+//! which also writes the machine-readable `BENCH_sweep.json` the CI bench
+//! gate compares against `BENCH_baseline.json`.
+
+use super::common::{emit, SEED};
+use crate::gpu::GpuKind;
+use crate::sweep::{run_sweep, ScenarioSpace, SweepConfig};
+use crate::util::error::Result;
+use crate::util::table::{f, Table};
+
+/// Run a reduced quick sweep and summarize per fleet shape.
+pub fn sweep(_kind: GpuKind) -> Result<()> {
+    let cfg = SweepConfig {
+        scenarios: 12,
+        seeds: 2,
+        parallel: 4,
+        master_seed: SEED,
+        space: ScenarioSpace::quick(),
+    };
+    let report = run_sweep(&cfg);
+    let agg = report.aggregate();
+
+    let mut t = Table::new(
+        "Fleet-scale scenario sweep (CI-quick space: randomized mixes x \
+         SLO tiers x fleets x live traces, closed-loop serving per task)",
+        &[
+            "fleet",
+            "tasks",
+            "mean_$per_h",
+            "slo_attain",
+            "migrations",
+            "served",
+            "dropped",
+        ],
+    );
+    for fleet in ["v100", "t4", "hetero"] {
+        let rs: Vec<_> = report
+            .results
+            .iter()
+            .filter(|r| r.fleet == fleet && r.feasible)
+            .collect();
+        if rs.is_empty() {
+            continue;
+        }
+        let n = rs.len() as f64;
+        t.row(&[
+            fleet.to_string(),
+            rs.len().to_string(),
+            f(rs.iter().map(|r| r.cost_per_hour).sum::<f64>() / n, 2),
+            format!(
+                "{:.1}%",
+                rs.iter().map(|r| r.slo_attainment).sum::<f64>() / n * 100.0
+            ),
+            rs.iter().map(|r| r.migrations as u64).sum::<u64>().to_string(),
+            rs.iter().map(|r| r.served).sum::<u64>().to_string(),
+            rs.iter().map(|r| r.dropped).sum::<i64>().to_string(),
+        ]);
+    }
+    t.row(&[
+        "ALL".to_string(),
+        format!("{}/{}", agg.feasible, agg.tasks),
+        f(agg.mean_cost_per_hour, 2),
+        format!("{:.1}%", agg.mean_slo_attainment * 100.0),
+        agg.total_migrations.to_string(),
+        agg.total_served.to_string(),
+        agg.total_dropped.to_string(),
+    ]);
+    emit(&t, "sweep");
+    println!(
+        "wall {:.2}s  ({:.1} scenarios/s, {:.0} served req/s of wall)",
+        report.wall_s,
+        report.results.len() as f64 / report.wall_s.max(1e-9),
+        agg.total_served as f64 / report.wall_s.max(1e-9),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_harness_runs_and_conserves() {
+        sweep(GpuKind::V100).unwrap();
+        let csv =
+            std::fs::read_to_string(super::super::common::results_dir().join("sweep.csv")).unwrap();
+        let all_line = csv.lines().last().unwrap();
+        assert!(all_line.starts_with("ALL"), "{all_line}");
+        // dropped column (last) must be zero across the whole sweep
+        assert_eq!(all_line.rsplit(',').next().unwrap().trim(), "0", "{all_line}");
+    }
+}

@@ -21,5 +21,6 @@ pub mod profiler;
 pub mod provisioner;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;

@@ -4,6 +4,7 @@
 //!   profile     print profiled hardware/workload coefficients
 //!   provision   compute a provisioning plan for a workload set
 //!   serve       run the serving simulation (and optionally real compute)
+//!   sweep       parallel fleet-scale scenario sweep -> BENCH_sweep.json
 //!   verify      check compiled HLO artifacts against Python goldens
 //!   experiment  regenerate a paper table/figure (see DESIGN.md §5)
 //!
@@ -11,6 +12,7 @@
 //!   igniter experiment fig14
 //!   igniter provision --strategy gpulets --workloads app
 //!   igniter serve --policy shadow --horizon-s 30 --real-batches 2
+//!   igniter sweep --scenarios 200 --seeds 2 --parallel 8 --out BENCH_sweep.json
 //!   igniter verify
 
 use igniter::util::error::{anyhow, bail, Result};
@@ -25,7 +27,7 @@ use igniter::workload::{self, ArrivalKind};
 use std::path::{Path, PathBuf};
 
 fn main() {
-    let args = Args::from_env(&["poisson", "json", "verbose", "script"]);
+    let args = Args::from_env(&["poisson", "json", "verbose", "script", "full"]);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -101,6 +103,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("profile") => cmd_profile(args),
         Some("provision") => cmd_provision(args),
         Some("serve") => cmd_serve(args),
+        Some("sweep") => cmd_sweep(args),
         Some("deploy") => cmd_deploy(args),
         Some("verify") => cmd_verify(),
         Some("experiment") => {
@@ -115,11 +118,13 @@ fn dispatch(args: &Args) -> Result<()> {
         None => {
             println!(
                 "igniter — interference-aware GPU resource provisioning (paper reproduction)\n\n\
-                 usage: igniter <profile|provision|serve|verify|experiment> [options]\n\
+                 usage: igniter <profile|provision|serve|sweep|verify|experiment> [options]\n\
                  \x20 profile     [--gpu v100|t4] [--seed N]\n\
                  \x20 provision   [--strategy igniter|ffd|ffd++|gslice|gpulets] [--workloads app|table1|synthetic:N]\n\
                  \x20 serve       [--policy shadow|static|gslice|autoscale] [--trace diurnal|spiky|ramp]\n\
                  \x20             [--epochs N] [--epoch-s S] [--horizon-s S] [--poisson] [--real-batches N]\n\
+                 \x20 sweep       [--scenarios N] [--seeds K] [--parallel M] [--master-seed S]\n\
+                 \x20             [--out BENCH_sweep.json] [--full] — fleet-scale scenario sweep\n\
                  \x20 deploy      [--strategy ...] [--script] — emit the launcher manifest\n\
                  \x20 verify\n\
                  \x20 experiment  [fig3..fig21|table1|overhead|all]"
@@ -311,6 +316,71 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ]);
         }
         println!("{}", rt.render());
+    }
+    Ok(())
+}
+
+/// Fleet-scale parallel scenario sweep: `scenarios x seeds` closed-loop
+/// serving tasks over `parallel` workers, summarized on stdout and
+/// persisted as machine-readable JSON (default `BENCH_sweep.json`) for
+/// the CI bench gate.  Deterministic per master seed: the report's
+/// non-wall sections are bit-identical for any `--parallel` width.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use igniter::sweep::{run_sweep, ScenarioSpace, SweepConfig};
+    let space = if args.flag("full") {
+        ScenarioSpace::full()
+    } else {
+        ScenarioSpace::quick()
+    };
+    let cfg = SweepConfig {
+        scenarios: args.opt_usize("scenarios", 200).max(1),
+        seeds: args.opt_usize("seeds", 2).max(1),
+        parallel: args.opt_usize("parallel", 8).max(1),
+        master_seed: args.opt_u64("master-seed", 42),
+        space,
+    };
+    let report = run_sweep(&cfg);
+    let agg = report.aggregate();
+
+    let mut t = Table::new(
+        &format!(
+            "fleet-scale sweep: {} scenarios x {} seeds ({} mode, parallel {})",
+            cfg.scenarios,
+            cfg.seeds,
+            if args.flag("full") { "full" } else { "quick" },
+            cfg.parallel
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["feasible tasks".into(), format!("{}/{}", agg.feasible, agg.tasks)]);
+    t.row(&["mean cost ($/h)".into(), f(agg.mean_cost_per_hour, 2)]);
+    t.row(&[
+        "mean SLO attainment".into(),
+        format!("{:.2}%", agg.mean_slo_attainment * 100.0),
+    ]);
+    t.row(&["mean GPUs per plan".into(), f(agg.mean_gpus, 1)]);
+    t.row(&["total migrations".into(), agg.total_migrations.to_string()]);
+    t.row(&["total served".into(), agg.total_served.to_string()]);
+    t.row(&["total dropped".into(), agg.total_dropped.to_string()]);
+    t.row(&["total GPU-seconds".into(), f(agg.total_gpu_seconds, 1)]);
+    t.row(&["wall (s)".into(), f(report.wall_s, 2)]);
+    t.row(&[
+        "scenarios/s (wall)".into(),
+        f(report.results.len() as f64 / report.wall_s.max(1e-9), 1),
+    ]);
+    t.row(&[
+        "served req/s (wall)".into(),
+        f(agg.total_served as f64 / report.wall_s.max(1e-9), 0),
+    ]);
+    println!("{}", t.render());
+
+    // persist before any failure exit: the per-scenario JSON is exactly
+    // the evidence needed to debug a conservation violation
+    let out = PathBuf::from(args.opt_or("out", "BENCH_sweep.json"));
+    report.write(&out)?;
+    println!("wrote {}", out.display());
+    if agg.total_dropped != 0 {
+        bail!("sweep dropped {} requests — conservation violated", agg.total_dropped);
     }
     Ok(())
 }

@@ -68,17 +68,20 @@ pub fn alloc_gpus(
     }
 
     // Iteratively grow SLO-violating workloads by r_unit (lines 2-11).
+    // The placed view is built once and updated in step with the grown
+    // allocations — the old per-iteration rebuild allocated a fresh
+    // vector every pass, which dominated Alg. 1 at sweep scale.
+    let mut placed: Vec<PlacedWorkload> = allocs
+        .iter()
+        .map(|a| PlacedWorkload {
+            coeffs: sys.coeffs_for(specs[a.workload].model),
+            batch: a.batch as f64,
+            resources: a.resources,
+        })
+        .collect();
     let mut flag = true;
     while flag {
         flag = false;
-        let placed: Vec<PlacedWorkload> = allocs
-            .iter()
-            .map(|a| PlacedWorkload {
-                coeffs: sys.coeffs_for(specs[a.workload].model),
-                batch: a.batch as f64,
-                resources: a.resources,
-            })
-            .collect();
         let mut grow: Vec<usize> = Vec::new();
         for (i, a) in allocs.iter().enumerate() {
             let pred = perfmodel::predict(hw, &placed, i);
@@ -88,6 +91,7 @@ pub fn alloc_gpus(
         }
         for i in grow {
             allocs[i].resources += hw.r_unit;
+            placed[i].resources = allocs[i].resources;
             flag = true;
         }
         if total(&allocs) > hw.r_max + 1e-9 {
@@ -202,11 +206,21 @@ fn place_items(
             .then(wa.cmp(wb))
     });
 
+    // Running per-device allocation totals: a device without `r_lower`
+    // headroom can never host the item (alloc_gpus' entry check), so it
+    // is skipped before the resident-copy + predict work.  At sweep
+    // scale most devices are near-full, so this prunes almost every
+    // candidate of the O(m) inner scan.
+    let mut used: Vec<f64> = vec![0.0];
+
     for &(w, d) in &items {
         // Greedily find the GPU with minimum increased-interference
         // resources (lines 5-12).
         let mut best: Option<(usize, Vec<Alloc>, f64)> = None;
         for g in 0..plan.gpus.len() {
+            if used[g] + d.r_lower > hw.r_max + 1e-9 {
+                continue; // bitwise the same reject alloc_gpus would hit
+            }
             if let Some(alloc) = alloc_gpus(sys, specs, &plan.gpus[g], w, d.r_lower, d.batch) {
                 // r_inter = sum of increases over current residents plus
                 // the new item's growth above its own lower bound.
@@ -232,7 +246,10 @@ fn place_items(
             }
         }
         match best {
-            Some((g, alloc, _)) => plan.gpus[g] = alloc,
+            Some((g, alloc, _)) => {
+                used[g] = alloc.iter().map(|a| a.resources).sum();
+                plan.gpus[g] = alloc;
+            }
             None => {
                 // Provision a new GPU (lines 13-15) and place at r_lower.
                 plan.gpus.push(vec![Alloc {
@@ -240,6 +257,7 @@ fn place_items(
                     resources: d.r_lower,
                     batch: d.batch,
                 }]);
+                used.push(d.r_lower);
             }
         }
     }

@@ -1,0 +1,25 @@
+//! Fleet-scale parallel scenario sweeps (beyond the paper; the ParvaGPU
+//! large-scale regime, arXiv 2409.14447): generate hundreds of randomized
+//! workload-mix x fleet x rate-trace scenarios, serve each through the
+//! full closed loop (provision -> estimator -> online re-plan -> shadow
+//! migration), fan them over scoped worker threads, and emit a
+//! machine-readable `BENCH_sweep.json` that CI tracks run-over-run.
+//!
+//! Three invariants hold by construction (and are property-tested in
+//! `rust/tests/sweep_determinism.rs`):
+//!
+//! 1. **Pure scenarios** — `Scenario::generate(space, master, id)` is a
+//!    pure function; ids can be generated in any order or in isolation.
+//! 2. **Ordered merge** — workers write results into pre-sized slots
+//!    indexed by task id, so a parallel sweep is bit-identical to the
+//!    sequential one for the same master seed.
+//! 3. **Wall-clock quarantine** — measured timing never enters the
+//!    deterministic report subset (`SweepReport::fingerprint`).
+
+pub mod report;
+pub mod runner;
+pub mod scenario;
+
+pub use report::{Aggregate, SweepReport};
+pub use runner::{run_sweep, run_task, ScenarioResult, SweepConfig};
+pub use scenario::{profiled_pair, Fleet, Scenario, ScenarioSpace, SloTier};

@@ -1,0 +1,252 @@
+//! Machine-readable sweep reports (`BENCH_sweep.json`): per-scenario
+//! metrics, a deterministic aggregate, and a separate wall-clock section.
+//!
+//! The JSON is split on the determinism boundary on purpose:
+//!
+//! * `config`, `scenarios`, `aggregate` — pure functions of
+//!   `(space, master_seed)`; bit-identical across `--parallel` widths
+//!   and across machines.  `fingerprint()` serializes exactly this
+//!   subset, and the CI bench gate compares its metrics run-over-run.
+//! * `wall` — measured wall-clock (total seconds, scenarios/s, served
+//!   virtual requests per wall second).  Machine-dependent by nature;
+//!   the bench gate applies its tolerance here, never equality.
+
+use super::runner::{ScenarioResult, SweepConfig};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Deterministic aggregate over a sweep's results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Aggregate {
+    pub tasks: usize,
+    pub feasible: usize,
+    /// Mean plan cost over feasible tasks ($/h).
+    pub mean_cost_per_hour: f64,
+    /// Mean SLO attainment over feasible tasks.
+    pub mean_slo_attainment: f64,
+    pub total_migrations: u64,
+    pub total_served: u64,
+    pub total_arrivals: u64,
+    pub total_dropped: i64,
+    pub total_gpu_seconds: f64,
+    pub mean_gpus: f64,
+}
+
+impl Aggregate {
+    pub fn of(results: &[ScenarioResult]) -> Aggregate {
+        let feasible: Vec<&ScenarioResult> = results.iter().filter(|r| r.feasible).collect();
+        let n = feasible.len();
+        // mean over feasible tasks only: infeasible scenarios report zero
+        // cost/attainment and would silently dilute the gate metrics
+        let mean_of = |sum: f64| if n == 0 { 0.0 } else { sum / n as f64 };
+        Aggregate {
+            tasks: results.len(),
+            feasible: n,
+            mean_cost_per_hour: mean_of(feasible.iter().map(|r| r.cost_per_hour).sum()),
+            mean_slo_attainment: mean_of(feasible.iter().map(|r| r.slo_attainment).sum()),
+            total_migrations: results.iter().map(|r| r.migrations as u64).sum(),
+            total_served: results.iter().map(|r| r.served).sum(),
+            total_arrivals: results.iter().map(|r| r.arrivals).sum(),
+            total_dropped: results.iter().map(|r| r.dropped).sum(),
+            total_gpu_seconds: results.iter().map(|r| r.gpu_seconds).sum(),
+            mean_gpus: mean_of(feasible.iter().map(|r| r.gpus as f64).sum()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("tasks", self.tasks)
+            .set("feasible", self.feasible)
+            .set("mean_cost_per_hour", self.mean_cost_per_hour)
+            .set("mean_slo_attainment", self.mean_slo_attainment)
+            .set("total_migrations", self.total_migrations)
+            .set("total_served", self.total_served)
+            .set("total_arrivals", self.total_arrivals)
+            .set("total_dropped", self.total_dropped)
+            .set("total_gpu_seconds", self.total_gpu_seconds)
+            .set("mean_gpus", self.mean_gpus)
+    }
+}
+
+/// Complete outcome of one sweep invocation.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub config: SweepConfig,
+    pub results: Vec<ScenarioResult>,
+    /// Total wall-clock of the fan-out (seconds; not deterministic).
+    pub wall_s: f64,
+}
+
+fn result_json(r: &ScenarioResult, with_wall: bool) -> Json {
+    let mut j = Json::obj()
+        .set("scenario", r.scenario)
+        .set("seed_index", r.seed_index)
+        .set("gpu", r.gpu.as_str())
+        .set("fleet", r.fleet)
+        .set("tier", r.tier)
+        .set("workloads", r.workloads)
+        .set("feasible", r.feasible)
+        .set("gpus", r.gpus)
+        .set("cost_per_hour", r.cost_per_hour)
+        .set("slo_attainment", r.slo_attainment)
+        .set("migrations", r.migrations as u64)
+        .set("served", r.served)
+        .set("arrivals", r.arrivals)
+        .set("dropped", r.dropped)
+        .set("gpu_seconds", r.gpu_seconds);
+    if with_wall {
+        j = j.set("wall_ms", r.wall_ms);
+    }
+    j
+}
+
+impl SweepReport {
+    pub fn new(config: SweepConfig, results: Vec<ScenarioResult>, wall_s: f64) -> SweepReport {
+        SweepReport {
+            config,
+            results,
+            wall_s,
+        }
+    }
+
+    pub fn aggregate(&self) -> Aggregate {
+        Aggregate::of(&self.results)
+    }
+
+    fn config_json(&self) -> Json {
+        Json::obj()
+            .set("scenarios", self.config.scenarios)
+            .set("seeds", self.config.seeds)
+            .set("master_seed", self.config.master_seed)
+            .set("min_workloads", self.config.space.min_workloads)
+            .set("max_workloads", self.config.space.max_workloads)
+            .set("epochs", self.config.space.epochs)
+            .set("epoch_ms", self.config.space.epoch_ms)
+    }
+
+    /// The deterministic subset: identical across `--parallel` widths.
+    pub fn deterministic_json(&self) -> Json {
+        Json::obj()
+            .set("config", self.config_json())
+            .set(
+                "scenarios",
+                Json::Arr(self.results.iter().map(|r| result_json(r, false)).collect()),
+            )
+            .set("aggregate", self.aggregate().to_json())
+    }
+
+    /// Compact serialization of the deterministic subset — what the
+    /// parallel==sequential property test compares.
+    pub fn fingerprint(&self) -> String {
+        self.deterministic_json().to_string()
+    }
+
+    /// Wall-clock section: total seconds, scenario throughput, and sim
+    /// throughput (served virtual requests per wall second).
+    pub fn wall_json(&self) -> Json {
+        let agg = self.aggregate();
+        let wall = self.wall_s.max(1e-9);
+        Json::obj()
+            .set("wall_s", self.wall_s)
+            .set("scenarios_per_s", self.results.len() as f64 / wall)
+            .set("served_per_wall_s", agg.total_served as f64 / wall)
+            .set("parallel", self.config.parallel)
+    }
+
+    /// Full report: deterministic subset + per-scenario wall + `wall`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("config", self.config_json())
+            .set(
+                "scenarios",
+                Json::Arr(self.results.iter().map(|r| result_json(r, true)).collect()),
+            )
+            .set("aggregate", self.aggregate().to_json())
+            .set("wall", self.wall_json())
+    }
+
+    /// Persist the full report (pretty JSON, trailing newline).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(scenario: usize, cost: f64, slo: f64) -> ScenarioResult {
+        ScenarioResult {
+            scenario,
+            seed_index: 0,
+            gpu: "V100".into(),
+            fleet: "v100",
+            tier: "nominal",
+            workloads: 12,
+            feasible: true,
+            gpus: 6,
+            cost_per_hour: cost,
+            slo_attainment: slo,
+            migrations: 2,
+            served: 1000,
+            arrivals: 1010,
+            dropped: 0,
+            gpu_seconds: 33.0,
+            wall_ms: 12.5,
+        }
+    }
+
+    fn config() -> SweepConfig {
+        SweepConfig {
+            scenarios: 2,
+            seeds: 1,
+            parallel: 4,
+            master_seed: 42,
+            space: crate::sweep::ScenarioSpace::quick(),
+        }
+    }
+
+    #[test]
+    fn aggregate_means_over_feasible_only() {
+        let mut infeasible = result(2, 0.0, 0.0);
+        infeasible.feasible = false;
+        infeasible.served = 0;
+        infeasible.arrivals = 0;
+        let agg = Aggregate::of(&[result(0, 10.0, 1.0), result(1, 30.0, 0.5), infeasible]);
+        assert_eq!(agg.tasks, 3);
+        assert_eq!(agg.feasible, 2);
+        assert!((agg.mean_cost_per_hour - 20.0).abs() < 1e-12);
+        assert!((agg.mean_slo_attainment - 0.75).abs() < 1e-12);
+        assert_eq!(agg.total_served, 2000);
+        assert_eq!(agg.total_migrations, 6);
+    }
+
+    #[test]
+    fn fingerprint_excludes_wall_clock() {
+        let a = SweepReport::new(config(), vec![result(0, 10.0, 1.0)], 1.0);
+        let mut slower = a.clone();
+        slower.wall_s = 99.0;
+        slower.results[0].wall_ms = 9999.0;
+        assert_eq!(a.fingerprint(), slower.fingerprint());
+        // ...while any deterministic metric changes it
+        let mut different = a.clone();
+        different.results[0].cost_per_hour = 11.0;
+        assert_ne!(a.fingerprint(), different.fingerprint());
+    }
+
+    #[test]
+    fn report_roundtrips_through_the_json_parser() {
+        let report = SweepReport::new(config(), vec![result(0, 18.36, 0.95)], 2.0);
+        let text = report.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.path("scenarios.0.gpu").unwrap().as_str(), Some("V100"));
+        assert_eq!(parsed.path("aggregate.feasible").unwrap().as_usize(), Some(1));
+        assert!(parsed.path("wall.scenarios_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(parsed.path("config.master_seed").unwrap().as_u64(), Some(42));
+    }
+}

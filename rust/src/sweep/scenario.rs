@@ -1,0 +1,276 @@
+//! Seeded fleet-scale scenario generation: each scenario is a randomized
+//! large workload mix (model zoo x SLO tier x arrival rate), a GPU fleet
+//! shape (homogeneous V100 / T4 or the heterogeneous pair), and a live
+//! rate trace — everything a closed-loop serving run needs.
+//!
+//! Determinism contract: a `Scenario` is a **pure function** of
+//! `(space, master_seed, id)`.  Generation derives a private SplitMix64
+//! stream per scenario (`stream`), so generating scenario 7 alone yields
+//! bit-identically the same mix as generating scenarios 0..100 — the
+//! property the parallel sweep runner relies on to merge results in
+//! submission order regardless of worker interleaving.
+
+use crate::gpu::{GpuKind, ALL_MODELS};
+use crate::provisioner::{ProfiledSystem, WorkloadSpec};
+use crate::util::rng::Rng;
+use crate::workload::envelope;
+use crate::workload::trace::TraceKind;
+
+/// Derive the independent deterministic RNG stream `(a, b)` under
+/// `master`: a fresh SplitMix64 root split twice, so distinct `(a, b)`
+/// pairs never share state and the result is order-independent.
+pub fn stream(master: u64, a: u64, b: u64) -> Rng {
+    let mut root = Rng::new(master);
+    let mut lane = root.split(a);
+    lane.split(b)
+}
+
+/// SLO tightness tier of a scenario: which band of each model's feasible
+/// SLO envelope the workload SLOs are sampled from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloTier {
+    /// Lower third of the envelope — latency-critical serving.
+    Tight,
+    /// The full envelope (the Fig.-21 synthetic distribution).
+    Nominal,
+    /// Upper third — throughput-oriented batch-ish serving.
+    Relaxed,
+}
+
+impl SloTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloTier::Tight => "tight",
+            SloTier::Nominal => "nominal",
+            SloTier::Relaxed => "relaxed",
+        }
+    }
+}
+
+/// GPU fleet shape offered to the provisioner.  `Heterogeneous` lets
+/// `provisioner::heterogeneous::select_cheapest` pick the cheaper of the
+/// per-type plans (replicating workloads a weaker GPU cannot hold alone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fleet {
+    V100Only,
+    T4Only,
+    Heterogeneous,
+}
+
+impl Fleet {
+    pub fn name(self) -> &'static str {
+        match self {
+            Fleet::V100Only => "v100",
+            Fleet::T4Only => "t4",
+            Fleet::Heterogeneous => "hetero",
+        }
+    }
+
+    /// The candidate systems of this fleet, as a sub-slice of the
+    /// `[V100, T4]` profiled pair.
+    pub fn systems<'a>(self, pair: &'a [ProfiledSystem]) -> &'a [ProfiledSystem] {
+        debug_assert_eq!(pair.len(), 2);
+        match self {
+            Fleet::V100Only => &pair[0..1],
+            Fleet::T4Only => &pair[1..2],
+            Fleet::Heterogeneous => pair,
+        }
+    }
+}
+
+/// The sampling space a sweep draws scenarios from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpace {
+    /// Workload-mix size range (inclusive).
+    pub min_workloads: usize,
+    pub max_workloads: usize,
+    /// Trace shape: epochs x epoch span of virtual time.
+    pub epochs: usize,
+    pub epoch_ms: f64,
+    /// Serving-stats warm-up excluded from latency records (ms).
+    pub warmup_ms: f64,
+    /// Fleet shapes scenarios may sample.
+    pub fleets: Vec<Fleet>,
+}
+
+impl ScenarioSpace {
+    /// CI-quick profile: small mixes over short horizons, sized so a
+    /// 200-scenario x 2-seed sweep finishes inside a CI job.
+    pub fn quick() -> ScenarioSpace {
+        ScenarioSpace {
+            min_workloads: 12,
+            max_workloads: 40,
+            epochs: 4,
+            epoch_ms: 1_500.0,
+            warmup_ms: 500.0,
+            fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
+        }
+    }
+
+    /// Full fleet-scale profile (ParvaGPU regime): 100-1000-workload
+    /// mixes over a longer horizon.  Not run in CI.
+    pub fn full() -> ScenarioSpace {
+        ScenarioSpace {
+            min_workloads: 100,
+            max_workloads: 1_000,
+            epochs: 12,
+            epoch_ms: 2_500.0,
+            warmup_ms: 1_000.0,
+            fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
+        }
+    }
+
+    /// Virtual serving horizon of one scenario (ms).
+    pub fn horizon_ms(&self) -> f64 {
+        self.epochs as f64 * self.epoch_ms
+    }
+}
+
+/// One randomized fleet-scale serving scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub id: usize,
+    pub fleet: Fleet,
+    pub tier: SloTier,
+    pub trace: TraceKind,
+    pub specs: Vec<WorkloadSpec>,
+    pub epochs: usize,
+    pub epoch_ms: f64,
+    pub warmup_ms: f64,
+}
+
+impl Scenario {
+    /// Generate scenario `id` of a sweep — pure in `(space, master, id)`.
+    pub fn generate(space: &ScenarioSpace, master: u64, id: usize) -> Scenario {
+        let mut rng = stream(master, 1, id as u64 + 1);
+        let hi = space.max_workloads.max(space.min_workloads) as u64;
+        let n = rng.range_u64(space.min_workloads as u64, hi) as usize;
+        let fleet = space.fleets[rng.below(space.fleets.len() as u64) as usize];
+        let tier = match rng.below(3) {
+            0 => SloTier::Tight,
+            1 => SloTier::Nominal,
+            _ => SloTier::Relaxed,
+        };
+        let trace = match rng.below(3) {
+            0 => TraceKind::Diurnal {
+                period_epochs: space.epochs.max(1),
+                floor: rng.range_f64(0.25, 0.45),
+            },
+            1 => TraceKind::Spiky {
+                base: rng.range_f64(0.25, 0.5),
+                p: rng.range_f64(0.15, 0.35),
+            },
+            _ => TraceKind::Ramp {
+                from: rng.range_f64(0.2, 0.5),
+                to: rng.range_f64(0.8, 1.0),
+            },
+        };
+        let specs = (0..n)
+            .map(|i| {
+                let model = ALL_MODELS[rng.below(ALL_MODELS.len() as u64) as usize];
+                let (slo_lo, slo_hi, rate_lo, rate_hi) = envelope(model);
+                // tier picks the band of the feasible envelope, so every
+                // sampled SLO stays provisionable on the stronger GPU
+                let span = slo_hi - slo_lo;
+                let (lo, hi) = match tier {
+                    SloTier::Tight => (slo_lo, slo_lo + 0.35 * span),
+                    SloTier::Nominal => (slo_lo, slo_hi),
+                    SloTier::Relaxed => (slo_lo + 0.65 * span, slo_hi),
+                };
+                WorkloadSpec::new(i, model, rng.range_f64(lo, hi), rng.range_f64(rate_lo, rate_hi).round())
+            })
+            .collect();
+        Scenario {
+            id,
+            fleet,
+            tier,
+            trace,
+            specs,
+            epochs: space.epochs,
+            epoch_ms: space.epoch_ms,
+            warmup_ms: space.warmup_ms,
+        }
+    }
+
+    pub fn horizon_ms(&self) -> f64 {
+        self.epochs as f64 * self.epoch_ms
+    }
+}
+
+/// Build the profiled `[V100, T4]` pair every sweep provisions against
+/// (deterministic per profiling seed; computed once and shared read-only
+/// by all workers).
+pub fn profiled_pair(seed: u64) -> Vec<ProfiledSystem> {
+    [GpuKind::V100, GpuKind::T4]
+        .into_iter()
+        .map(|kind| crate::experiments::common::profiled_system(kind, seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_pure_in_master_and_id() {
+        let space = ScenarioSpace::quick();
+        let a = Scenario::generate(&space, 42, 7);
+        let b = Scenario::generate(&space, 42, 7);
+        assert_eq!(a, b);
+        // neighbours nor master reuse the stream
+        assert_ne!(a.specs, Scenario::generate(&space, 42, 8).specs);
+        assert_ne!(a.specs, Scenario::generate(&space, 43, 7).specs);
+    }
+
+    #[test]
+    fn sizes_respect_the_space() {
+        let space = ScenarioSpace::quick();
+        for id in 0..50 {
+            let s = Scenario::generate(&space, 1, id);
+            assert!(
+                (space.min_workloads..=space.max_workloads).contains(&s.specs.len()),
+                "scenario {id}: {} workloads",
+                s.specs.len()
+            );
+            assert!(s.specs.iter().all(|w| w.slo_ms > 0.0 && w.rate_rps > 0.0));
+        }
+    }
+
+    #[test]
+    fn slos_stay_inside_the_feasible_envelope() {
+        let space = ScenarioSpace::quick();
+        for id in 0..50 {
+            for w in &Scenario::generate(&space, 9, id).specs {
+                let (lo, hi, rlo, rhi) = envelope(w.model);
+                assert!((lo - 1e-9..=hi + 1e-9).contains(&w.slo_ms), "{w:?}");
+                assert!((rlo - 1.0..=rhi + 1.0).contains(&w.rate_rps), "{w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_fleets_and_tiers_get_sampled() {
+        let space = ScenarioSpace::quick();
+        let scenarios: Vec<Scenario> =
+            (0..60).map(|id| Scenario::generate(&space, 5, id)).collect();
+        for fleet in [Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous] {
+            assert!(scenarios.iter().any(|s| s.fleet == fleet), "{fleet:?} never drawn");
+        }
+        for tier in [SloTier::Tight, SloTier::Nominal, SloTier::Relaxed] {
+            assert!(scenarios.iter().any(|s| s.tier == tier), "{tier:?} never drawn");
+        }
+    }
+
+    #[test]
+    fn stream_lanes_are_independent() {
+        let mut a = stream(3, 1, 1);
+        let mut b = stream(3, 1, 2);
+        let mut c = stream(3, 2, 1);
+        let xs: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        assert!(xs.iter().zip((0..32).map(|_| b.next_u64())).all(|(x, y)| *x != y));
+        assert!(xs.iter().zip((0..32).map(|_| c.next_u64())).all(|(x, y)| *x != y));
+        // and re-derivable: the same lane replays bit-identically
+        let mut a2 = stream(3, 1, 1);
+        assert_eq!(xs, (0..32).map(|_| a2.next_u64()).collect::<Vec<_>>());
+    }
+}

@@ -200,11 +200,22 @@ impl SlidingWindow {
 
     /// Values recorded at `t >= since` (newest-bounded by the span).
     pub fn values_since(&self, since: f64) -> Vec<f64> {
-        self.buf
-            .iter()
-            .filter(|(t, _)| *t >= since)
-            .map(|(_, v)| *v)
-            .collect()
+        let mut out = Vec::new();
+        self.values_since_into(since, &mut out);
+        out
+    }
+
+    /// Append the values recorded at `t >= since` to `out` without
+    /// allocating a fresh vector — the timeline sampler pools every
+    /// replica of a group into one reused scratch buffer per monitor
+    /// tick, so large sweeps don't churn an allocation per replica.
+    pub fn values_since_into(&self, since: f64, out: &mut Vec<f64>) {
+        out.extend(
+            self.buf
+                .iter()
+                .filter(|(t, _)| *t >= since)
+                .map(|(_, v)| *v),
+        );
     }
 
     /// Percentile of the samples at `t >= since`; `None` below

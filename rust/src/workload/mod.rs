@@ -121,19 +121,28 @@ impl ArrivalStream {
     }
 }
 
+/// Per-model feasible envelope `(slo_lo_ms, slo_hi_ms, rate_lo_rps,
+/// rate_hi_rps)` — the Fig.-21 synthetic distribution, provisionable on
+/// the stronger GPU at full resources.  Single source for both
+/// `synthetic_workloads` and the sweep scenario generator
+/// (`sweep::scenario`): tune a band here and every consumer follows.
+pub fn envelope(model: Model) -> (f64, f64, f64, f64) {
+    match model {
+        Model::AlexNet => (10.0, 25.0, 200.0, 1200.0),
+        Model::ResNet50 => (20.0, 45.0, 100.0, 600.0),
+        Model::Vgg19 => (25.0, 60.0, 50.0, 400.0),
+        Model::Ssd => (30.0, 60.0, 30.0, 300.0),
+    }
+}
+
 /// Synthetic workload sets for scalability studies (Fig. 21): `n` workloads
 /// cycling through the zoo with randomized-but-feasible SLOs and rates.
 pub fn synthetic_workloads(n: usize, seed: u64) -> Vec<WorkloadSpec> {
     let mut rng = Rng::new(seed);
     (0..n)
         .map(|i| {
-            let model = crate::gpu::ALL_MODELS[i % 4];
-            let (slo_lo, slo_hi, rate_lo, rate_hi) = match model {
-                Model::AlexNet => (10.0, 25.0, 200.0, 1200.0),
-                Model::ResNet50 => (20.0, 45.0, 100.0, 600.0),
-                Model::Vgg19 => (25.0, 60.0, 50.0, 400.0),
-                Model::Ssd => (30.0, 60.0, 30.0, 300.0),
-            };
+            let model = crate::gpu::ALL_MODELS[i % crate::gpu::ALL_MODELS.len()];
+            let (slo_lo, slo_hi, rate_lo, rate_hi) = envelope(model);
             WorkloadSpec::new(
                 i,
                 model,

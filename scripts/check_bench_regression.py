@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Gate a sweep bench run against the committed baseline.
+
+Usage: check_bench_regression.py BENCH_baseline.json BENCH_sweep.json
+
+Compares three headline metrics of ``igniter sweep`` output:
+
+* ``aggregate.mean_cost_per_hour``  — lower is better; fail if the
+  candidate costs more than ``(1 + tol) x`` baseline.
+* ``aggregate.mean_slo_attainment`` — higher is better; fail if below
+  ``(1 - tol) x`` baseline.
+* ``wall.served_per_wall_s``        — sim throughput, higher is better;
+  fail if below ``(1 - wall_tol) x`` baseline.  Wall-clock is
+  machine-noisy (hosted CI runners vary well beyond 20%), so it gets
+  its own, wider tolerance and only gates when the baseline carries a
+  measured value — bless the baseline FROM A CI ARTIFACT (download the
+  ``bench-sweep`` artifact of a green run and commit it), never from a
+  faster dev machine.
+
+``tol`` defaults to 0.20 (the 20% CI gate) and can be overridden with
+``BENCH_TOLERANCE``; ``wall_tol`` defaults to 0.50 and can be
+overridden with ``BENCH_WALL_TOLERANCE``.  A baseline marked ``"provisional": true`` (one that
+was estimated rather than measured — see rust/tests/golden/README.md)
+widens the deterministic tolerances 5x and skips the throughput gate
+entirely; the job then prints a re-bless notice instead of pretending
+the gate is sharp.  Structural validation (valid JSON, feasible tasks,
+zero dropped requests) always applies.
+"""
+
+import json
+import os
+import sys
+
+
+def die(msg: str) -> None:
+    print(f"BENCH GATE FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def metric(doc: dict, path: str) -> float:
+    cur = doc
+    for seg in path.split("."):
+        if not isinstance(cur, dict) or seg not in cur:
+            die(f"missing metric '{path}'")
+        cur = cur[seg]
+    if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+        die(f"metric '{path}' is not a number: {cur!r}")
+    return float(cur)
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        die(f"usage: {sys.argv[0]} BENCH_baseline.json BENCH_sweep.json")
+    base_path, cand_path = sys.argv[1], sys.argv[2]
+    try:
+        with open(base_path) as f:
+            base = json.load(f)
+        with open(cand_path) as f:
+            cand = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        die(f"cannot load inputs: {e}")
+
+    # -- structural validity of the candidate run -------------------------
+    tasks = metric(cand, "aggregate.tasks")
+    feasible = metric(cand, "aggregate.feasible")
+    dropped = metric(cand, "aggregate.total_dropped")
+    served = metric(cand, "aggregate.total_served")
+    if tasks <= 0 or feasible <= 0:
+        die(f"sweep ran no feasible tasks (tasks={tasks}, feasible={feasible})")
+    if dropped != 0:
+        die(f"sweep dropped {dropped} requests — conservation violated")
+    if served <= 0:
+        die("sweep served no requests")
+    if not isinstance(cand.get("scenarios"), list) or not cand["scenarios"]:
+        die("candidate report has no per-scenario results")
+
+    # -- comparability: the sweep shape must match the baseline's --------
+    # (a different scenario count / seed count / master seed / space draws
+    # from a different distribution, so ratio-gating the means would be
+    # meaningless; parallel width is deliberately not part of the config
+    # block — it never changes the deterministic results)
+    base_cfg = base.get("config", {})
+    cand_cfg = cand.get("config", {})
+    mismatched = sorted(
+        k for k in set(base_cfg) | set(cand_cfg) if base_cfg.get(k) != cand_cfg.get(k)
+    )
+    if mismatched:
+        die(
+            "sweep config does not match the baseline's "
+            f"({', '.join(f'{k}: {base_cfg.get(k)!r} vs {cand_cfg.get(k)!r}' for k in mismatched)}); "
+            "run the gated sweep with the baseline's shape (make sweep-quick) "
+            "or re-bless the baseline"
+        )
+
+    tol = float(os.environ.get("BENCH_TOLERANCE", "0.20"))
+    wall_tol = float(os.environ.get("BENCH_WALL_TOLERANCE", "0.50"))
+    provisional = bool(base.get("provisional", False))
+    det_tol = tol * 5.0 if provisional else tol
+
+    failures = []
+
+    def gate(name: str, path: str, higher_is_better: bool, t: float) -> None:
+        b = metric(base, path)
+        c = metric(cand, path)
+        if b <= 0:
+            return  # nothing meaningful to compare against
+        ratio = c / b
+        ok = ratio >= (1.0 - t) if higher_is_better else ratio <= (1.0 + t)
+        arrow = ">= " + f"{1.0 - t:.2f}" if higher_is_better else "<= " + f"{1.0 + t:.2f}"
+        status = "ok" if ok else "REGRESSED"
+        print(f"  {name:<22} baseline {b:12.4f}  candidate {c:12.4f}  ratio {ratio:6.3f} ({arrow}) {status}")
+        if not ok:
+            failures.append(name)
+
+    print(f"bench gate: tolerance {det_tol:.0%}" + (" (provisional baseline)" if provisional else ""))
+    gate("cost_per_hour", "aggregate.mean_cost_per_hour", False, det_tol)
+    gate("slo_attainment", "aggregate.mean_slo_attainment", True, det_tol)
+    if provisional:
+        print("  sim_throughput         skipped (baseline throughput is not a measurement)")
+    else:
+        gate("sim_throughput", "wall.served_per_wall_s", True, wall_tol)
+
+    if provisional:
+        print(
+            "\nNOTICE: BENCH_baseline.json is PROVISIONAL (estimated, not measured).\n"
+            "Re-bless it from a real run on a reference machine:\n"
+            "    make bless-bench\n"
+            "then commit the regenerated baseline to sharpen this gate to "
+            f"{tol:.0%}.",
+        )
+
+    if failures:
+        die(f"regressed metrics: {', '.join(failures)}")
+    print("bench gate: PASS")
+
+
+if __name__ == "__main__":
+    main()
