@@ -6,6 +6,7 @@
 //! (`alloc_gpus`) and the Eq.-17/18 closed forms.
 
 use igniter::gpu::GpuKind;
+use igniter::perfmodel::AnalyticModel;
 use igniter::provisioner::{ffd, gpulets, gslice, igniter as ig, ProfiledSystem};
 use igniter::util::bench::{bench, bench_once};
 use igniter::workload::{app_workloads, synthetic_workloads};
@@ -35,7 +36,7 @@ fn main() {
         batch: derived[1].unwrap().batch,
     }];
     bench("alloc_gpus(alg2, 1 resident)", 20, 200, || {
-        ig::alloc_gpus(&s, &specs12, &resident, 11, d0.r_lower, d0.batch)
+        ig::alloc_gpus(&AnalyticModel::ALL, &s, &specs12, &resident, 11, d0.r_lower, d0.batch)
     });
 
     bench("igniter_provision(m=12)  [paper: 3.64 ms]", 5, 50, || {

@@ -1,10 +1,14 @@
 //! Bench: fleet-scale sweep throughput — the numbers behind the CI
-//! `bench-sweep` gate.  Reports (a) single closed-loop scenario latency,
-//! (b) sequential vs parallel sweep wall-clock over the same task set
-//! (the speedup is the whole point of the scoped-worker fan-out), and
-//! (c) served virtual requests per wall second, the sim-throughput
-//! metric `BENCH_sweep.json` tracks run-over-run.
+//! `bench-sweep` gate.  Reports (a) the placement-scoring microbench
+//! (incremental `DeviceScorer` vs the old rebuild-per-candidate pattern
+//! — the O(1)-per-candidate claim as a measured ratio), (b) single
+//! closed-loop scenario latency, (c) sequential vs parallel sweep
+//! wall-clock over the same task set (the speedup is the whole point of
+//! the scoped-worker fan-out), and (d) served virtual requests per wall
+//! second, the sim-throughput metric `BENCH_sweep.json` tracks
+//! run-over-run.
 
+use igniter::perfmodel::{self, DeviceScorer, PlacedWorkload};
 use igniter::sweep::{profiled_pair, run_sweep, run_task, ScenarioSpace, SweepConfig};
 use igniter::util::bench::{bench, bench_once};
 
@@ -15,15 +19,78 @@ fn cfg(parallel: usize, scenarios: usize) -> SweepConfig {
         parallel,
         master_seed: 42,
         space: ScenarioSpace::quick(),
+        calibrate: false,
     }
 }
 
 fn main() {
     println!("== sweep benches ==");
 
+    // Placement-scoring microbench: Alg. 2's inner loop evaluates every
+    // resident of a device each growth pass.  The old pattern rebuilt
+    // the placed view and re-summed the aggregates per candidate (O(m)
+    // coefficient-law evaluations each); the DeviceScorer answers each
+    // candidate in O(1) from cached per-slot contributions.  Both sides
+    // here do 8 passes x m candidates over an m-resident device, with a
+    // resize between passes (the growth step), and must agree bitwise.
+    let systems = profiled_pair(42);
+    let hw = &systems[0].hw;
+    let coeffs: Vec<_> = systems[0].coeffs.iter().map(|(_, wc)| wc).collect();
+    let m = 8usize;
+    let base: Vec<PlacedWorkload> = (0..m)
+        .map(|i| PlacedWorkload {
+            coeffs: coeffs[i % coeffs.len()],
+            batch: 4.0 + (i % 4) as f64 * 4.0,
+            resources: 0.1,
+        })
+        .collect();
+    let passes = 8usize;
+    let inc = bench("placement scoring: DeviceScorer (incremental)", 50, 400, || {
+        let mut scorer = DeviceScorer::from_placed(hw, base.iter().cloned());
+        let mut acc = 0.0;
+        for pass in 0..passes {
+            for i in 0..m {
+                acc += scorer.predict(i).t_inf;
+            }
+            let grow = pass % m;
+            let r = scorer.placed(grow).resources + hw.r_unit;
+            scorer.set_resources(grow, r);
+        }
+        acc
+    });
+    let rebuild = bench("placement scoring: rebuild per candidate (old)", 50, 400, || {
+        let mut placed = base.clone();
+        let mut acc = 0.0;
+        for pass in 0..passes {
+            for i in 0..m {
+                // the pre-refactor shape: a fresh Vec + full re-sum per
+                // candidate prediction
+                let view: Vec<PlacedWorkload> = placed.to_vec();
+                acc += perfmodel::predict(hw, &view, i).t_inf;
+            }
+            let grow = pass % m;
+            placed[grow].resources += hw.r_unit;
+        }
+        acc
+    });
+    println!(
+        "  -> scorer speedup {:.2}x per candidate-scan",
+        rebuild.mean_ns / inc.mean_ns.max(1.0)
+    );
+    // equality of the two paths (bitwise) is property-tested in
+    // perfmodel::scorer; here we just sanity-check the workload agreed
+    {
+        let scorer = DeviceScorer::from_placed(hw, base.iter().cloned());
+        for i in 0..m {
+            assert_eq!(
+                scorer.predict(i).t_inf.to_bits(),
+                perfmodel::predict(hw, &base, i).t_inf.to_bits()
+            );
+        }
+    }
+
     // Single-task latency: provision + closed-loop serve of one quick
     // scenario (the unit of work the fan-out schedules).
-    let systems = profiled_pair(42);
     let one = cfg(1, 1);
     bench("sweep_task quick scenario (provision+serve)", 1, 5, || {
         let r = run_task(&one, &systems, 0);

@@ -25,10 +25,10 @@ pub use batcher::{BatchDecision, BatchPolicy, BatchView, EagerBatcher, TritonAda
 pub use estimator::{Drift, RateEstimator};
 pub use monitor::{
     GsliceTuner, PolicyCtx, Reprovisioner, ServingPolicy, ShadowFailover, StaticPolicy,
-    DEFAULT_SAFETY, MONITOR_PERIOD_MS, SHADOW_EXTRA,
+    DEFAULT_SAFETY, EXEC_OBS_SPAN_MS, MONITOR_PERIOD_MS, SHADOW_EXTRA,
 };
 pub use router::{RouteStrategy, Router};
 pub use server::{
-    ClusterSim, Policy, ReplicaPhase, ReplicaState, TimelinePoint, WorkloadStats,
-    MIGRATION_WARMUP_MS,
+    dropped_requests, ClusterSim, Policy, ReplicaPhase, ReplicaState, TimelinePoint,
+    WorkloadStats, MIGRATION_WARMUP_MS,
 };

@@ -15,6 +15,7 @@
 use super::estimator::{Drift, RateEstimator};
 use super::server::{ReplicaPhase, ReplicaState};
 use crate::gpu::GpuDevice;
+use crate::perfmodel::{rel_error, CalibratedModel};
 use crate::provisioner::{diff_plans, OnlinePlanner, Plan, PlanDelta, ProfiledSystem, WorkloadSpec};
 
 /// Extra GPU resources granted to an activated shadow process: the smaller
@@ -53,6 +54,13 @@ pub trait ServingPolicy {
     }
     /// Called every `tune_period_ms()` when `Some`.
     fn on_tune(&mut self, _now: f64, _ctx: &mut PolicyCtx) {}
+    /// Model-vs-observation relative latency errors the policy recorded
+    /// over the run (empty unless the policy tracks predictions — see
+    /// `Reprovisioner`).  Consumers: the sweep report's
+    /// mean/p95-prediction-error metrics and the calibration experiment.
+    fn prediction_errors(&self) -> &[f64] {
+        &[]
+    }
 }
 
 /// Static plan: no runtime adjustment.
@@ -95,6 +103,7 @@ impl ShadowFailover {
         // final stats (P99 / achieved rate) describe the post-switch
         // process — the pre-switch violations are what the switch fixed
         rep.window.clear();
+        rep.exec_window.clear();
         rep.hist.clear();
         rep.recorded = 0;
         rep.lat_sum = 0.0;
@@ -174,6 +183,10 @@ impl ServingPolicy for GsliceTuner {
     }
 }
 
+/// Span of recent exec-latency observations fed to calibration and the
+/// prediction-error telemetry (ms).
+pub const EXEC_OBS_SPAN_MS: f64 = 2_000.0;
+
 /// Observed rate above this fraction of the allocation's predicted
 /// capacity counts as headroom collapse (re-plan before queues build).
 pub const HEADROOM_COLLAPSE: f64 = 0.90;
@@ -200,6 +213,14 @@ pub struct Reprovisioner {
     last_migration_ms: Vec<f64>,
     last_rebalance_ms: f64,
     migrations_planned: u32,
+    /// Online calibration: feed serving-observed exec latencies into the
+    /// planner's `CalibratedModel` and re-plan when the *corrected* model
+    /// predicts an SLO breach (off by default — the planner then keeps
+    /// the static analytic model and behaves exactly as before).
+    calibrate: bool,
+    /// rel_error(model-predicted t_inf, observed exec) per (tick,
+    /// workload) with observations — the prediction-error telemetry.
+    pred_errors: Vec<f64>,
     /// Re-plan for `observed x safety` so the fresh allocation keeps
     /// headroom while the estimator chases a rising rate.
     pub safety: f64,
@@ -223,6 +244,8 @@ impl Reprovisioner {
             last_migration_ms: vec![f64::NEG_INFINITY; n],
             last_rebalance_ms: 0.0,
             migrations_planned: 0,
+            calibrate: false,
+            pred_errors: Vec::new(),
             safety: DEFAULT_SAFETY,
             // three monitor ticks: short enough to track a steep diurnal
             // slope step-by-step, long enough to stop per-tick churn
@@ -231,7 +254,32 @@ impl Reprovisioner {
         }
     }
 
-    /// Number of re-plans (drift respecs + adopted rebalances) so far.
+    /// Enable online calibration: the embedded planner re-plans with a
+    /// `CalibratedModel` whose residual corrections are fit (recursive
+    /// least squares) from the exec latencies the serving loop observes —
+    /// the closed-loop answer to model mismatch (the Fig.-17 story made
+    /// proactive).  With zero observations the calibrated model is
+    /// bitwise the analytic one, so enabling this changes nothing until
+    /// real observations diverge from the predictions.
+    pub fn with_calibration(mut self) -> Reprovisioner {
+        self.calibrate = true;
+        self.planner.set_model(Box::new(CalibratedModel::new()));
+        self
+    }
+
+    /// Is online calibration enabled?
+    pub fn calibrating(&self) -> bool {
+        self.calibrate
+    }
+
+    /// Observations absorbed by the planner's model (0 when static).
+    pub fn model_observations(&self) -> u64 {
+        self.planner.model().observations()
+    }
+
+    /// Number of **plan-changing** re-plans (drift/violation respecs +
+    /// adopted rebalances) so far; respecs that reproduce the standing
+    /// placement are not counted.
     pub fn migrations_planned(&self) -> u32 {
         self.migrations_planned
     }
@@ -259,6 +307,24 @@ impl Reprovisioner {
                 && matches!(r.phase, ReplicaPhase::Warming | ReplicaPhase::Draining)
         })
     }
+
+    /// Recent observed execution latency of workload `w` (ms): mean over
+    /// its Active replicas' exec windows (dispatch -> completion + load,
+    /// queueing excluded — directly comparable to predicted t_inf).
+    fn observed_exec_ms(ctx: &PolicyCtx, w: usize, now: f64) -> Option<f64> {
+        let mut sum = 0.0;
+        let mut n = 0u32;
+        for r in ctx.replicas.iter() {
+            if r.workload != w || r.phase != ReplicaPhase::Active {
+                continue;
+            }
+            if let Some(m) = r.exec_window.mean_since(now - EXEC_OBS_SPAN_MS, 1) {
+                sum += m;
+                n += 1;
+            }
+        }
+        (n > 0).then(|| sum / n as f64)
+    }
 }
 
 impl ServingPolicy for Reprovisioner {
@@ -271,6 +337,63 @@ impl ServingPolicy for Reprovisioner {
     }
 
     fn reprovision(&mut self, now: f64, ctx: &mut PolicyCtx) -> Vec<PlanDelta> {
+        // 0. one prediction pass per workload: error telemetry, and (when
+        //    calibrating) the model feed plus the predicted-violation
+        //    flags step 2 consumes.  The error series is recorded
+        //    unconditionally — it is pure telemetry — but only the
+        //    calibrated model absorbs observations, so with calibration
+        //    off the serving behaviour is exactly the pre-calibration
+        //    one.  The flags are sampled before this tick's observations
+        //    update the fit (one-tick lag, well inside the re-plan
+        //    cooldown) so each workload costs a single `predict_full` —
+        //    which builds a device view per call — instead of two.
+        let mut predicted_violation = vec![false; self.estimators.len()];
+        for w in 0..self.estimators.len() {
+            let observed = Self::observed_exec_ms(ctx, w, now);
+            if observed.is_none() && !self.calibrate {
+                continue; // nothing to record, no trigger to arm
+            }
+            let id = self.live_ids[w];
+            // Prediction side of the pairing.  When calibrating, the fit's
+            // correctness requires the group mean: the observation side
+            // averages every Active replica, and replicas under different
+            // co-location would otherwise bias the residual.  With
+            // calibration off this is telemetry only, so the cheap
+            // first-replica view keeps the default sweep's monitor tick
+            // at its pre-calibration cost (predict_group_mean scans the
+            // whole plan per workload; fine opt-in, not fine by default —
+            // the group-mean-vs-first-replica pairing skew is then an
+            // accepted telemetry approximation for replicated workloads).
+            let pred = if self.calibrate {
+                self.planner.predict_group_mean(id)
+            } else {
+                self.planner
+                    .predict_full(id)
+                    .map(|(r, c)| (r.t_inf, c.t_inf))
+            };
+            let Some((raw, corrected)) = pred else {
+                continue;
+            };
+            if self.calibrate {
+                // calibration-only trigger: the corrected model says this
+                // allocation no longer meets the half-SLO design point
+                // (the analytic model can never trip this — its own
+                // alloc_gpus growth guarantees the bound at plan time)
+                predicted_violation[w] =
+                    corrected > self.planner.specs()[id].slo_ms / 2.0 + 1e-9;
+            }
+            if let Some(observed) = observed {
+                self.pred_errors.push(rel_error(corrected, observed));
+                if self.calibrate {
+                    // train on the RAW analytic prediction: fitting
+                    // against the already-corrected one would be
+                    // self-referential
+                    let key = self.planner.specs()[id].model.name();
+                    self.planner.model_mut().observe(key, raw, observed);
+                }
+            }
+        }
+
         // 1. tick every estimator (the EWMA must advance even for
         //    workloads that cannot act this tick)
         for est in &mut self.estimators {
@@ -298,7 +421,9 @@ impl ServingPolicy for Reprovisioner {
                 continue; // one migration per workload at a time
             }
             let drift = self.estimators[w].sustained_drift();
-            if drift.is_none() && self.collapse_ticks[w] < COLLAPSE_SUSTAIN {
+            let predicted_violation = predicted_violation[w];
+            if drift.is_none() && self.collapse_ticks[w] < COLLAPSE_SUSTAIN && !predicted_violation
+            {
                 continue;
             }
             // Down-drift re-plans are lazy by construction (DOWN_DRIFT
@@ -317,11 +442,17 @@ impl ServingPolicy for Reprovisioner {
             let mut adopted = None;
             let before = self.planner.plan().clone();
             for &target in &candidates {
-                let gains = if drift == Some(Drift::Down) {
-                    target < planned
-                } else {
-                    target > planned * 1.02
-                };
+                // a predicted violation re-plans even at an unchanged (or
+                // gently declining) design point: the goal is a
+                // re-*sized* placement under the corrected model, not a
+                // new rate target — without it, a mild Down drift would
+                // gate every candidate and leave the breach standing
+                let gains = predicted_violation
+                    || if drift == Some(Drift::Down) {
+                        target < planned
+                    } else {
+                        target > planned * 1.02
+                    };
                 if !gains {
                     break;
                 }
@@ -335,15 +466,18 @@ impl ServingPolicy for Reprovisioner {
             if let Some((new_id, target)) = adopted {
                 let mut new_ids = self.live_ids.clone();
                 new_ids[w] = new_id;
-                deltas.extend(diff_plans(
-                    &before,
-                    self.planner.plan(),
-                    &self.live_ids,
-                    &new_ids,
-                ));
+                let moved = diff_plans(&before, self.planner.plan(), &self.live_ids, &new_ids);
                 self.live_ids = new_ids;
                 self.estimators[w].replanned(target);
-                self.migrations_planned += 1;
+                // count only plan-*changing* re-plans: a respec that
+                // reproduces the same placement (e.g. a best-effort
+                // allocation the corrected model still predicts past the
+                // SLO — nothing further to do) must not inflate the
+                // migrations metric every cooldown period
+                if !moved.is_empty() {
+                    self.migrations_planned += 1;
+                    deltas.extend(moved);
+                }
             }
         }
 
@@ -374,6 +508,10 @@ impl ServingPolicy for Reprovisioner {
             }
         }
         deltas
+    }
+
+    fn prediction_errors(&self) -> &[f64] {
+        &self.pred_errors
     }
 }
 
@@ -477,6 +615,163 @@ mod tests {
             before_alloc,
             after[0].1.resources
         );
+    }
+
+    #[test]
+    fn calibration_learns_slowdown_and_replans_proactively() {
+        // Simulate a world whose true exec latency runs 1.4x the analytic
+        // prediction at every operating point (a coefficient-mismatch
+        // regime): the calibrated reprovisioner must learn the residual
+        // from the observed exec stream, trip the predicted-violation
+        // trigger, and grow W1's allocation until the *corrected* model
+        // meets the half-SLO again — all without any rate drift.
+        use crate::util::stats::{LatencyHistogram, SlidingWindow};
+        use std::collections::VecDeque;
+
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let (gpu0, alloc0) = plan.find(0).unwrap();
+        let r_before = alloc0.resources;
+        let mut rp = Reprovisioner::new(s, specs.clone(), plan.clone()).with_calibration();
+        rp.rebalance_period_ms = 0.0;
+        assert!(rp.calibrating());
+
+        let mut devices: Vec<GpuDevice> = Vec::new();
+        let mut replicas = vec![ReplicaState {
+            spec: specs[0].clone(),
+            workload: 0,
+            gpu: gpu0,
+            tag: 0,
+            resources: alloc0.resources,
+            batch: alloc0.batch,
+            queue: VecDeque::new(),
+            busy: false,
+            exec_estimate: specs[0].slo_ms / 4.0,
+            window: SlidingWindow::new(10_000.0),
+            exec_window: SlidingWindow::new(10_000.0),
+            hist: LatencyHistogram::new(),
+            served: 0,
+            recorded: 0,
+            lat_sum: 0.0,
+            queue_sum: 0.0,
+            exec_sum: 0.0,
+            shadow_active: false,
+            switches: 0,
+            phase: ReplicaPhase::Active,
+        }];
+        let rates = planned_rates(&specs);
+        let mut clocks = vec![0.0; specs.len()];
+        for tick in 1..=24u32 {
+            let now = tick as f64 * MONITOR_PERIOD_MS;
+            // ground truth: observed exec = 1.4x the analytic prediction
+            // of the *current* allocation
+            let raw_now = rp.planner.predict_full(rp.live_ids[0]).unwrap().0;
+            replicas[0].exec_window.push(now, raw_now.t_inf * 1.4);
+            for (w, &rate) in rates.iter().enumerate() {
+                let gap = 1000.0 / rate;
+                while clocks[w] < now {
+                    rp.on_arrival(clocks[w], w);
+                    clocks[w] += gap;
+                }
+            }
+            let mut ctx = PolicyCtx {
+                devices: &mut devices,
+                replicas: &mut replicas,
+            };
+            let _ = rp.reprovision(now, &mut ctx);
+        }
+
+        assert!(
+            rp.model_observations() >= crate::perfmodel::MIN_OBSERVATIONS,
+            "only {} observations absorbed",
+            rp.model_observations()
+        );
+        assert!(!rp.prediction_errors().is_empty());
+        assert!(
+            rp.migrations_planned() >= 1,
+            "calibration never triggered a re-plan"
+        );
+        // the corrected prediction of the re-planned allocation is back
+        // inside the design point, and the allocation actually grew
+        let id = rp.live_ids[0];
+        let (_, corrected) = rp.planner.predict_full(id).unwrap();
+        assert!(
+            corrected.t_inf <= specs[0].slo_ms / 2.0 * 1.05,
+            "corrected t_inf {:.2} still past half-SLO",
+            corrected.t_inf
+        );
+        let r_after: f64 = rp.plan().replicas(id).iter().map(|(_, a)| a.resources).sum();
+        assert!(
+            r_after > r_before + 1e-9,
+            "allocation did not grow: {r_before} -> {r_after}"
+        );
+    }
+
+    #[test]
+    fn uncalibrated_reprovisioner_ignores_the_observation_stream() {
+        // Same mismatch world, calibration off: the error telemetry still
+        // records, but the model absorbs nothing and no predicted-
+        // violation re-plan fires (rate steady, capacity believed fine).
+        use crate::util::stats::{LatencyHistogram, SlidingWindow};
+        use std::collections::VecDeque;
+
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let (gpu0, alloc0) = plan.find(0).unwrap();
+        let mut rp = Reprovisioner::new(s, specs.clone(), plan.clone());
+        rp.rebalance_period_ms = 0.0;
+        assert!(!rp.calibrating());
+        let mut devices: Vec<GpuDevice> = Vec::new();
+        let mut replicas = vec![ReplicaState {
+            spec: specs[0].clone(),
+            workload: 0,
+            gpu: gpu0,
+            tag: 0,
+            resources: alloc0.resources,
+            batch: alloc0.batch,
+            queue: VecDeque::new(),
+            busy: false,
+            exec_estimate: specs[0].slo_ms / 4.0,
+            window: SlidingWindow::new(10_000.0),
+            exec_window: SlidingWindow::new(10_000.0),
+            hist: LatencyHistogram::new(),
+            served: 0,
+            recorded: 0,
+            lat_sum: 0.0,
+            queue_sum: 0.0,
+            exec_sum: 0.0,
+            shadow_active: false,
+            switches: 0,
+            phase: ReplicaPhase::Active,
+        }];
+        let rates = planned_rates(&specs);
+        let mut clocks = vec![0.0; specs.len()];
+        for tick in 1..=12u32 {
+            let now = tick as f64 * MONITOR_PERIOD_MS;
+            let raw_now = rp.planner.predict_full(rp.live_ids[0]).unwrap().0;
+            replicas[0].exec_window.push(now, raw_now.t_inf * 1.4);
+            for (w, &rate) in rates.iter().enumerate() {
+                let gap = 1000.0 / rate;
+                while clocks[w] < now {
+                    rp.on_arrival(clocks[w], w);
+                    clocks[w] += gap;
+                }
+            }
+            let mut ctx = PolicyCtx {
+                devices: &mut devices,
+                replicas: &mut replicas,
+            };
+            let _ = rp.reprovision(now, &mut ctx);
+        }
+        assert_eq!(rp.model_observations(), 0);
+        assert!(!rp.prediction_errors().is_empty(), "telemetry must record");
+        // the recorded errors sit at the injected residual:
+        // |pred - obs| / obs = 0.4 / 1.4 for a constant 1.4x slowdown
+        let mean: f64 =
+            rp.prediction_errors().iter().sum::<f64>() / rp.prediction_errors().len() as f64;
+        assert!((0.25..0.33).contains(&mean), "mean error {mean:.3}");
     }
 
     #[test]

@@ -128,6 +128,12 @@ pub struct ReplicaState {
     pub exec_estimate: f64,
     /// time-bounded latency records (completion time, latency)
     pub window: SlidingWindow,
+    /// time-bounded *execution-span* records (completion time, exec ms):
+    /// dispatch -> completion + load, one entry per batch.  Queueing is
+    /// excluded, so these are directly comparable to the performance
+    /// model's t_inf — the observation stream the calibration layer
+    /// (`monitor::Reprovisioner`) fits its residual corrections from.
+    pub exec_window: SlidingWindow,
     pub hist: LatencyHistogram,
     pub served: u64,
     /// post-warmup latency records and their component sums (ms)
@@ -165,6 +171,7 @@ impl ReplicaState {
             busy: phase == ReplicaPhase::Warming,
             exec_estimate: spec.slo_ms / 4.0,
             window: SlidingWindow::new(WINDOW_SPAN_MS),
+            exec_window: SlidingWindow::new(WINDOW_SPAN_MS),
             hist: LatencyHistogram::new(),
             served: 0,
             recorded: 0,
@@ -238,6 +245,17 @@ pub struct WorkloadStats {
     pub final_batch: u32,
     /// Lifetime served count per replica, in group order.
     pub replica_served: Vec<u64>,
+}
+
+/// Request-conservation residual over a stats set:
+/// `Σ (arrivals - served - still_queued)`.  Zero by the drain-before-
+/// switch invariant; every harness gates on it through this one
+/// definition (sweep runner, autoscale and calibration experiments).
+pub fn dropped_requests(stats: &[WorkloadStats]) -> i64 {
+    stats
+        .iter()
+        .map(|s| s.arrivals as i64 - s.served as i64 - s.still_queued as i64)
+        .sum()
 }
 
 /// The cluster serving simulation.
@@ -380,6 +398,13 @@ impl ClusterSim {
     /// Swap the online serving policy (replaces the `Policy` enum choice).
     pub fn set_serving_policy(&mut self, policy: Box<dyn ServingPolicy>) {
         self.policy = policy;
+    }
+
+    /// The active serving policy (read-only) — lets callers pull
+    /// policy-side measurements (e.g. `Reprovisioner::prediction_errors`)
+    /// back out after `run`.
+    pub fn serving_policy(&self) -> &dyn ServingPolicy {
+        self.policy.as_ref()
     }
 
     /// Drive every workload's arrivals from a time-varying `RateTrace`
@@ -657,6 +682,9 @@ impl ClusterSim {
                     // queueing-vs-execution split: every request of the
                     // batch executes for the same span after dispatch
                     let exec_ms = (now + t_load) - dispatched;
+                    // one observation per batch, warm-up included — the
+                    // calibration consumer applies its own gating
+                    rep.exec_window.push(now, exec_ms);
                     for _ in 0..n {
                         let arr = rep.queue.pop_front().expect("queue underflow");
                         // Eq. 1 view: latency = queueing + load + gpu + feedback

@@ -14,7 +14,7 @@
 //! dropped requests (must be zero — migration conserves every request).
 
 use super::common::{emit, profiled_system, SEED};
-use crate::coordinator::{ClusterSim, Policy, Reprovisioner};
+use crate::coordinator::{dropped_requests, ClusterSim, Policy, Reprovisioner};
 use crate::gpu::GpuKind;
 use crate::provisioner::{self, WorkloadSpec};
 use crate::util::error::Result;
@@ -43,10 +43,7 @@ pub struct AutoscaleSummary {
 
 fn outcome(sim: &ClusterSim, stats: &[crate::coordinator::WorkloadStats]) -> PolicyOutcome {
     let met = stats.iter().filter(|s| !s.violation).count();
-    let dropped: i64 = stats
-        .iter()
-        .map(|s| s.arrivals as i64 - s.served as i64 - s.still_queued as i64)
-        .sum();
+    let dropped = dropped_requests(stats);
     PolicyOutcome {
         gpu_seconds: sim.gpu_seconds(),
         slo_attainment: met as f64 / stats.len().max(1) as f64,

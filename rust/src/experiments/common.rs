@@ -10,11 +10,7 @@ pub const SEED: u64 = 42;
 
 /// Build the profiled system for a GPU type (hardware + all 4 workloads).
 pub fn profiled_system(kind: GpuKind, seed: u64) -> ProfiledSystem {
-    let (hw, wls) = crate::profiler::profile_all(kind, seed);
-    ProfiledSystem {
-        hw,
-        coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
-    }
+    crate::profiler::profile_system(kind, seed)
 }
 
 /// Results directory (results/ at the repo root).

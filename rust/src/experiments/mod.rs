@@ -4,6 +4,7 @@
 
 pub mod ablation;
 pub mod autoscale;
+pub mod calibration;
 pub mod common;
 pub mod dynamic;
 pub mod pareto;
@@ -44,6 +45,7 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
         "fig20" => overhead::fig20(),
         "ablation" => ablation::ablation(kind),
         "autoscale" => autoscale::autoscale(kind),
+        "calibration" => calibration::calibration(kind),
         "dynamic" => dynamic::dynamic(kind),
         "pareto" => pareto::pareto(kind),
         "fig21" => overhead::fig21(kind),
@@ -61,9 +63,10 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
             run("ablation", kind)?;
             run("dynamic", kind)?;
             run("autoscale", kind)?;
+            run("calibration", kind)?;
             run("sweep", kind)?;
             run("pareto", kind)
         }
-        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, autoscale, sweep, pareto, all"),
+        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, autoscale, calibration, sweep, pareto, all"),
     }
 }

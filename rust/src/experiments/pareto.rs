@@ -10,6 +10,7 @@
 
 use super::common::{emit, profiled_system, SEED};
 use crate::gpu::GpuKind;
+use crate::perfmodel::AnalyticModel;
 use crate::provisioner::{self, WorkloadSpec};
 use crate::util::table::{f, Table};
 use crate::workload::app_workloads;
@@ -48,7 +49,8 @@ pub fn pareto(kind: GpuKind) -> Result<()> {
             ]);
             continue;
         }
-        let plan = provisioner::igniter::provision_with_derived(&sys, &es, &derived);
+        let plan =
+            provisioner::igniter::provision_with_derived(&AnalyticModel::ALL, &sys, &es, &derived);
         // headroom: how far below the half-SLO the predictions sit
         let preds = provisioner::predict_plan(&sys, &es, &plan);
         let headrooms: Vec<f64> = preds
@@ -82,7 +84,12 @@ mod tests {
             if derived.iter().any(|d| d.is_none()) {
                 continue;
             }
-            let plan = provisioner::igniter::provision_with_derived(&sys, &es, &derived);
+            let plan = provisioner::igniter::provision_with_derived(
+                &AnalyticModel::ALL,
+                &sys,
+                &es,
+                &derived,
+            );
             assert!(
                 plan.num_gpus() <= last_gpus,
                 "lambda={lambda}: {} > {last_gpus}",

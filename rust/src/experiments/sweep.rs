@@ -18,6 +18,7 @@ pub fn sweep(_kind: GpuKind) -> Result<()> {
         parallel: 4,
         master_seed: SEED,
         space: ScenarioSpace::quick(),
+        calibrate: false,
     };
     let report = run_sweep(&cfg);
     let agg = report.aggregate();

@@ -60,7 +60,7 @@ fn gpulets_predict(
         batch: ob as f64,
         resources: or,
     };
-    Some(solo.t_load + solo.t_feedback + solo.t_gpu * gpulets::pair_dilation(sys, &t, &o))
+    Some(solo.t_load + solo.t_feedback + solo.t_gpu * gpulets::pair_dilation(&t, &o))
 }
 
 /// Fig. 11: co-located VGG-19 + SSD, batch 3 each, resources swept.

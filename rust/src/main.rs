@@ -27,7 +27,15 @@ use igniter::workload::{self, ArrivalKind};
 use std::path::{Path, PathBuf};
 
 fn main() {
-    let args = Args::from_env(&["poisson", "json", "verbose", "script", "full"]);
+    let args = Args::from_env(&[
+        "poisson",
+        "json",
+        "verbose",
+        "script",
+        "full",
+        "calibrate",
+        "mismatch",
+    ]);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -121,10 +129,11 @@ fn dispatch(args: &Args) -> Result<()> {
                  usage: igniter <profile|provision|serve|sweep|verify|experiment> [options]\n\
                  \x20 profile     [--gpu v100|t4] [--seed N]\n\
                  \x20 provision   [--strategy igniter|ffd|ffd++|gslice|gpulets] [--workloads app|table1|synthetic:N]\n\
-                 \x20 serve       [--policy shadow|static|gslice|autoscale] [--trace diurnal|spiky|ramp]\n\
+                 \x20 serve       [--policy shadow|static|gslice|autoscale] [--calibrate] [--trace diurnal|spiky|ramp]\n\
                  \x20             [--epochs N] [--epoch-s S] [--horizon-s S] [--poisson] [--real-batches N]\n\
                  \x20 sweep       [--scenarios N] [--seeds K] [--parallel M] [--master-seed S]\n\
-                 \x20             [--out BENCH_sweep.json] [--full] — fleet-scale scenario sweep\n\
+                 \x20             [--out BENCH_sweep.json] [--full] [--mismatch] [--calibrate]\n\
+                 \x20             — fleet-scale scenario sweep (mismatch = model-error lane)\n\
                  \x20 deploy      [--strategy ...] [--script] — emit the launcher manifest\n\
                  \x20 verify\n\
                  \x20 experiment  [fig3..fig21|table1|overhead|all]"
@@ -215,6 +224,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "autoscale" => Policy::Static,
         other => bail!("unknown policy '{other}'"),
     };
+    if args.flag("calibrate") && policy_s != "autoscale" {
+        bail!("--calibrate requires --policy autoscale (it feeds the closed-loop Reprovisioner)");
+    }
     let arrival = if args.flag("poisson") || cfg.as_ref().map_or(false, |c| c.serving.poisson) {
         ArrivalKind::Poisson
     } else {
@@ -236,12 +248,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if policy_s == "autoscale" {
         // estimator -> online re-plan -> shadow-instance migration, with
-        // the submitted rates as the planned design points
-        sim.set_serving_policy(Box::new(Reprovisioner::new(
-            sys.clone(),
-            specs.clone(),
-            plan.clone(),
-        )));
+        // the submitted rates as the planned design points; --calibrate
+        // additionally fits residual corrections from observed exec
+        // latencies and re-plans with the corrected model
+        let mut rp = Reprovisioner::new(sys.clone(), specs.clone(), plan.clone());
+        if args.flag("calibrate") {
+            rp = rp.with_calibration();
+        }
+        sim.set_serving_policy(Box::new(rp));
     }
     if let Some(trace_s) = args.opt("trace") {
         let epochs = args.opt_usize("epochs", 24).max(1);
@@ -288,6 +302,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             sim.gpu_seconds(),
             sim.migrations()
         );
+        let errs = sim.serving_policy().prediction_errors();
+        if !errs.is_empty() {
+            println!(
+                "prediction error mean {:.3}  p95 {:.3}  ({} samples{})",
+                igniter::util::stats::mean(errs),
+                igniter::util::stats::percentile(errs, 0.95),
+                errs.len(),
+                if args.flag("calibrate") {
+                    "; calibrated re-planning ON"
+                } else {
+                    ""
+                }
+            );
+        }
     }
 
     let real_batches = args.opt_usize("real-batches", 0);
@@ -327,17 +355,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// non-wall sections are bit-identical for any `--parallel` width.
 fn cmd_sweep(args: &Args) -> Result<()> {
     use igniter::sweep::{run_sweep, ScenarioSpace, SweepConfig};
-    let space = if args.flag("full") {
+    let mut space = if args.flag("full") {
         ScenarioSpace::full()
     } else {
         ScenarioSpace::quick()
     };
+    // --mismatch: perturb the planner's believed coefficients per
+    // scenario (the model-error lane); --calibrate serves every task
+    // with online calibration so the sweep measures the closed loop's
+    // answer to exactly that error
+    space.mismatch = args.flag("mismatch");
     let cfg = SweepConfig {
         scenarios: args.opt_usize("scenarios", 200).max(1),
         seeds: args.opt_usize("seeds", 2).max(1),
         parallel: args.opt_usize("parallel", 8).max(1),
         master_seed: args.opt_u64("master-seed", 42),
         space,
+        calibrate: args.flag("calibrate"),
     };
     let report = run_sweep(&cfg);
     let agg = report.aggregate();
@@ -363,6 +397,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     t.row(&["total served".into(), agg.total_served.to_string()]);
     t.row(&["total dropped".into(), agg.total_dropped.to_string()]);
     t.row(&["total GPU-seconds".into(), f(agg.total_gpu_seconds, 1)]);
+    t.row(&["mean pred error".into(), f(agg.mean_pred_error, 3)]);
+    t.row(&["p95 pred error".into(), f(agg.p95_pred_error, 3)]);
     t.row(&["wall (s)".into(), f(report.wall_s, 2)]);
     t.row(&[
         "scenarios/s (wall)".into(),

@@ -1,0 +1,250 @@
+//! Online-calibrated performance model: the analytic Sec.-3.1 predictor
+//! wrapped with per-workload-class residual corrections fit **online**
+//! (recursive least squares, `util::lsq::Rls2`) from serving-observed
+//! execution latencies.
+//!
+//! The paper handles prediction error reactively (Sec. 4.2 shadow
+//! processes soak up to ~10 %); static interference models are known to
+//! drift further from ground truth in richer co-location regimes
+//! (arXiv 2501.16909), and predictability has to survive that error
+//! (arXiv 2512.18725).  `CalibratedModel` closes the loop *proactively*:
+//! the `Reprovisioner` feeds each monitor tick's (analytic-predicted,
+//! observed) exec-latency pair into `observe`, and every later placement
+//! decision (`alloc_gpus` growth, respec validation, capacity checks)
+//! sees the corrected prediction.
+//!
+//! Safety rules (all load-bearing):
+//!
+//! * **zero observations = bitwise identity** — with no fit past
+//!   `MIN_OBSERVATIONS`, `correct` returns the analytic prediction
+//!   unchanged, so goldens / sweep fingerprints / determinism tests are
+//!   untouched by merely *threading* this type;
+//! * **corrections only dilate** — the ratio is clamped to
+//!   `[1.0, MAX_CORRECTION]`.  Observed speedups are dominated by
+//!   partial-batch artifacts (the batcher dispatches below the configured
+//!   batch at low load), and trusting them would let the re-packer
+//!   tighten allocations below truth — the exact failure the layer
+//!   exists to prevent.  Slowdowns, the dangerous direction, are what
+//!   the fit is for;
+//! * the correction folds into `t_gpu` / `t_inf` / `throughput_rps`
+//!   only — the PCIe phases and the raw component breakdown stay
+//!   analytic.
+
+use super::model::{ModelTerms, Prediction};
+use super::traits::{AnalyticModel, PerfModel};
+use crate::util::lsq::Rls2;
+
+/// Observations of a class required before its correction applies.
+pub const MIN_OBSERVATIONS: u64 = 8;
+/// Upper clamp on the correction ratio (a runaway fit must never inflate
+/// a prediction past this factor).
+pub const MAX_CORRECTION: f64 = 3.0;
+/// RLS forgetting factor: ~200-tick memory, so the fit tracks re-plans
+/// and operating-point moves without forgetting within one.
+pub const RLS_LAMBDA: f64 = 0.995;
+/// Prior covariance scale: weak prior around the identity correction.
+pub const RLS_P0: f64 = 100.0;
+
+/// The analytic model + online per-class residual corrections.
+#[derive(Debug, Clone)]
+pub struct CalibratedModel {
+    inner: AnalyticModel,
+    /// (workload-class name, observed = a*predicted + b fit), insertion
+    /// order — the class set is tiny (the model zoo), linear scan wins.
+    fits: Vec<(String, Rls2)>,
+    total_obs: u64,
+}
+
+impl Default for CalibratedModel {
+    fn default() -> CalibratedModel {
+        CalibratedModel::new()
+    }
+}
+
+impl CalibratedModel {
+    pub fn new() -> CalibratedModel {
+        CalibratedModel::with_terms(ModelTerms::ALL)
+    }
+
+    pub fn with_terms(terms: ModelTerms) -> CalibratedModel {
+        CalibratedModel {
+            inner: AnalyticModel::with_terms(terms),
+            fits: Vec::new(),
+            total_obs: 0,
+        }
+    }
+
+    fn fit(&self, key: &str) -> Option<&Rls2> {
+        self.fits.iter().find(|(k, _)| k == key).map(|(_, f)| f)
+    }
+
+    /// Correction ratio (>= 1.0) the model would apply to a prediction of
+    /// `pred_ms` for class `key`.
+    pub fn correction_ratio(&self, key: &str, pred_ms: f64) -> f64 {
+        let Some(rls) = self.fit(key) else { return 1.0 };
+        if rls.n() < MIN_OBSERVATIONS || !(pred_ms > 0.0) {
+            return 1.0;
+        }
+        let corrected = rls.predict([pred_ms, 1.0]);
+        if !corrected.is_finite() {
+            return 1.0;
+        }
+        (corrected / pred_ms).clamp(1.0, MAX_CORRECTION)
+    }
+
+    /// Classes with an applied (past-`MIN_OBSERVATIONS`) correction.
+    pub fn calibrated_classes(&self) -> usize {
+        self.fits.iter().filter(|(_, f)| f.n() >= MIN_OBSERVATIONS).count()
+    }
+}
+
+impl PerfModel for CalibratedModel {
+    fn name(&self) -> &'static str {
+        "calibrated"
+    }
+
+    fn terms(&self) -> ModelTerms {
+        self.inner.terms
+    }
+
+    fn correct(&self, key: &str, pred: Prediction) -> Prediction {
+        let ratio = self.correction_ratio(key, pred.t_inf);
+        if ratio == 1.0 {
+            // identity path: the prediction passes through untouched, bit
+            // for bit (the zero-observation determinism guard)
+            return pred;
+        }
+        // dilate the GPU-resident span so t_inf lands on the corrected
+        // value; PCIe phases are analytic and stay put
+        let extra = pred.t_inf * (ratio - 1.0);
+        let t_gpu = pred.t_gpu + extra;
+        let scale = (pred.t_gpu + pred.t_feedback) / (t_gpu + pred.t_feedback);
+        Prediction {
+            t_gpu,
+            t_inf: pred.t_inf + extra,
+            throughput_rps: pred.throughput_rps * scale,
+            ..pred
+        }
+    }
+
+    fn observe(&mut self, key: &str, predicted_ms: f64, observed_ms: f64) {
+        if !(predicted_ms > 0.0 && predicted_ms.is_finite())
+            || !(observed_ms > 0.0 && observed_ms.is_finite())
+        {
+            return;
+        }
+        let idx = match self.fits.iter().position(|(k, _)| k == key) {
+            Some(i) => i,
+            None => {
+                self.fits
+                    .push((key.to_string(), Rls2::new([1.0, 0.0], RLS_P0, RLS_LAMBDA)));
+                self.fits.len() - 1
+            }
+        };
+        self.fits[idx].1.update([predicted_ms, 1.0], observed_ms);
+        self.total_obs += 1;
+    }
+
+    fn observations(&self) -> u64 {
+        self.total_obs
+    }
+
+    fn clone_box(&self) -> Box<dyn PerfModel> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuKind;
+    use crate::perfmodel::{model, PlacedWorkload};
+
+    fn placed(wls: &[crate::perfmodel::WorkloadCoeffs]) -> Vec<PlacedWorkload<'_>> {
+        wls.iter()
+            .map(|wc| PlacedWorkload {
+                coeffs: wc,
+                batch: 8.0,
+                resources: 0.25,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zero_observations_is_bitwise_the_analytic_model() {
+        // The determinism guard behind every existing golden and sweep
+        // fingerprint: merely swapping the model type changes nothing.
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        let view = placed(&wls);
+        let cal = CalibratedModel::new();
+        let ana = AnalyticModel::ALL;
+        for i in 0..view.len() {
+            let c = cal.predict(&hw, &view, i);
+            let a = ana.predict(&hw, &view, i);
+            assert_eq!(c.t_inf.to_bits(), a.t_inf.to_bits());
+            assert_eq!(c.t_gpu.to_bits(), a.t_gpu.to_bits());
+            assert_eq!(c.throughput_rps.to_bits(), a.throughput_rps.to_bits());
+            assert_eq!(c.freq_mhz.to_bits(), a.freq_mhz.to_bits());
+        }
+        let cs = cal.predict_solo(&hw, &wls[0], 4.0, 0.3);
+        let as_ = ana.predict_solo(&hw, &wls[0], 4.0, 0.3);
+        assert_eq!(cs.t_inf.to_bits(), as_.t_inf.to_bits());
+        assert_eq!(cal.observations(), 0);
+        assert_eq!(cal.calibrated_classes(), 0);
+    }
+
+    #[test]
+    fn sustained_slowdown_is_learned_and_applied() {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        let view = placed(&wls);
+        let mut cal = CalibratedModel::new();
+        let key = wls[1].name.clone();
+        let raw = model::predict(&hw, &view, 1);
+        // below the observation floor: still identity
+        for _ in 0..(MIN_OBSERVATIONS - 1) {
+            cal.observe(&key, raw.t_inf, raw.t_inf * 1.25);
+        }
+        assert_eq!(cal.predict(&hw, &view, 1).t_inf.to_bits(), raw.t_inf.to_bits());
+        cal.observe(&key, raw.t_inf, raw.t_inf * 1.25);
+        // past the floor: the corrected prediction tracks the observations
+        let c = cal.predict(&hw, &view, 1);
+        assert!(
+            (c.t_inf / raw.t_inf - 1.25).abs() < 0.05,
+            "corrected {:.3} vs raw {:.3}",
+            c.t_inf,
+            raw.t_inf
+        );
+        // throughput shrinks consistently with the dilated span
+        assert!(c.throughput_rps < raw.throughput_rps);
+        // other classes stay analytic
+        let other = cal.predict(&hw, &view, 2);
+        assert_eq!(other.t_inf.to_bits(), model::predict(&hw, &view, 2).t_inf.to_bits());
+        assert_eq!(cal.calibrated_classes(), 1);
+        assert_eq!(cal.observations(), MIN_OBSERVATIONS);
+    }
+
+    #[test]
+    fn corrections_never_shrink_and_are_clamped() {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        let view = placed(&wls);
+        let raw = model::predict(&hw, &view, 0);
+        // observed speedups (partial-batch artifacts) clamp to identity
+        let mut fast = CalibratedModel::new();
+        for _ in 0..20 {
+            fast.observe(&wls[0].name, raw.t_inf, raw.t_inf * 0.6);
+        }
+        assert_eq!(fast.predict(&hw, &view, 0).t_inf.to_bits(), raw.t_inf.to_bits());
+        // absurd slowdowns clamp at MAX_CORRECTION
+        let mut slow = CalibratedModel::new();
+        for _ in 0..20 {
+            slow.observe(&wls[0].name, raw.t_inf, raw.t_inf * 50.0);
+        }
+        let c = slow.predict(&hw, &view, 0);
+        assert!((c.t_inf / raw.t_inf - MAX_CORRECTION).abs() < 1e-9);
+        // poisoned observations are ignored outright
+        let mut p = CalibratedModel::new();
+        p.observe("x", f64::NAN, 3.0);
+        p.observe("x", 3.0, -1.0);
+        assert_eq!(p.observations(), 0);
+    }
+}

@@ -140,6 +140,25 @@ impl WorkloadCoeffs {
         self.k_sch * self.n_kernels
     }
 
+    /// Scale every *timing* coefficient by `f` — the model-mismatch knob:
+    /// `f < 1` makes a planner believing these coefficients optimistic
+    /// (it thinks the workload runs faster than the simulator's physics),
+    /// `f > 1` pessimistic.  The power/cache *line coefficients* are left
+    /// alone, but note both laws are functions of `ability = b / k_act`,
+    /// so the believed interference contributions (power demand, cache
+    /// pressure on co-runners) shift consistently with the believed
+    /// speed — exactly as if the class really ran `1/f` as fast.  The
+    /// perturbation is therefore a coherent wrong belief about the
+    /// workload, not an isolated latency-term tweak.
+    pub fn scale_time(&mut self, f: f64) {
+        assert!(f > 0.0 && f.is_finite());
+        self.kact.k1 *= f;
+        self.kact.k2 *= f;
+        self.kact.k3 *= f;
+        self.kact.k5 *= f;
+        self.k_sch *= f;
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("name", self.name.as_str())

@@ -1,11 +1,30 @@
-//! Analytical DNN-inference performance model (Sec. 3): coefficient
-//! stores and the Eq. (1)-(11) predictor plus the Theorem-1 closed forms.
+//! The performance-model layer (Sec. 3): coefficient stores, the
+//! Eq. (1)-(11) predictor plus the Theorem-1 closed forms, and — on top —
+//! the first-class model API:
+//!
+//! * [`PerfModel`] — the trait every placement-scoring consumer goes
+//!   through (provisioner strategies, the online planner, the serving
+//!   `Reprovisioner`);
+//! * [`AnalyticModel`] — the paper's static model behind the trait
+//!   (bitwise-identical to the free functions);
+//! * [`CalibratedModel`] — the analytic model plus per-workload-class
+//!   residual corrections fit online from serving telemetry (recursive
+//!   least squares over `util::lsq::Rls2`);
+//! * [`DeviceScorer`] — incremental per-device interference aggregates
+//!   for O(1)-per-candidate placement scoring, bit-identical to the full
+//!   recomputation by construction.
 
+pub mod calibrate;
 pub mod coeffs;
 pub mod model;
+pub mod scorer;
+pub mod traits;
 
+pub use calibrate::{CalibratedModel, MAX_CORRECTION, MIN_OBSERVATIONS};
 pub use coeffs::{HardwareCoeffs, WorkloadCoeffs};
 pub use model::{
     appropriate_batch, lower_bound_resources, power_demand_w, predict, predict_solo,
     rel_error, PlacedWorkload, Prediction,
 };
+pub use scorer::DeviceScorer;
+pub use traits::{AnalyticModel, PerfModel};

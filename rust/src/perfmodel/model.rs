@@ -63,22 +63,30 @@ impl ModelTerms {
     };
 }
 
-/// Predict the inference latency of `placed[target]` under the co-location
-/// described by `placed` (Eqs. 1-11).
-pub fn predict(hw: &HardwareCoeffs, placed: &[PlacedWorkload], target: usize) -> Prediction {
-    predict_with(hw, placed, target, ModelTerms::ALL)
+impl Default for ModelTerms {
+    fn default() -> ModelTerms {
+        ModelTerms::ALL
+    }
 }
 
-/// `predict` with selectable interference terms (ablation support).
-pub fn predict_with(
+/// The Eq. 1-11 composition given **precomputed device aggregates**: the
+/// target's own placement, the co-located process count `m`, the
+/// co-runners' aggregate cache utilization (already zeroed when the cache
+/// term is off), and the device's total power demand.
+///
+/// Single numeric source for both the free-function predictor below and
+/// the incremental [`super::scorer::DeviceScorer`] — the scorer's bitwise
+/// identity with `predict_with` (property-tested in `scorer.rs`) holds
+/// because both paths feed the *same* f64 aggregates into this one pure
+/// function.
+pub(crate) fn predict_core(
     hw: &HardwareCoeffs,
-    placed: &[PlacedWorkload],
-    target: usize,
+    w: &PlacedWorkload,
+    m: usize,
+    others_util: f64,
+    demand_w: f64,
     terms: ModelTerms,
 ) -> Prediction {
-    let w = &placed[target];
-    let m = placed.len();
-
     // Eq. 3: PCIe phases.
     let t_load = hw.pcie_ms(w.coeffs.d_load_bytes * w.batch);
     let t_feedback = hw.pcie_ms(w.coeffs.d_feedback_bytes * w.batch);
@@ -88,22 +96,12 @@ pub fn predict_with(
     let t_sched = (w.coeffs.k_sch + delta) * w.coeffs.n_kernels;
 
     // Eq. 8: active time dilated by co-runners' cache utilization.
-    let others_util: f64 = if terms.cache {
-        placed
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| *i != target)
-            .map(|(_, p)| p.coeffs.cache_util(p.batch, p.resources))
-            .sum()
-    } else {
-        0.0
-    };
     let t_act =
         w.coeffs.k_act(w.batch, w.resources) * (1.0 + w.coeffs.alpha_cache * others_util);
 
     // Eq. 9 + 10: frequency under total power demand.
     let freq = if terms.power {
-        hw.frequency(power_demand_w(hw, placed))
+        hw.frequency(demand_w)
     } else {
         hw.max_freq_mhz
     };
@@ -127,19 +125,73 @@ pub fn predict_with(
     }
 }
 
+/// Predict the inference latency of `placed[target]` under the co-location
+/// described by `placed` (Eqs. 1-11).
+pub fn predict(hw: &HardwareCoeffs, placed: &[PlacedWorkload], target: usize) -> Prediction {
+    predict_with(hw, placed, target, ModelTerms::ALL)
+}
+
+/// `predict` with selectable interference terms (ablation support).
+///
+/// Aggregation invariant: the co-runner cache utilization is computed as
+/// the **in-order total minus the target's own contribution** (not a
+/// filtered sum), so a per-device running total maintained by
+/// `DeviceScorer` reproduces it bitwise with O(1) work per candidate.
+pub fn predict_with(
+    hw: &HardwareCoeffs,
+    placed: &[PlacedWorkload],
+    target: usize,
+    terms: ModelTerms,
+) -> Prediction {
+    let w = &placed[target];
+    let others_util: f64 = if terms.cache {
+        let total: f64 = placed
+            .iter()
+            .map(|p| p.coeffs.cache_util(p.batch, p.resources))
+            .sum();
+        total - w.coeffs.cache_util(w.batch, w.resources)
+    } else {
+        0.0
+    };
+    predict_core(
+        hw,
+        w,
+        placed.len(),
+        others_util,
+        power_demand_w(hw, placed),
+        terms,
+    )
+}
+
 /// Predict a workload running **alone** on a GPU of this type.
 pub fn predict_solo(hw: &HardwareCoeffs, w: &WorkloadCoeffs, batch: f64, r: f64) -> Prediction {
+    predict_solo_with(hw, w, batch, r, ModelTerms::ALL)
+}
+
+/// `predict_solo` with selectable interference terms.
+pub fn predict_solo_with(
+    hw: &HardwareCoeffs,
+    w: &WorkloadCoeffs,
+    batch: f64,
+    r: f64,
+    terms: ModelTerms,
+) -> Prediction {
     let placed = [PlacedWorkload {
         coeffs: w,
         batch,
         resources: r,
     }];
-    predict(hw, &placed, 0)
+    predict_with(hw, &placed, 0, terms)
 }
 
 /// Eq. 17: the appropriate batch size that just meets the arrival rate
 /// `rate_rps` under latency SLO `slo_ms`.
-pub fn appropriate_batch(hw: &HardwareCoeffs, w: &WorkloadCoeffs, slo_ms: f64, rate_rps: f64) -> u32 {
+pub fn appropriate_batch(
+    hw: &HardwareCoeffs,
+    w: &WorkloadCoeffs,
+    slo_ms: f64,
+    rate_rps: f64,
+) -> u32 {
     // Work in ms: rate (req/ms) = rate_rps / 1000; B_pcie in bytes/ms.
     let rate = rate_rps / 1000.0;
     let bw = hw.pcie_gbps * 1e6; // bytes per ms

@@ -1,0 +1,298 @@
+//! Incremental per-device interference scoring.
+//!
+//! Placement search (Alg. 1 / Alg. 2) evaluates the analytical model for
+//! *every resident of every candidate device, every growth pass*.  The
+//! naive implementation rebuilds the `PlacedWorkload` view and re-sums the
+//! device aggregates (Σ cache-util for Eq. 8, Σ power for Eqs. 9-10) per
+//! prediction — O(m) coefficient-law evaluations per candidate, O(m²) per
+//! pass.  `DeviceScorer` caches each slot's contributions and maintains
+//! the per-device running totals, so a candidate prediction is O(1): two
+//! subtractions plus the constant-time Eq. 1-11 tail
+//! (`model::predict_core`).
+//!
+//! ## Bitwise invariant
+//!
+//! `scorer.predict_with(i, terms)` is **bit-identical** to
+//! `model::predict_with(hw, &placed, i, terms)` for the equivalent placed
+//! list, after *any* interleaving of `place` / `remove` / `set_resources`.
+//! Two design rules make that hold (property-tested below):
+//!
+//! 1. every mutation recomputes the affected slot's contributions with the
+//!    same pure coefficient laws and then **re-adds the totals in slot
+//!    order** (`resum`), so the running sums are exactly the in-order sums
+//!    a fresh rebuild would produce — never an accumulate/subtract drift;
+//! 2. `model::predict_with` itself derives the co-runner aggregate as
+//!    `total - own` (see the aggregation invariant there), the same
+//!    expression the scorer uses.
+
+use super::coeffs::HardwareCoeffs;
+use super::model::{self, ModelTerms, PlacedWorkload, Prediction};
+
+/// One resident process with its cached interference contributions.
+#[derive(Debug, Clone)]
+struct ScoredSlot<'a> {
+    placed: PlacedWorkload<'a>,
+    /// Cached `coeffs.cache_util(batch, resources)`.
+    cache_util: f64,
+    /// Cached `coeffs.power_w(batch, resources)` (W above idle).
+    power_w: f64,
+}
+
+impl<'a> ScoredSlot<'a> {
+    fn new(placed: PlacedWorkload<'a>) -> ScoredSlot<'a> {
+        let cache_util = placed.coeffs.cache_util(placed.batch, placed.resources);
+        let power_w = placed.coeffs.power_w(placed.batch, placed.resources);
+        ScoredSlot {
+            placed,
+            cache_util,
+            power_w,
+        }
+    }
+}
+
+/// Incremental device view: cached per-slot contributions + running
+/// in-order aggregates.  Slot order is placement order — it must mirror
+/// the `Vec<Alloc>` the caller scores against (the residents first, any
+/// newly placed item last), because `predict_with` is positional.
+#[derive(Debug, Clone)]
+pub struct DeviceScorer<'a> {
+    hw: &'a HardwareCoeffs,
+    slots: Vec<ScoredSlot<'a>>,
+    /// In-order Σ cache-util over all slots.
+    sum_cache: f64,
+    /// In-order Σ per-process power (W above idle).
+    sum_power: f64,
+}
+
+impl<'a> DeviceScorer<'a> {
+    pub fn new(hw: &'a HardwareCoeffs) -> DeviceScorer<'a> {
+        DeviceScorer {
+            hw,
+            slots: Vec::new(),
+            sum_cache: 0.0,
+            sum_power: 0.0,
+        }
+    }
+
+    /// Build from an existing device view (O(m) coefficient evaluations —
+    /// paid once, not per candidate).
+    pub fn from_placed(
+        hw: &'a HardwareCoeffs,
+        placed: impl IntoIterator<Item = PlacedWorkload<'a>>,
+    ) -> DeviceScorer<'a> {
+        let mut s = DeviceScorer::new(hw);
+        for p in placed {
+            s.slots.push(ScoredSlot::new(p));
+        }
+        s.resum();
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The placement backing slot `i`.
+    pub fn placed(&self, i: usize) -> &PlacedWorkload<'a> {
+        &self.slots[i].placed
+    }
+
+    /// Sum of nominal partitions on the device.
+    pub fn allocated(&self) -> f64 {
+        self.slots.iter().map(|s| s.placed.resources).sum()
+    }
+
+    /// Re-add both aggregates in slot order.  O(len) float additions, no
+    /// coefficient-law evaluations; keeps the totals bitwise equal to what
+    /// a from-scratch rebuild would sum (incremental `+=`/`-=` would drift
+    /// in the last ulp after removals).
+    fn resum(&mut self) {
+        self.sum_cache = self.slots.iter().map(|s| s.cache_util).sum();
+        self.sum_power = self.slots.iter().map(|s| s.power_w).sum();
+    }
+
+    /// Append a placement (the new item scores last, as in `alloc_gpus`).
+    pub fn place(&mut self, p: PlacedWorkload<'a>) {
+        self.slots.push(ScoredSlot::new(p));
+        self.resum();
+    }
+
+    /// Remove slot `i` (later slots shift down, preserving order).
+    pub fn remove(&mut self, i: usize) -> PlacedWorkload<'a> {
+        let s = self.slots.remove(i);
+        self.resum();
+        s.placed
+    }
+
+    /// Resize slot `i`'s partition (the Alg.-2 growth step).
+    pub fn set_resources(&mut self, i: usize, resources: f64) {
+        self.slots[i].placed.resources = resources;
+        let refreshed = ScoredSlot::new(self.slots[i].placed.clone());
+        self.slots[i] = refreshed;
+        self.resum();
+    }
+
+    /// Total device power demand (Eq. 10) — idle + the running total.
+    pub fn power_demand_w(&self) -> f64 {
+        self.hw.idle_power_w + self.sum_power
+    }
+
+    /// O(1) prediction for slot `target` (Eqs. 1-11, all terms).
+    pub fn predict(&self, target: usize) -> Prediction {
+        self.predict_with(target, ModelTerms::ALL)
+    }
+
+    /// O(1) prediction with selectable terms; bit-identical to
+    /// `model::predict_with` over the equivalent placed list.
+    pub fn predict_with(&self, target: usize, terms: ModelTerms) -> Prediction {
+        let s = &self.slots[target];
+        let others_util = if terms.cache {
+            self.sum_cache - s.cache_util
+        } else {
+            0.0
+        };
+        model::predict_core(
+            self.hw,
+            &s.placed,
+            self.slots.len(),
+            others_util,
+            self.power_demand_w(),
+            terms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuKind;
+    use crate::util::quick::forall;
+    use crate::util::rng::Rng;
+
+    fn bits(p: &Prediction) -> [u64; 8] {
+        [
+            p.t_load.to_bits(),
+            p.t_sched.to_bits(),
+            p.t_act.to_bits(),
+            p.t_feedback.to_bits(),
+            p.freq_mhz.to_bits(),
+            p.t_gpu.to_bits(),
+            p.t_inf.to_bits(),
+            p.throughput_rps.to_bits(),
+        ]
+    }
+
+    /// For every slot and term set, the incremental scorer must equal the
+    /// full free-function recomputation bit for bit.
+    fn matches_full(scorer: &DeviceScorer, hw: &HardwareCoeffs) -> Result<(), String> {
+        let placed: Vec<PlacedWorkload> =
+            (0..scorer.len()).map(|i| scorer.placed(i).clone()).collect();
+        for terms in [
+            ModelTerms::ALL,
+            ModelTerms::NONE,
+            ModelTerms {
+                scheduler: true,
+                cache: false,
+                power: true,
+            },
+            ModelTerms {
+                scheduler: false,
+                cache: true,
+                power: false,
+            },
+        ] {
+            for i in 0..placed.len() {
+                let inc = scorer.predict_with(i, terms);
+                let full = model::predict_with(hw, &placed, i, terms);
+                if bits(&inc) != bits(&full) {
+                    return Err(format!(
+                        "slot {i} terms {terms:?}: incremental {inc:?} != full {full:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn incremental_aggregates_bitwise_match_full_recomputation() {
+        // The tentpole determinism guard: random place/remove/resize
+        // sequences never let the running aggregates drift from a full
+        // rebuild — goldens and sweep fingerprints depend on it.
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        forall(
+            42,
+            60,
+            |r: &mut Rng| r.next_u64(),
+            |&seed| {
+                let mut rng = Rng::new(seed);
+                let mut scorer = DeviceScorer::new(&hw);
+                for _ in 0..24 {
+                    let op = rng.below(3);
+                    if op == 0 || scorer.is_empty() {
+                        let wc = &wls[rng.below(wls.len() as u64) as usize];
+                        scorer.place(PlacedWorkload {
+                            coeffs: wc,
+                            batch: rng.range_u64(1, 32) as f64,
+                            resources: rng.range_f64(0.05, 0.5),
+                        });
+                    } else if op == 1 {
+                        let i = rng.below(scorer.len() as u64) as usize;
+                        scorer.remove(i);
+                    } else {
+                        let i = rng.below(scorer.len() as u64) as usize;
+                        scorer.set_resources(i, rng.range_f64(0.05, 0.95));
+                    }
+                    matches_full(&scorer, &hw)?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn from_placed_equals_placing_one_by_one() {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 7);
+        let placed: Vec<PlacedWorkload> = (0..4)
+            .map(|i| PlacedWorkload {
+                coeffs: &wls[i % wls.len()],
+                batch: 4.0 + i as f64,
+                resources: 0.2,
+            })
+            .collect();
+        let bulk = DeviceScorer::from_placed(&hw, placed.iter().cloned());
+        let mut one = DeviceScorer::new(&hw);
+        for p in placed.iter().cloned() {
+            one.place(p);
+        }
+        for i in 0..placed.len() {
+            assert_eq!(bits(&bulk.predict(i)), bits(&one.predict(i)));
+        }
+        assert_eq!(bulk.power_demand_w().to_bits(), one.power_demand_w().to_bits());
+        assert!((bulk.allocated() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn growth_increases_target_and_relieves_others() {
+        // Growing a victim's partition must speed the victim up; the
+        // co-runner count is unchanged so others see (at most) more cache
+        // pressure — exactly what alloc_gpus banks on.
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        let mut scorer = DeviceScorer::from_placed(
+            &hw,
+            (0..3).map(|i| PlacedWorkload {
+                coeffs: &wls[i],
+                batch: 8.0,
+                resources: 0.2,
+            }),
+        );
+        let before = scorer.predict(0).t_inf;
+        scorer.set_resources(0, 0.4);
+        assert!(scorer.predict(0).t_inf < before);
+        assert_eq!(scorer.len(), 3);
+    }
+}

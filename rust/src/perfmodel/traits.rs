@@ -1,0 +1,174 @@
+//! The performance-model layer API: everything that *scores* a placement
+//! (Alg. 1/2 growth, replica validation, online re-planning, serving-time
+//! capacity checks) goes through a [`PerfModel`] rather than the free
+//! functions in [`super::model`], so the analytic Sec.-3.1 predictor and
+//! the online-calibrated variant ([`super::calibrate::CalibratedModel`])
+//! are interchangeable.
+//!
+//! Layering contract:
+//!
+//! * the **analytic core** (`model::predict_with` / `DeviceScorer`) stays
+//!   a pure function of profiled coefficients — implementations never
+//!   replace it, they *correct* its output per workload class via
+//!   [`PerfModel::correct`];
+//! * the Theorem-1 closed forms (`appropriate_batch`,
+//!   `lower_bound_resources`) remain analytic seeds: calibration steers
+//!   the iterative growth and validation around them, exactly like the
+//!   paper's Alg. 2 absorbs Eq.-17/18 approximation error;
+//! * `correct` keys on the *model-zoo class* (`WorkloadCoeffs::name`) —
+//!   the residual corrects the class's fitted coefficients, which every
+//!   workload of that class shares; the affine-in-prediction basis lets
+//!   one fit track distinct operating points.
+
+use super::coeffs::{HardwareCoeffs, WorkloadCoeffs};
+use super::model::{self, ModelTerms, PlacedWorkload, Prediction};
+
+/// A (possibly stateful) DNN-inference performance model.
+pub trait PerfModel: std::fmt::Debug {
+    /// Short label for reports ("analytic", "calibrated").
+    fn name(&self) -> &'static str;
+
+    /// Which interference terms the analytic core evaluates.
+    fn terms(&self) -> ModelTerms {
+        ModelTerms::ALL
+    }
+
+    /// Residual correction applied on top of an analytic prediction for
+    /// workload class `key` (a model-zoo name).  The default — and the
+    /// calibrated model with zero observations — returns `pred`
+    /// **unchanged, bit for bit**: every determinism golden and sweep
+    /// fingerprint rides on that identity.
+    fn correct(&self, key: &str, pred: Prediction) -> Prediction {
+        let _ = key;
+        pred
+    }
+
+    /// Predict `placed[target]` under the device's co-location (Eq. 1-11
+    /// through the analytic core, then `correct`).
+    fn predict(&self, hw: &HardwareCoeffs, placed: &[PlacedWorkload], target: usize) -> Prediction {
+        let raw = model::predict_with(hw, placed, target, self.terms());
+        self.correct(&placed[target].coeffs.name, raw)
+    }
+
+    /// Predict a workload running alone on a GPU of this type.
+    fn predict_solo(
+        &self,
+        hw: &HardwareCoeffs,
+        w: &WorkloadCoeffs,
+        batch: f64,
+        r: f64,
+    ) -> Prediction {
+        let raw = model::predict_solo_with(hw, w, batch, r, self.terms());
+        self.correct(&w.name, raw)
+    }
+
+    /// Predicted total device power demand (Eq. 10).
+    fn power_demand_w(&self, hw: &HardwareCoeffs, placed: &[PlacedWorkload]) -> f64 {
+        model::power_demand_w(hw, placed)
+    }
+
+    /// Absorb one serving-observed (analytic-predicted, observed)
+    /// execution-latency pair (ms) for workload class `key`.  No-op for
+    /// static models.
+    fn observe(&mut self, key: &str, predicted_ms: f64, observed_ms: f64) {
+        let _ = (key, predicted_ms, observed_ms);
+    }
+
+    /// Total observations absorbed so far (0 for static models).
+    fn observations(&self) -> u64 {
+        0
+    }
+
+    /// Clone into a box (lets plan-carrying owners like `OnlinePlanner`
+    /// stay `Clone`).
+    fn clone_box(&self) -> Box<dyn PerfModel>;
+}
+
+impl Clone for Box<dyn PerfModel> {
+    fn clone(&self) -> Box<dyn PerfModel> {
+        self.clone_box()
+    }
+}
+
+/// The paper's static analytic model (Sec. 3.1): pure coefficients, no
+/// correction.  This is the default model everywhere — threading it
+/// through the trait is bitwise-identical to calling the free functions.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AnalyticModel {
+    pub terms: ModelTerms,
+}
+
+impl AnalyticModel {
+    /// All interference terms on (the normal configuration).
+    pub const ALL: AnalyticModel = AnalyticModel {
+        terms: ModelTerms::ALL,
+    };
+
+    pub fn with_terms(terms: ModelTerms) -> AnalyticModel {
+        AnalyticModel { terms }
+    }
+}
+
+impl PerfModel for AnalyticModel {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn terms(&self) -> ModelTerms {
+        self.terms
+    }
+
+    fn clone_box(&self) -> Box<dyn PerfModel> {
+        Box::new(*self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuKind;
+
+    #[test]
+    fn analytic_trait_path_is_bitwise_the_free_functions() {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        let placed: Vec<PlacedWorkload> = wls
+            .iter()
+            .map(|wc| PlacedWorkload {
+                coeffs: wc,
+                batch: 8.0,
+                resources: 0.2,
+            })
+            .collect();
+        let m = AnalyticModel::ALL;
+        for i in 0..placed.len() {
+            let a = m.predict(&hw, &placed, i);
+            let b = model::predict(&hw, &placed, i);
+            assert_eq!(a.t_inf.to_bits(), b.t_inf.to_bits());
+            assert_eq!(a.throughput_rps.to_bits(), b.throughput_rps.to_bits());
+        }
+        let s = m.predict_solo(&hw, &wls[0], 4.0, 0.3);
+        let f = model::predict_solo(&hw, &wls[0], 4.0, 0.3);
+        assert_eq!(s.t_inf.to_bits(), f.t_inf.to_bits());
+        assert_eq!(
+            m.power_demand_w(&hw, &placed).to_bits(),
+            model::power_demand_w(&hw, &placed).to_bits()
+        );
+    }
+
+    #[test]
+    fn terms_thread_through_the_trait() {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        let placed: Vec<PlacedWorkload> = (0..4)
+            .map(|_| PlacedWorkload {
+                coeffs: &wls[1],
+                batch: 8.0,
+                resources: 0.25,
+            })
+            .collect();
+        let all = AnalyticModel::ALL.predict(&hw, &placed, 0).t_inf;
+        let none = AnalyticModel::with_terms(ModelTerms::NONE)
+            .predict(&hw, &placed, 0)
+            .t_inf;
+        assert!(none < all, "disabling interference terms must not slow solo");
+    }
+}

@@ -224,6 +224,18 @@ pub fn profile_all(kind: GpuKind, seed: u64) -> (HardwareCoeffs, Vec<WorkloadCoe
     (hw, wls)
 }
 
+/// Profile a complete [`ProfiledSystem`] — the bundle every provisioning
+/// strategy and the serving loop consume, and the canonical input to the
+/// performance-model layer (`AnalyticModel` reads these coefficients;
+/// `CalibratedModel` corrects them online).
+pub fn profile_system(kind: GpuKind, seed: u64) -> crate::provisioner::ProfiledSystem {
+    let (hw, wls) = profile_all(kind, seed);
+    crate::provisioner::ProfiledSystem {
+        hw,
+        coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

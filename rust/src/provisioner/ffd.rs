@@ -9,6 +9,7 @@
 
 use super::igniter::{alloc_gpus, derive_all};
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
+use crate::perfmodel::AnalyticModel;
 
 /// FFD+: interference-oblivious lower-bound packing.
 pub fn provision_ffd(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
@@ -25,10 +26,9 @@ pub fn provision_ffd(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
 
     for &w in &order {
         let d = derived[w].unwrap();
-        let slot = plan
-            .gpus
-            .iter()
-            .position(|g| g.iter().map(|a| a.resources).sum::<f64>() + d.r_lower <= hw.r_max + 1e-9);
+        let slot = plan.gpus.iter().position(|g| {
+            g.iter().map(|a| a.resources).sum::<f64>() + d.r_lower <= hw.r_max + 1e-9
+        });
         let alloc = Alloc {
             workload: w,
             resources: d.r_lower,
@@ -59,7 +59,15 @@ pub fn provision_ffd_pp(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
         let d = derived[w].unwrap();
         let mut placed = false;
         for g in 0..plan.gpus.len() {
-            if let Some(alloc) = alloc_gpus(sys, specs, &plan.gpus[g], w, d.r_lower, d.batch) {
+            if let Some(alloc) = alloc_gpus(
+                &AnalyticModel::ALL,
+                sys,
+                specs,
+                &plan.gpus[g],
+                w,
+                d.r_lower,
+                d.batch,
+            ) {
                 plan.gpus[g] = alloc;
                 placed = true;
                 break; // first fit

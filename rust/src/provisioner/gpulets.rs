@@ -15,7 +15,7 @@
 
 use super::igniter::derive_all;
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
-use crate::perfmodel::{self, PlacedWorkload};
+use crate::perfmodel::{AnalyticModel, PerfModel, PlacedWorkload};
 
 /// The five resource choices gpu-lets supports.
 pub const GPULETS_CHOICES: [f64; 5] = [0.2, 0.4, 0.5, 0.6, 0.8];
@@ -29,12 +29,13 @@ pub const THROUGHPUT_HEADROOM: f64 = 1.5;
 /// solo latency fits half the SLO; falls back to the smallest merely
 /// feasible choice, then to the largest.
 pub fn efficient_resources(
+    model: &dyn PerfModel,
     sys: &ProfiledSystem,
     spec: &WorkloadSpec,
     batch: u32,
 ) -> f64 {
     let wc = sys.coeffs_for(spec.model);
-    let solo = |r: f64| perfmodel::predict_solo(&sys.hw, wc, batch as f64, r);
+    let solo = |r: f64| model.predict_solo(&sys.hw, wc, batch as f64, r);
     let feasible = |r: f64| {
         let p = solo(r);
         p.t_inf <= spec.slo_ms / 2.0 && p.throughput_rps >= spec.rate_rps
@@ -55,8 +56,9 @@ pub fn efficient_resources(
 /// Pairwise interference predictor: latency dilation of `target` when
 /// paired with `other`, via the linear L2-utilization regression gpu-lets
 /// fits offline (a single shared slope, unlike iGniter's per-workload
-/// alpha_cache; ignores scheduler and power contention).
-pub fn pair_dilation(_sys: &ProfiledSystem, target: &PlacedWorkload, other: &PlacedWorkload) -> f64 {
+/// alpha_cache; ignores scheduler and power contention — and therefore
+/// needs nothing from the profiled system beyond the two placements).
+pub fn pair_dilation(target: &PlacedWorkload, other: &PlacedWorkload) -> f64 {
     // gpu-lets regresses latency increase on the co-runner's L2 + DRAM
     // utilization; with our observables this reduces to a fixed global
     // slope over the pair's aggregate cache utilization.
@@ -68,13 +70,14 @@ pub fn pair_dilation(_sys: &ProfiledSystem, target: &PlacedWorkload, other: &Pla
 /// Predicted pair latency for the *new* workload only (the resident one is
 /// assumed unaffected — gpu-lets' blind spot).
 fn predicted_new_latency(
+    model: &dyn PerfModel,
     sys: &ProfiledSystem,
     spec: &WorkloadSpec,
     alloc: &Alloc,
     resident: Option<(&WorkloadSpec, &Alloc)>,
 ) -> f64 {
     let wc = sys.coeffs_for(spec.model);
-    let solo = perfmodel::predict_solo(&sys.hw, wc, alloc.batch as f64, alloc.resources);
+    let solo = model.predict_solo(&sys.hw, wc, alloc.batch as f64, alloc.resources);
     match resident {
         None => solo.t_inf,
         Some((rs, ra)) => {
@@ -88,13 +91,15 @@ fn predicted_new_latency(
                 batch: ra.batch as f64,
                 resources: ra.resources,
             };
-            solo.t_load + solo.t_feedback + (solo.t_gpu) * pair_dilation(sys, &target, &other)
+            solo.t_load + solo.t_feedback + (solo.t_gpu) * pair_dilation(&target, &other)
         }
     }
 }
 
-/// gpu-lets+ provisioning.
+/// gpu-lets+ provisioning (static analytic solo model, as the baseline
+/// system ships it).
 pub fn provision_gpulets(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
+    let model = AnalyticModel::ALL;
     let derived = derive_all(sys, specs);
     let hw = &sys.hw;
     let mut plan = Plan::new("gpu-lets+", hw);
@@ -109,7 +114,7 @@ pub fn provision_gpulets(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
 
     for &w in &order {
         let batch = derived[w].unwrap().batch;
-        let r = efficient_resources(sys, &specs[w], batch);
+        let r = efficient_resources(&model, sys, &specs[w], batch);
         let alloc = Alloc {
             workload: w,
             resources: r,
@@ -130,7 +135,7 @@ pub fn provision_gpulets(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
             let resident = plan.gpus[g]
                 .first()
                 .map(|a| (&specs[a.workload], a));
-            let t_new = predicted_new_latency(sys, &specs[w], &alloc, resident);
+            let t_new = predicted_new_latency(&model, sys, &specs[w], &alloc, resident);
             if t_new > specs[w].slo_ms / 2.0 {
                 continue;
             }
@@ -220,15 +225,16 @@ mod tests {
     #[test]
     fn efficient_resources_feasibility_fallback() {
         let s = sys();
+        let m = AnalyticModel::ALL;
         // an easy workload should get a small menu choice
         let easy = WorkloadSpec::new(0, Model::AlexNet, 25.0, 100.0);
         let b = igniter::derive_all(&s, &[easy.clone()])[0].unwrap().batch;
-        let r = efficient_resources(&s, &easy, b);
+        let r = efficient_resources(&m, &s, &easy, b);
         assert!(r <= 0.5, "easy workload got {r}");
         // a heavy workload must climb the menu
         let hard = WorkloadSpec::new(1, Model::Ssd, 25.0, 300.0);
         let b2 = igniter::derive_all(&s, &[hard.clone()])[0].unwrap().batch;
-        let r2 = efficient_resources(&s, &hard, b2);
+        let r2 = efficient_resources(&m, &s, &hard, b2);
         assert!(r2 >= 0.6, "heavy workload got {r2}");
     }
 }

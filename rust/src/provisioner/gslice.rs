@@ -11,6 +11,7 @@
 //! for the Fig. 15/16 experiment.
 
 use super::igniter::derive_all;
+use crate::perfmodel::AnalyticModel;
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
 
 /// GSLICE's tuning threshold (fraction of the half-SLO).
@@ -57,7 +58,8 @@ pub fn provision_gslice(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
     let hw = &sys.hw;
 
     // Placement skeleton from iGniter's placer (the patch in Sec. 5.1).
-    let skeleton = super::igniter::provision_with_derived(sys, specs, &derived);
+    let skeleton =
+        super::igniter::provision_with_derived(&AnalyticModel::ALL, sys, specs, &derived);
     let mut plan = Plan::new("GSLICE+", hw);
     // GSLICE starts every workload from its solo lower bound.
     plan.gpus = skeleton

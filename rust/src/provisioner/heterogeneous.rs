@@ -9,7 +9,7 @@
 
 use super::igniter;
 use super::types::{Plan, ProfiledSystem, WorkloadSpec};
-use crate::perfmodel;
+use crate::perfmodel::{self, AnalyticModel, PerfModel};
 
 /// A workload set expanded with replicas; `origin[i]` maps expanded index
 /// -> original workload index.
@@ -59,14 +59,24 @@ pub struct TypedPlan {
     pub replicated: ReplicatedSpecs,
 }
 
-/// Provision with iGniter on one GPU type, replicating as needed.
+/// Provision with iGniter on one GPU type, replicating as needed
+/// (static analytic scoring).
 pub fn provision_on(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Option<TypedPlan> {
+    provision_on_with(&AnalyticModel::ALL, sys, specs)
+}
+
+/// `provision_on` scored by an arbitrary [`PerfModel`].
+pub fn provision_on_with(
+    model: &dyn PerfModel,
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+) -> Option<TypedPlan> {
     let replicated = replicate_for(sys, specs)?;
     let derived = igniter::derive_all(sys, &replicated.specs);
     if derived.iter().any(|d| d.is_none()) {
         return None;
     }
-    let plan = igniter::provision_with_derived(sys, &replicated.specs, &derived);
+    let plan = igniter::provision_with_derived(model, sys, &replicated.specs, &derived);
     Some(TypedPlan { plan, replicated })
 }
 

@@ -12,7 +12,7 @@
 
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
 use crate::gpu::Model;
-use crate::perfmodel::{self, PlacedWorkload};
+use crate::perfmodel::{self, AnalyticModel, DeviceScorer, PerfModel};
 use crate::workload::replica_shares;
 
 /// Replication cap: a workload needing more than this many gpulets is
@@ -41,12 +41,20 @@ pub fn derive_all(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Vec<Option<De
 
 /// Algorithm 2: place workload `w` (with lower bound `r_lower_w` and batch
 /// `batch_w`) onto the device currently holding `resident`, then reallocate
-/// until every workload on the device satisfies `t_inf <= T_slo / 2` or the
-/// device runs out of resources.
+/// until every workload on the device satisfies `t_inf <= T_slo / 2` under
+/// `model`'s prediction, or the device runs out of resources.
+///
+/// Scoring goes through an incremental [`DeviceScorer`]: the device
+/// aggregates are built once and updated in step with the grown
+/// allocations, so each growth pass costs O(m) instead of the old O(m²)
+/// rebuild-and-resum per resident.  The scorer's analytic output is
+/// bit-identical to the full recomputation; `model.correct` then applies
+/// any calibrated residual on top.
 ///
 /// Returns the post-placement allocations (including `w` last) or `None`
 /// if the device cannot host the workload.
 pub fn alloc_gpus(
+    model: &dyn PerfModel,
     sys: &ProfiledSystem,
     specs: &[WorkloadSpec],
     resident: &[Alloc],
@@ -68,30 +76,22 @@ pub fn alloc_gpus(
     }
 
     // Iteratively grow SLO-violating workloads by r_unit (lines 2-11).
-    // The placed view is built once and updated in step with the grown
-    // allocations — the old per-iteration rebuild allocated a fresh
-    // vector every pass, which dominated Alg. 1 at sweep scale.
-    let mut placed: Vec<PlacedWorkload> = allocs
-        .iter()
-        .map(|a| PlacedWorkload {
-            coeffs: sys.coeffs_for(specs[a.workload].model),
-            batch: a.batch as f64,
-            resources: a.resources,
-        })
-        .collect();
+    let terms = model.terms();
+    let mut scorer = DeviceScorer::from_placed(hw, sys.placed_of(specs, &allocs));
     let mut flag = true;
     while flag {
         flag = false;
         let mut grow: Vec<usize> = Vec::new();
         for (i, a) in allocs.iter().enumerate() {
-            let pred = perfmodel::predict(hw, &placed, i);
+            let coeffs = scorer.placed(i).coeffs;
+            let pred = model.correct(&coeffs.name, scorer.predict_with(i, terms));
             if pred.t_inf > specs[a.workload].slo_ms / 2.0 + 1e-9 {
                 grow.push(i);
             }
         }
         for i in grow {
             allocs[i].resources += hw.r_unit;
-            placed[i].resources = allocs[i].resources;
+            scorer.set_resources(i, allocs[i].resources);
             flag = true;
         }
         if total(&allocs) > hw.r_max + 1e-9 {
@@ -135,13 +135,20 @@ pub fn over_capacity_rate(sys: &ProfiledSystem, model: Model, slo_ms: f64, start
     rate
 }
 
-/// Algorithm 1: the iGniter cost-efficient provisioning strategy.
+/// Algorithm 1: the iGniter cost-efficient provisioning strategy, scored
+/// by the static analytic model (the paper's configuration).
+pub fn provision(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
+    provision_with(&AnalyticModel::ALL, sys, specs)
+}
+
+/// Algorithm 1 scored by an arbitrary [`PerfModel`] (the online planner
+/// re-packs with its — possibly calibrated — model through this).
 ///
 /// Workloads whose `derive` entry is `None` (rate beyond a full gpulet)
 /// are split into even rate-sharing replicas and every replica placed
 /// independently; panics only when a workload stays infeasible past
 /// `MAX_REPLICAS` (i.e. the SLO itself cannot be met at any rate).
-pub fn provision(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
+pub fn provision_with(model: &dyn PerfModel, sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
     let derived = derive_all(sys, specs);
     let mut items: Vec<(usize, Derived)> = Vec::new();
     for (w, d) in derived.iter().enumerate() {
@@ -160,12 +167,18 @@ pub fn provision(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
             }
         }
     }
-    let plan = place_items(sys, specs, items);
-    debug_assert!(
-        validate_replica_shares(sys, specs, &plan).is_ok(),
-        "{:?}",
-        validate_replica_shares(sys, specs, &plan)
-    );
+    let plan = place_items(model, sys, specs, items);
+    // Static models must always produce a self-consistently valid plan.
+    // A calibrated model is exempt: its corrected SLOs may be genuinely
+    // unsatisfiable on this GPU type (that is the *finding*, not a bug),
+    // in which case the plan is the best-effort growth.
+    if model.observations() == 0 {
+        debug_assert!(
+            validate_replica_shares(model, sys, specs, &plan).is_ok(),
+            "{:?}",
+            validate_replica_shares(model, sys, specs, &plan)
+        );
+    }
     plan
 }
 
@@ -173,6 +186,7 @@ pub fn provision(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
 /// expands infeasible workloads into replica *specs* first, so each entry
 /// here is exactly one placement item).
 pub fn provision_with_derived(
+    model: &dyn PerfModel,
     sys: &ProfiledSystem,
     specs: &[WorkloadSpec],
     derived: &[Option<Derived>],
@@ -182,13 +196,14 @@ pub fn provision_with_derived(
         .enumerate()
         .filter_map(|(w, d)| d.map(|d| (w, d)))
         .collect();
-    place_items(sys, specs, items)
+    place_items(model, sys, specs, items)
 }
 
 /// Shared placement loop of Alg. 1: sort items by `r_lower` descending
 /// and greedily place each on the GPU with minimum increased-interference
 /// resources, provisioning a fresh GPU when none fits.
 fn place_items(
+    model: &dyn PerfModel,
     sys: &ProfiledSystem,
     specs: &[WorkloadSpec],
     mut items: Vec<(usize, Derived)>,
@@ -221,7 +236,8 @@ fn place_items(
             if used[g] + d.r_lower > hw.r_max + 1e-9 {
                 continue; // bitwise the same reject alloc_gpus would hit
             }
-            if let Some(alloc) = alloc_gpus(sys, specs, &plan.gpus[g], w, d.r_lower, d.batch) {
+            if let Some(alloc) = alloc_gpus(model, sys, specs, &plan.gpus[g], w, d.r_lower, d.batch)
+            {
                 // r_inter = sum of increases over current residents plus
                 // the new item's growth above its own lower bound.
                 // `alloc_gpus` preserves order (residents first, the new
@@ -251,13 +267,25 @@ fn place_items(
                 plan.gpus[g] = alloc;
             }
             None => {
-                // Provision a new GPU (lines 13-15) and place at r_lower.
-                plan.gpus.push(vec![Alloc {
-                    workload: w,
-                    resources: d.r_lower,
-                    batch: d.batch,
-                }]);
-                used.push(d.r_lower);
+                // Provision a new GPU (lines 13-15).  Placement still goes
+                // through alloc_gpus: with the analytic model the solo
+                // Theorem-1 bound needs no growth (this reduces to placing
+                // at r_lower), but a calibrated model may have to grow the
+                // lone item past its analytic lower bound right away.  If
+                // even the whole device cannot meet the (corrected) bound
+                // the growth loop overflows r_max and returns None — the
+                // best effort on an otherwise idle device is then the FULL
+                // device, not the analytic minimum.
+                let alloc = alloc_gpus(model, sys, specs, &[], w, d.r_lower, d.batch)
+                    .unwrap_or_else(|| {
+                        vec![Alloc {
+                            workload: w,
+                            resources: sys.hw.r_max,
+                            batch: d.batch,
+                        }]
+                    });
+                used.push(alloc.iter().map(|a| a.resources).sum());
+                plan.gpus.push(alloc);
             }
         }
     }
@@ -265,28 +293,22 @@ fn place_items(
 }
 
 /// Validate every allocation of a plan against its *replica share* of the
-/// workload's traffic: predicted `t_inf <= T_slo / 2` and predicted
-/// throughput covering `rate / replica_count` (the even per-replica
-/// arrival split the coordinator's router realizes).
+/// workload's traffic under `model`: predicted `t_inf <= T_slo / 2` and
+/// predicted throughput covering `rate / replica_count` (the even
+/// per-replica arrival split the coordinator's router realizes).
 pub fn validate_replica_shares(
+    model: &dyn PerfModel,
     sys: &ProfiledSystem,
     specs: &[WorkloadSpec],
     plan: &Plan,
 ) -> Result<(), String> {
     for g in 0..plan.gpus.len() {
-        let placed: Vec<PlacedWorkload> = plan.gpus[g]
-            .iter()
-            .map(|a| PlacedWorkload {
-                coeffs: sys.coeffs_for(specs[a.workload].model),
-                batch: a.batch as f64,
-                resources: a.resources,
-            })
-            .collect();
+        let placed = plan.placed_device(sys, specs, g);
         for (i, a) in plan.gpus[g].iter().enumerate() {
             let spec = &specs[a.workload];
             let k = plan.replica_count(a.workload).max(1);
             let share = spec.rate_rps / k as f64;
-            let p = perfmodel::predict(&sys.hw, &placed, i);
+            let p = model.predict(&sys.hw, &placed, i);
             if p.t_inf > spec.slo_ms / 2.0 + 1e-6 {
                 return Err(format!(
                     "gpu {g}: {} replica predicted t_inf {:.2} > half-SLO {:.2}",
@@ -315,14 +337,7 @@ pub fn predict_plan(
 ) -> Vec<(usize, f64, f64)> {
     let mut out = Vec::new();
     for g in 0..plan.gpus.len() {
-        let placed: Vec<PlacedWorkload> = plan.gpus[g]
-            .iter()
-            .map(|a| PlacedWorkload {
-                coeffs: sys.coeffs_for(specs[a.workload].model),
-                batch: a.batch as f64,
-                resources: a.resources,
-            })
-            .collect();
+        let placed = plan.placed_device(sys, specs, g);
         for (i, a) in plan.gpus[g].iter().enumerate() {
             let p = perfmodel::predict(&sys.hw, &placed, i);
             out.push((a.workload, p.t_inf, p.throughput_rps));
@@ -406,7 +421,9 @@ mod tests {
             resources: d0.r_lower,
             batch: d0.batch,
         }];
-        let alloc = alloc_gpus(&s, &specs, &resident, 1, d1.r_lower, d1.batch).unwrap();
+        let alloc =
+            alloc_gpus(&AnalyticModel::ALL, &s, &specs, &resident, 1, d1.r_lower, d1.batch)
+                .unwrap();
         let r0_after = alloc.iter().find(|a| a.workload == 0).unwrap().resources;
         assert!(
             r0_after >= d0.r_lower,
@@ -433,8 +450,16 @@ mod tests {
             resources: d0.r_lower,
             batch: d0.batch,
         }];
-        assert!(alloc_gpus(&s, &specs, &resident, 1, d[1].unwrap().r_lower, d[1].unwrap().batch)
-            .is_none());
+        assert!(alloc_gpus(
+            &AnalyticModel::ALL,
+            &s,
+            &specs,
+            &resident,
+            1,
+            d[1].unwrap().r_lower,
+            d[1].unwrap().batch
+        )
+        .is_none());
     }
 
     #[test]
@@ -495,8 +520,49 @@ mod tests {
             "workload beyond one GPU must replicate: {plan:?}"
         );
         assert_eq!(plan.replica_count(1), 1);
-        validate_replica_shares(&s, &specs, &plan).unwrap();
+        validate_replica_shares(&AnalyticModel::ALL, &s, &specs, &plan).unwrap();
         // deterministic across runs
         assert_eq!(plan, provision(&s, &specs));
+    }
+
+    #[test]
+    fn trait_threaded_provision_is_bitwise_the_default() {
+        // Threading the PerfModel trait (and the DeviceScorer underneath)
+        // must not move a single bit of the default plan — the acceptance
+        // bar for the whole refactor.
+        let s = sys();
+        let specs = crate::workload::app_workloads();
+        assert_eq!(provision(&s, &specs), provision_with(&AnalyticModel::ALL, &s, &specs));
+        // a zero-observation calibrated model is the same plan too
+        let cal = crate::perfmodel::CalibratedModel::new();
+        assert_eq!(provision(&s, &specs), provision_with(&cal, &s, &specs));
+    }
+
+    #[test]
+    fn calibrated_model_grows_allocations_under_learned_slowdown() {
+        // A model that has learned "resnet50 runs 1.4x the analytic
+        // prediction" must provision at least as many resources for a
+        // ResNet workload as the static model — the mechanism behind
+        // closed-loop mismatch recovery.
+        let s = sys();
+        let specs = vec![WorkloadSpec::new(0, Model::ResNet50, 30.0, 300.0)];
+        let base = provision(&s, &specs);
+        let mut cal = crate::perfmodel::CalibratedModel::new();
+        let solo = crate::perfmodel::predict_solo(
+            &s.hw,
+            s.coeffs_for(Model::ResNet50),
+            8.0,
+            0.3,
+        );
+        for _ in 0..16 {
+            cal.observe("resnet50", solo.t_inf, solo.t_inf * 1.4);
+        }
+        let grown = provision_with(&cal, &s, &specs);
+        let r_base = base.find(0).unwrap().1.resources;
+        let r_grown = grown.find(0).unwrap().1.resources;
+        assert!(
+            r_grown > r_base + 1e-9,
+            "calibrated allocation {r_grown} !> static {r_base}"
+        );
     }
 }

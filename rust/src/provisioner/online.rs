@@ -7,8 +7,11 @@
 //! from-scratch Alg.-1 plan to decide whether a full re-pack would save
 //! instances (the paper's periodic execution).
 
-use super::igniter::{alloc_gpus, derive_all, provision_with_derived, replica_split, Derived};
+use super::igniter::{
+    alloc_gpus, derive_all, provision_with, provision_with_derived, replica_split, Derived,
+};
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
+use crate::perfmodel::{model, AnalyticModel, PerfModel, Prediction};
 use crate::util::error::{anyhow, Result};
 
 /// A live, mutable provisioning state.
@@ -19,6 +22,11 @@ pub struct OnlinePlanner {
     plan: Plan,
     /// workloads currently active (by spec index)
     active: Vec<bool>,
+    /// The performance model every placement decision scores with.  The
+    /// default is the static `AnalyticModel`; the serving `Reprovisioner`
+    /// swaps in a `CalibratedModel` it feeds from observed latencies, so
+    /// re-plans trust the corrected predictions.
+    model: Box<dyn PerfModel>,
 }
 
 /// Outcome of an arrival.
@@ -31,7 +39,7 @@ pub enum Placed {
 }
 
 impl OnlinePlanner {
-    /// Start with an empty cluster.
+    /// Start with an empty cluster (static analytic model).
     pub fn new(sys: ProfiledSystem) -> OnlinePlanner {
         let plan = Plan::new("iGniter-online", &sys.hw);
         OnlinePlanner {
@@ -39,10 +47,11 @@ impl OnlinePlanner {
             specs: Vec::new(),
             plan,
             active: Vec::new(),
+            model: Box::new(AnalyticModel::ALL),
         }
     }
 
-    /// Start from an existing offline plan.
+    /// Start from an existing offline plan (static analytic model).
     pub fn from_plan(sys: ProfiledSystem, specs: Vec<WorkloadSpec>, plan: Plan) -> OnlinePlanner {
         let active = vec![true; specs.len()];
         OnlinePlanner {
@@ -50,7 +59,21 @@ impl OnlinePlanner {
             specs,
             plan,
             active,
+            model: Box::new(AnalyticModel::ALL),
         }
+    }
+
+    /// Swap the performance model used for every later placement.
+    pub fn set_model(&mut self, model: Box<dyn PerfModel>) {
+        self.model = model;
+    }
+
+    pub fn model(&self) -> &dyn PerfModel {
+        self.model.as_ref()
+    }
+
+    pub fn model_mut(&mut self) -> &mut dyn PerfModel {
+        self.model.as_mut()
     }
 
     pub fn plan(&self) -> &Plan {
@@ -105,6 +128,7 @@ impl OnlinePlanner {
         let mut best: Option<(usize, Vec<Alloc>, f64)> = None;
         for g in 0..self.plan.gpus.len() {
             if let Some(alloc) = alloc_gpus(
+                self.model.as_ref(),
                 &self.sys,
                 &self.specs,
                 &self.plan.gpus[g],
@@ -136,11 +160,30 @@ impl OnlinePlanner {
                 Placed::Existing(g)
             }
             None => {
-                self.plan.gpus.push(vec![Alloc {
-                    workload: id,
-                    resources: derived.r_lower,
-                    batch: derived.batch,
-                }]);
+                // Fresh device: still score through alloc_gpus (a no-op
+                // growth for the analytic model, a real one for a
+                // calibrated model that knows the class runs slow).  When
+                // even full-device growth cannot meet the corrected bound
+                // (None), the best effort on an idle device is the FULL
+                // device — falling back to the analytic minimum would
+                // *shrink* a workload that is known to run slow.
+                let alloc = alloc_gpus(
+                    self.model.as_ref(),
+                    &self.sys,
+                    &self.specs,
+                    &[],
+                    id,
+                    derived.r_lower,
+                    derived.batch,
+                )
+                .unwrap_or_else(|| {
+                    vec![Alloc {
+                        workload: id,
+                        resources: self.sys.hw.r_max,
+                        batch: derived.batch,
+                    }]
+                });
+                self.plan.gpus.push(alloc);
                 Placed::NewGpu(self.plan.gpus.len() - 1)
             }
         }
@@ -211,9 +254,9 @@ impl OnlinePlanner {
             // front-end, which splits.  Feasibility is guaranteed —
             // every active workload was placed by add/respec, so its
             // replica_split succeeds.
-            super::igniter::provision(&self.sys, &dense)
+            provision_with(self.model.as_ref(), &self.sys, &dense)
         } else {
-            provision_with_derived(&self.sys, &dense, &derived)
+            provision_with_derived(self.model.as_ref(), &self.sys, &dense, &derived)
         };
         if fresh.num_gpus() < self.occupied_gpus() {
             // translate back to original ids
@@ -236,20 +279,57 @@ impl OnlinePlanner {
         }
     }
 
-    /// Predicted (t_inf, throughput) of one active workload.
+    /// Predicted (t_inf, throughput) of one active workload under the
+    /// planner's model (calibrated corrections included when installed).
     pub fn predict(&self, id: usize) -> Option<(f64, f64)> {
+        let (_, corrected) = self.predict_full(id)?;
+        Some((corrected.t_inf, corrected.throughput_rps))
+    }
+
+    /// Both views of one active workload's first replica: the raw
+    /// analytic prediction and the model-corrected one.  The raw half is
+    /// what calibration trains against (feeding corrected predictions
+    /// back into the fit would be self-referential).
+    pub fn predict_full(&self, id: usize) -> Option<(Prediction, Prediction)> {
         let (g, _) = self.plan.find(id)?;
-        let placed: Vec<crate::perfmodel::PlacedWorkload> = self.plan.gpus[g]
-            .iter()
-            .map(|a| crate::perfmodel::PlacedWorkload {
-                coeffs: self.sys.coeffs_for(self.specs[a.workload].model),
-                batch: a.batch as f64,
-                resources: a.resources,
-            })
-            .collect();
+        let placed = self.plan.placed_device(&self.sys, &self.specs, g);
         let idx = self.plan.gpus[g].iter().position(|a| a.workload == id)?;
-        let p = crate::perfmodel::predict(&self.sys.hw, &placed, idx);
-        Some((p.t_inf, p.throughput_rps))
+        let raw = model::predict_with(&self.sys.hw, &placed, idx, self.model.terms());
+        let corrected = self.model.correct(&placed[idx].coeffs.name, raw);
+        Some((raw, corrected))
+    }
+
+    /// Group-mean `(raw t_inf, corrected t_inf)` over **every** replica
+    /// of `id`.  This is what the calibration feed pairs against the
+    /// group-mean observed exec latency: replicas of one workload can sit
+    /// under very different co-location (one solo, one with three noisy
+    /// neighbours), so a single-replica prediction against a group-mean
+    /// observation would bias the residual fit in either direction.
+    pub fn predict_group_mean(&self, id: usize) -> Option<(f64, f64)> {
+        let mut raw_sum = 0.0;
+        let mut cor_sum = 0.0;
+        let mut n = 0u32;
+        for g in 0..self.plan.gpus.len() {
+            if !self.plan.gpus[g].iter().any(|a| a.workload == id) {
+                continue;
+            }
+            let placed = self.plan.placed_device(&self.sys, &self.specs, g);
+            for (idx, a) in self.plan.gpus[g].iter().enumerate() {
+                if a.workload != id {
+                    continue;
+                }
+                let raw = model::predict_with(&self.sys.hw, &placed, idx, self.model.terms());
+                let corrected = self.model.correct(&placed[idx].coeffs.name, raw);
+                raw_sum += raw.t_inf;
+                cor_sum += corrected.t_inf;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            None
+        } else {
+            Some((raw_sum / n as f64, cor_sum / n as f64))
+        }
     }
 }
 
@@ -271,7 +351,9 @@ mod tests {
     fn incremental_arrivals_meet_slos() {
         let mut op = OnlinePlanner::new(sys());
         for spec in app_workloads() {
-            let (id, _) = op.add(WorkloadSpec::new(0, spec.model, spec.slo_ms, spec.rate_rps)).unwrap();
+            let (id, _) = op
+                .add(WorkloadSpec::new(0, spec.model, spec.slo_ms, spec.rate_rps))
+                .unwrap();
             // every active workload must still meet its half-SLO
             let _ = id;
             for w in 0..op.specs().len() {
@@ -297,7 +379,8 @@ mod tests {
         let mut op = OnlinePlanner::new(sys());
         let mut ids = Vec::new();
         for spec in app_workloads() {
-            ids.push(op.add(WorkloadSpec::new(0, spec.model, spec.slo_ms, spec.rate_rps)).unwrap().0);
+            let spec = WorkloadSpec::new(0, spec.model, spec.slo_ms, spec.rate_rps);
+            ids.push(op.add(spec).unwrap().0);
         }
         let before = op.occupied_gpus();
         // remove the eight heaviest (every non-AlexNet workload)
@@ -403,6 +486,36 @@ mod tests {
                 assert!(t_inf <= 40.0 / 2.0 + 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn calibrated_model_drives_larger_respec_allocations() {
+        // Swap in a CalibratedModel that has learned "resnet50 runs 1.4x
+        // the analytic prediction": the next respec must grow the
+        // allocation past what the static model provisioned, and the
+        // corrected prediction must meet the half-SLO again.
+        let mut op = OnlinePlanner::new(sys());
+        let (id, _) = op
+            .add(WorkloadSpec::new(0, Model::ResNet50, 30.0, 300.0))
+            .unwrap();
+        let r_static = op.plan().find(id).unwrap().1.resources;
+        let (raw, corrected) = op.predict_full(id).unwrap();
+        // analytic model: corrected == raw bit for bit
+        assert_eq!(raw.t_inf.to_bits(), corrected.t_inf.to_bits());
+        let mut cal = crate::perfmodel::CalibratedModel::new();
+        for _ in 0..16 {
+            cal.observe("resnet50", raw.t_inf, raw.t_inf * 1.4);
+        }
+        op.set_model(Box::new(cal));
+        assert_eq!(op.model().name(), "calibrated");
+        let (id2, _) = op.respec(id, 300.0).unwrap();
+        let r_cal = op.plan().find(id2).unwrap().1.resources;
+        assert!(
+            r_cal > r_static + 1e-9,
+            "calibrated respec did not grow: {r_cal} vs {r_static}"
+        );
+        let (_, c) = op.predict_full(id2).unwrap();
+        assert!(c.t_inf <= 30.0 / 2.0 + 1e-6, "corrected t_inf {}", c.t_inf);
     }
 
     #[test]

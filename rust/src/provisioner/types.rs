@@ -104,6 +104,19 @@ impl Plan {
         self.all().filter(|(_, a)| a.workload == workload).count()
     }
 
+    /// The `PlacedWorkload` view of one device — the **single source of
+    /// device views**: placement scoring (`DeviceScorer::from_placed`),
+    /// replica validation, plan prediction, and the online planner all
+    /// build on this instead of hand-rolling the mapping.
+    pub fn placed_device<'a>(
+        &self,
+        sys: &'a ProfiledSystem,
+        specs: &[WorkloadSpec],
+        gpu: usize,
+    ) -> Vec<PlacedWorkload<'a>> {
+        sys.placed_of(specs, &self.gpus[gpu])
+    }
+
     /// All allocations as (gpu, alloc) pairs.
     pub fn all(&self) -> impl Iterator<Item = (usize, &Alloc)> {
         self.gpus
@@ -266,24 +279,19 @@ impl ProfiledSystem {
             .1
     }
 
-    /// Build the `PlacedWorkload` view of one device of a plan.
-    pub fn placed_view<'a>(
+    /// Build the `PlacedWorkload` view of an allocation list, in
+    /// allocation order (predictions are positional).
+    pub fn placed_of<'a>(
         &'a self,
-        plan: &Plan,
         specs: &[WorkloadSpec],
-        gpu: usize,
-    ) -> Vec<(usize, PlacedWorkload<'a>)> {
-        plan.gpus[gpu]
+        allocs: &[Alloc],
+    ) -> Vec<PlacedWorkload<'a>> {
+        allocs
             .iter()
-            .map(|a| {
-                (
-                    a.workload,
-                    PlacedWorkload {
-                        coeffs: self.coeffs_for(specs[a.workload].model),
-                        batch: a.batch as f64,
-                        resources: a.resources,
-                    },
-                )
+            .map(|a| PlacedWorkload {
+                coeffs: self.coeffs_for(specs[a.workload].model),
+                batch: a.batch as f64,
+                resources: a.resources,
             })
             .collect()
     }
@@ -439,5 +447,25 @@ mod tests {
         let j = plan().to_json();
         assert_eq!(j.get("strategy").unwrap().as_str(), Some("test"));
         assert_eq!(j.path("gpus.0.1.batch").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn placed_device_mirrors_the_allocation_list() {
+        let (hw, wls) = crate::profiler::profile_all(crate::gpu::GpuKind::V100, 42);
+        let sys = ProfiledSystem {
+            hw,
+            coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+        };
+        let specs: Vec<WorkloadSpec> = (0..3)
+            .map(|i| WorkloadSpec::new(i, Model::ResNet50, 40.0, 100.0))
+            .collect();
+        let p = plan();
+        let view = p.placed_device(&sys, &specs, 0);
+        assert_eq!(view.len(), 2);
+        for (v, a) in view.iter().zip(&p.gpus[0]) {
+            assert_eq!(v.batch, a.batch as f64);
+            assert_eq!(v.resources, a.resources);
+            assert_eq!(v.coeffs.name, "resnet50");
+        }
     }
 }

@@ -30,6 +30,31 @@ pub struct Aggregate {
     pub total_dropped: i64,
     pub total_gpu_seconds: f64,
     pub mean_gpus: f64,
+    /// Mean over feasible tasks *with recorded samples* of each task's
+    /// mean prediction error (rel_error of model-predicted vs
+    /// serving-observed exec latency).  Sample-less tasks are excluded —
+    /// counting them as zero error would bias the CI gate toward 0 and
+    /// let a telemetry-loss regression read as an improvement.
+    pub mean_pred_error: f64,
+    /// Mean over the same sampled tasks of each task's p95 error.
+    pub p95_pred_error: f64,
+    /// Total prediction-error samples across all tasks.
+    pub pred_err_samples: u64,
+}
+
+/// Mean of `f` over the tasks that actually recorded prediction-error
+/// samples (0.0 when none did).
+fn sampled_mean(feasible: &[&ScenarioResult], f: impl Fn(&ScenarioResult) -> f64) -> f64 {
+    let sampled: Vec<f64> = feasible
+        .iter()
+        .filter(|r| r.pred_err_samples > 0)
+        .map(|r| f(r))
+        .collect();
+    if sampled.is_empty() {
+        0.0
+    } else {
+        sampled.iter().sum::<f64>() / sampled.len() as f64
+    }
 }
 
 impl Aggregate {
@@ -50,6 +75,9 @@ impl Aggregate {
             total_dropped: results.iter().map(|r| r.dropped).sum(),
             total_gpu_seconds: results.iter().map(|r| r.gpu_seconds).sum(),
             mean_gpus: mean_of(feasible.iter().map(|r| r.gpus as f64).sum()),
+            mean_pred_error: sampled_mean(&feasible, |r| r.pred_err_mean),
+            p95_pred_error: sampled_mean(&feasible, |r| r.pred_err_p95),
+            pred_err_samples: results.iter().map(|r| r.pred_err_samples).sum(),
         }
     }
 
@@ -65,6 +93,9 @@ impl Aggregate {
             .set("total_dropped", self.total_dropped)
             .set("total_gpu_seconds", self.total_gpu_seconds)
             .set("mean_gpus", self.mean_gpus)
+            .set("mean_pred_error", self.mean_pred_error)
+            .set("p95_pred_error", self.p95_pred_error)
+            .set("pred_err_samples", self.pred_err_samples)
     }
 }
 
@@ -93,7 +124,11 @@ fn result_json(r: &ScenarioResult, with_wall: bool) -> Json {
         .set("served", r.served)
         .set("arrivals", r.arrivals)
         .set("dropped", r.dropped)
-        .set("gpu_seconds", r.gpu_seconds);
+        .set("gpu_seconds", r.gpu_seconds)
+        .set("mismatch_pct", r.mismatch_pct)
+        .set("pred_err_mean", r.pred_err_mean)
+        .set("pred_err_p95", r.pred_err_p95)
+        .set("pred_err_samples", r.pred_err_samples);
     if with_wall {
         j = j.set("wall_ms", r.wall_ms);
     }
@@ -122,6 +157,8 @@ impl SweepReport {
             .set("max_workloads", self.config.space.max_workloads)
             .set("epochs", self.config.space.epochs)
             .set("epoch_ms", self.config.space.epoch_ms)
+            .set("mismatch", self.config.space.mismatch)
+            .set("calibrate", self.config.calibrate)
     }
 
     /// The deterministic subset: identical across `--parallel` widths.
@@ -197,6 +234,10 @@ mod tests {
             arrivals: 1010,
             dropped: 0,
             gpu_seconds: 33.0,
+            mismatch_pct: 0.0,
+            pred_err_mean: 0.2,
+            pred_err_p95: 0.5,
+            pred_err_samples: 40,
             wall_ms: 12.5,
         }
     }
@@ -208,6 +249,7 @@ mod tests {
             parallel: 4,
             master_seed: 42,
             space: crate::sweep::ScenarioSpace::quick(),
+            calibrate: false,
         }
     }
 
@@ -224,6 +266,31 @@ mod tests {
         assert!((agg.mean_slo_attainment - 0.75).abs() < 1e-12);
         assert_eq!(agg.total_served, 2000);
         assert_eq!(agg.total_migrations, 6);
+        // pred-error means ignore infeasible tasks like the other means
+        assert!((agg.mean_pred_error - 0.2).abs() < 1e-12);
+        assert!((agg.p95_pred_error - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_less_tasks_do_not_dilute_the_error_means() {
+        // A feasible task that recorded no prediction-error samples must
+        // be excluded from the error means — counting it as zero error
+        // would bias the lower-is-better CI gate toward passing exactly
+        // when the telemetry breaks.
+        let mut silent = result(1, 20.0, 0.9);
+        silent.pred_err_mean = 0.0;
+        silent.pred_err_p95 = 0.0;
+        silent.pred_err_samples = 0;
+        let agg = Aggregate::of(&[result(0, 10.0, 1.0), silent]);
+        assert_eq!(agg.feasible, 2);
+        assert!((agg.mean_pred_error - 0.2).abs() < 1e-12, "{}", agg.mean_pred_error);
+        assert!((agg.p95_pred_error - 0.5).abs() < 1e-12);
+        assert_eq!(agg.pred_err_samples, 40);
+        // ...and with no sampled task at all the means are plain zero
+        let mut other = result(0, 10.0, 1.0);
+        other.pred_err_samples = 0;
+        let none = Aggregate::of(&[other]);
+        assert_eq!(none.mean_pred_error, 0.0);
     }
 
     #[test]

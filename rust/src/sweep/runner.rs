@@ -14,9 +14,10 @@
 
 use super::report::SweepReport;
 use super::scenario::{stream, Scenario, ScenarioSpace};
-use crate::coordinator::{ClusterSim, Policy, Reprovisioner};
+use crate::coordinator::{dropped_requests, ClusterSim, Policy, Reprovisioner};
 use crate::gpu::GpuKind;
 use crate::provisioner::{heterogeneous, ProfiledSystem};
+use crate::util::stats::{mean, percentile};
 use crate::workload::trace::RateTrace;
 use crate::workload::ArrivalKind;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -34,6 +35,10 @@ pub struct SweepConfig {
     pub parallel: usize,
     pub master_seed: u64,
     pub space: ScenarioSpace,
+    /// Serve every task with online calibration
+    /// (`Reprovisioner::with_calibration`) instead of the static model —
+    /// the closed-loop answer to the `--mismatch` lane.
+    pub calibrate: bool,
 }
 
 impl SweepConfig {
@@ -68,6 +73,17 @@ pub struct ScenarioResult {
     pub dropped: i64,
     /// Integrated occupied-device time over the run.
     pub gpu_seconds: f64,
+    /// Worst believed-coefficient error injected by the mismatch lane
+    /// (0 outside it).
+    pub mismatch_pct: f64,
+    /// Mean / p95 of the serving-observed prediction error
+    /// (rel_error(model-predicted t_inf, observed exec), sampled per
+    /// monitor tick per workload; 0 when no samples were recorded —
+    /// `pred_err_samples` tells the two cases apart, and the aggregate
+    /// excludes sample-less tasks from the error means).
+    pub pred_err_mean: f64,
+    pub pred_err_p95: f64,
+    pub pred_err_samples: u64,
     /// Wall-clock of provision + simulate (NOT deterministic).
     pub wall_ms: f64,
 }
@@ -104,7 +120,7 @@ fn provision_scenario(scenario: &Scenario, systems: &[ProfiledSystem]) -> Option
 /// provisioning wall where it actually happened.
 fn serve_task(
     cfg: &SweepConfig,
-    systems: &[ProfiledSystem],
+    believed: &[ProfiledSystem],
     scenario: &Scenario,
     prov: Option<&Provisioned>,
     task: usize,
@@ -127,12 +143,18 @@ fn serve_task(
         arrivals: 0,
         dropped: 0,
         gpu_seconds: 0.0,
+        mismatch_pct: scenario.mismatch_pct(),
+        pred_err_mean: 0.0,
+        pred_err_p95: 0.0,
+        pred_err_samples: 0,
         wall_ms: 0.0,
     };
     let Some(p) = prov else {
         return result; // infeasible on every fleet shape offered
     };
-    let sys = systems
+    // the Reprovisioner plans with what the planner *believes*; the sim's
+    // physics stay the unperturbed ground truth
+    let sys = believed
         .iter()
         .find(|s| s.hw.gpu == p.plan.gpu)
         .expect("adopted plan's system is in the profiled pair");
@@ -148,11 +170,11 @@ fn serve_task(
         sim_seed,
         &[],
     );
-    sim.set_serving_policy(Box::new(Reprovisioner::new(
-        sys.clone(),
-        p.rspecs.clone(),
-        p.plan.clone(),
-    )));
+    let mut policy = Reprovisioner::new(sys.clone(), p.rspecs.clone(), p.plan.clone());
+    if cfg.calibrate {
+        policy = policy.with_calibration();
+    }
+    sim.set_serving_policy(Box::new(policy));
     sim.set_rate_trace(&trace, scenario.epoch_ms);
     sim.set_horizon(scenario.horizon_ms(), scenario.warmup_ms);
     let stats = sim.run();
@@ -166,11 +188,14 @@ fn serve_task(
     result.migrations = sim.migrations();
     result.served = stats.iter().map(|s| s.served).sum();
     result.arrivals = stats.iter().map(|s| s.arrivals).sum();
-    result.dropped = stats
-        .iter()
-        .map(|s| s.arrivals as i64 - s.served as i64 - s.still_queued as i64)
-        .sum();
+    result.dropped = dropped_requests(&stats);
     result.gpu_seconds = sim.gpu_seconds();
+    let errs = sim.serving_policy().prediction_errors();
+    if !errs.is_empty() {
+        result.pred_err_mean = mean(errs);
+        result.pred_err_p95 = percentile(errs, 0.95);
+        result.pred_err_samples = errs.len() as u64;
+    }
     result.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     result
 }
@@ -182,9 +207,10 @@ pub fn run_task(cfg: &SweepConfig, systems: &[ProfiledSystem], task: usize) -> S
     let seeds = cfg.seeds.max(1);
     let scenario = Scenario::generate(&cfg.space, cfg.master_seed, task / seeds);
     let t0 = Instant::now();
-    let prov = provision_scenario(&scenario, systems);
+    let believed = scenario.believed_systems(systems);
+    let prov = provision_scenario(&scenario, &believed);
     let prov_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let mut r = serve_task(cfg, systems, &scenario, prov.as_ref(), task);
+    let mut r = serve_task(cfg, &believed, &scenario, prov.as_ref(), task);
     r.wall_ms += prov_ms;
     r
 }
@@ -200,10 +226,11 @@ fn run_scenario(
     let seeds = cfg.seeds.max(1);
     let scenario = Scenario::generate(&cfg.space, cfg.master_seed, scenario_id);
     let t0 = Instant::now();
-    let prov = provision_scenario(&scenario, systems);
+    let believed = scenario.believed_systems(systems);
+    let prov = provision_scenario(&scenario, &believed);
     let prov_ms = t0.elapsed().as_secs_f64() * 1e3;
     let mut out: Vec<ScenarioResult> = (0..seeds)
-        .map(|si| serve_task(cfg, systems, &scenario, prov.as_ref(), scenario_id * seeds + si))
+        .map(|si| serve_task(cfg, &believed, &scenario, prov.as_ref(), scenario_id * seeds + si))
         .collect();
     out[0].wall_ms += prov_ms;
     out
@@ -267,7 +294,9 @@ mod tests {
                 epoch_ms: 800.0,
                 warmup_ms: 200.0,
                 fleets: vec![Fleet::V100Only, Fleet::Heterogeneous],
+                mismatch: false,
             },
+            calibrate: false,
         }
     }
 
@@ -283,6 +312,40 @@ mod tests {
             assert!(r.served > 0 && r.arrivals >= r.served);
             assert!((0.0..=1.0).contains(&r.slo_attainment));
             assert!(r.gpu_seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn prediction_error_metrics_are_recorded() {
+        let cfg = tiny();
+        let report = run_sweep(&cfg);
+        assert!(
+            report.results.iter().any(|r| r.pred_err_mean > 0.0),
+            "no task recorded prediction errors"
+        );
+        for r in &report.results {
+            assert!(r.pred_err_mean >= 0.0 && r.pred_err_mean.is_finite());
+            assert!(r.pred_err_p95 >= 0.0 && r.pred_err_p95.is_finite());
+            assert_eq!(r.mismatch_pct, 0.0, "no mismatch outside the lane");
+        }
+    }
+
+    #[test]
+    fn mismatch_lane_with_calibration_conserves_requests() {
+        let mut cfg = tiny();
+        cfg.space.mismatch = true;
+        cfg.calibrate = true;
+        let report = run_sweep(&cfg);
+        for r in &report.results {
+            assert_eq!(r.dropped, 0, "calibrated closed loop dropped: {r:?}");
+            if r.feasible {
+                assert!(
+                    (0.10..=0.30 + 1e-9).contains(&r.mismatch_pct),
+                    "mismatch_pct {}",
+                    r.mismatch_pct
+                );
+                assert!(r.served > 0);
+            }
         }
     }
 

@@ -91,6 +91,12 @@ pub struct ScenarioSpace {
     pub warmup_ms: f64,
     /// Fleet shapes scenarios may sample.
     pub fleets: Vec<Fleet>,
+    /// Model-mismatch lane: when `true`, each scenario perturbs the
+    /// timing coefficients the **planner believes** by a per-model-class
+    /// factor of 1 +/- U[0.10, 0.30] while the simulator's physics stay
+    /// the ground truth — the planner's model is now 10-30% wrong, the
+    /// regime the calibration layer exists for.
+    pub mismatch: bool,
 }
 
 impl ScenarioSpace {
@@ -104,6 +110,7 @@ impl ScenarioSpace {
             epoch_ms: 1_500.0,
             warmup_ms: 500.0,
             fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
+            mismatch: false,
         }
     }
 
@@ -117,6 +124,16 @@ impl ScenarioSpace {
             epoch_ms: 2_500.0,
             warmup_ms: 1_000.0,
             fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
+            mismatch: false,
+        }
+    }
+
+    /// The model-mismatch lane: the quick space with per-scenario
+    /// coefficient perturbation enabled (`igniter sweep --mismatch`).
+    pub fn mismatch() -> ScenarioSpace {
+        ScenarioSpace {
+            mismatch: true,
+            ..ScenarioSpace::quick()
         }
     }
 
@@ -137,6 +154,10 @@ pub struct Scenario {
     pub epochs: usize,
     pub epoch_ms: f64,
     pub warmup_ms: f64,
+    /// Per-model-class timing perturbation factors (indexed like
+    /// `ALL_MODELS`; empty when the mismatch lane is off).  Applied to
+    /// the planner's *believed* coefficients, never the simulator.
+    pub mismatch: Vec<f64>,
 }
 
 impl Scenario {
@@ -177,9 +198,28 @@ impl Scenario {
                     SloTier::Nominal => (slo_lo, slo_hi),
                     SloTier::Relaxed => (slo_lo + 0.65 * span, slo_hi),
                 };
-                WorkloadSpec::new(i, model, rng.range_f64(lo, hi), rng.range_f64(rate_lo, rate_hi).round())
+                let slo_ms = rng.range_f64(lo, hi);
+                let rate = rng.range_f64(rate_lo, rate_hi).round();
+                WorkloadSpec::new(i, model, slo_ms, rate)
             })
             .collect();
+        // mismatch lane: each model class's believed timing is off by
+        // +/- 10-30%, sign and magnitude drawn per scenario
+        let mismatch = if space.mismatch {
+            ALL_MODELS
+                .iter()
+                .map(|_| {
+                    let mag = rng.range_f64(0.10, 0.30);
+                    if rng.bool() {
+                        1.0 + mag
+                    } else {
+                        1.0 - mag
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         Scenario {
             id,
             fleet,
@@ -189,11 +229,45 @@ impl Scenario {
             epochs: space.epochs,
             epoch_ms: space.epoch_ms,
             warmup_ms: space.warmup_ms,
+            mismatch,
         }
     }
 
     pub fn horizon_ms(&self) -> f64 {
         self.epochs as f64 * self.epoch_ms
+    }
+
+    /// Worst-case believed-coefficient error of this scenario (0 when the
+    /// mismatch lane is off) — reported per scenario in the sweep JSON.
+    pub fn mismatch_pct(&self) -> f64 {
+        self.mismatch
+            .iter()
+            .map(|f| (f - 1.0).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// The systems the **planner believes**: the profiled pair with this
+    /// scenario's per-class timing perturbation applied.  Returns the
+    /// input unchanged when the lane is off.  The simulator always runs
+    /// on the unperturbed physics — the gap is the injected model error.
+    pub fn believed_systems(&self, systems: &[ProfiledSystem]) -> Vec<ProfiledSystem> {
+        if self.mismatch.is_empty() {
+            return systems.to_vec();
+        }
+        systems
+            .iter()
+            .map(|sys| {
+                let mut s = sys.clone();
+                for (m, wc) in &mut s.coeffs {
+                    let idx = ALL_MODELS
+                        .iter()
+                        .position(|x| x == m)
+                        .expect("profiled model is in the zoo");
+                    wc.scale_time(self.mismatch[idx]);
+                }
+                s
+            })
+            .collect()
     }
 }
 
@@ -258,6 +332,52 @@ mod tests {
         }
         for tier in [SloTier::Tight, SloTier::Nominal, SloTier::Relaxed] {
             assert!(scenarios.iter().any(|s| s.tier == tier), "{tier:?} never drawn");
+        }
+    }
+
+    #[test]
+    fn mismatch_lane_perturbs_beliefs_within_the_band() {
+        let space = ScenarioSpace::mismatch();
+        let systems = profiled_pair(42);
+        for id in 0..20 {
+            let s = Scenario::generate(&space, 11, id);
+            assert_eq!(s.mismatch.len(), ALL_MODELS.len());
+            for f in &s.mismatch {
+                let mag = (f - 1.0).abs();
+                assert!((0.10 - 1e-9..=0.30 + 1e-9).contains(&mag), "factor {f}");
+            }
+            assert!(s.mismatch_pct() >= 0.10);
+            let believed = s.believed_systems(&systems);
+            assert_eq!(believed.len(), systems.len());
+            for (b, t) in believed.iter().zip(&systems) {
+                for ((m, bw), (_, tw)) in b.coeffs.iter().zip(&t.coeffs) {
+                    let idx = ALL_MODELS.iter().position(|x| x == m).unwrap();
+                    let f = s.mismatch[idx];
+                    assert!((bw.kact.k2 - tw.kact.k2 * f).abs() < 1e-12);
+                    assert!((bw.k_sch - tw.k_sch * f).abs() < 1e-12);
+                    // power/cache laws untouched
+                    assert_eq!(bw.alpha_power, tw.alpha_power);
+                    assert_eq!(bw.alpha_cacheutil, tw.alpha_cacheutil);
+                }
+            }
+        }
+        // generation stays pure
+        assert_eq!(
+            Scenario::generate(&space, 11, 3),
+            Scenario::generate(&space, 11, 3)
+        );
+    }
+
+    #[test]
+    fn default_spaces_have_no_mismatch() {
+        let systems = profiled_pair(42);
+        let s = Scenario::generate(&ScenarioSpace::quick(), 42, 0);
+        assert!(s.mismatch.is_empty());
+        assert_eq!(s.mismatch_pct(), 0.0);
+        // believed == truth, allocation for the runner's sharing contract
+        let believed = s.believed_systems(&systems);
+        for (b, t) in believed.iter().zip(&systems) {
+            assert_eq!(b.hw, t.hw);
         }
     }
 

@@ -180,6 +180,99 @@ pub fn fit_kact(samples: &[(f64, f64, f64)]) -> Option<KactFit> {
     })
 }
 
+/// Recursive least squares over a 2-term basis: fits `y ≈ theta · x` one
+/// sample at a time via the Sherman-Morrison update of the inverse normal
+/// equations, with exponential forgetting `lambda` (1.0 = plain LSQ).
+///
+/// The online counterpart of `linear_lsq` for streams — used by
+/// `perfmodel::CalibratedModel` to fit per-workload-class residual
+/// corrections (`observed = a * predicted + b`) from serving telemetry
+/// without retaining the samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rls2 {
+    theta: [f64; 2],
+    /// Inverse covariance estimate P (symmetric 2x2).
+    p: [[f64; 2]; 2],
+    lambda: f64,
+    n: u64,
+}
+
+impl Rls2 {
+    /// `init_theta` is the prior coefficient vector; `p0` scales the prior
+    /// covariance (large = weak prior, the first samples dominate);
+    /// `lambda` in (0, 1] is the forgetting factor.
+    pub fn new(init_theta: [f64; 2], p0: f64, lambda: f64) -> Rls2 {
+        assert!(p0 > 0.0 && lambda > 0.0 && lambda <= 1.0);
+        Rls2 {
+            theta: init_theta,
+            p: [[p0, 0.0], [0.0, p0]],
+            lambda,
+            n: 0,
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn theta(&self) -> [f64; 2] {
+        self.theta
+    }
+
+    pub fn predict(&self, x: [f64; 2]) -> f64 {
+        self.theta[0] * x[0] + self.theta[1] * x[1]
+    }
+
+    /// Absorb one `(x, y)` sample.  Non-finite inputs are ignored (a
+    /// poisoned P matrix would corrupt every later prediction).
+    pub fn update(&mut self, x: [f64; 2], y: f64) {
+        if !(x[0].is_finite() && x[1].is_finite() && y.is_finite()) {
+            return;
+        }
+        let px = [
+            self.p[0][0] * x[0] + self.p[0][1] * x[1],
+            self.p[1][0] * x[0] + self.p[1][1] * x[1],
+        ];
+        let denom = self.lambda + x[0] * px[0] + x[1] * px[1];
+        if denom <= 1e-12 {
+            return;
+        }
+        let k = [px[0] / denom, px[1] / denom];
+        let err = y - self.predict(x);
+        self.theta[0] += k[0] * err;
+        self.theta[1] += k[1] * err;
+        // P <- (P - k (x^T P)) / lambda; x^T P == px^T by symmetry.
+        for i in 0..2 {
+            for j in 0..2 {
+                self.p[i][j] = (self.p[i][j] - k[i] * px[j]) / self.lambda;
+            }
+        }
+        // Anti-wind-up: with lambda < 1 and a barely-exciting regressor
+        // (a steady operating point feeds near-constant x), P inflates by
+        // ~1/lambda per update along the unexcited direction — classic
+        // RLS covariance wind-up that first makes theta noise-hypersensitive
+        // and eventually overflows P to inf (NaN-poisoning every later
+        // update).  Rescale whenever the trace passes the cap; the
+        // direction of P is preserved, only its magnitude is bounded.
+        let tr = self.p[0][0] + self.p[1][1];
+        if tr > P_TRACE_CAP {
+            let s = P_TRACE_CAP / tr;
+            for row in &mut self.p {
+                for v in row {
+                    *v *= s;
+                }
+            }
+        }
+        self.n += 1;
+    }
+}
+
+/// Upper bound on trace(P): large enough never to bind during normal
+/// convergence (P0 starts at ~1e2-1e6 per axis and shrinks along excited
+/// directions), small enough that unbounded forgetting-driven growth is
+/// cut off long before f64 overflow.
+const P_TRACE_CAP: f64 = 1e7;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,5 +362,71 @@ mod tests {
     #[test]
     fn kact_fit_needs_enough_samples() {
         assert!(fit_kact(&[(1.0, 0.5, 1.0); 4]).is_none());
+    }
+
+    #[test]
+    fn rls_recovers_a_line_from_a_stream() {
+        // y = 1.3 x + 0.7 with mild noise; the recursive fit must land on
+        // the truth and its predictions must interpolate.
+        let mut rls = Rls2::new([1.0, 0.0], 1e3, 1.0);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for i in 0..200 {
+            let x = 5.0 + (i % 40) as f64;
+            let y = 1.3 * x + 0.7 + 0.02 * rng.normal();
+            rls.update([x, 1.0], y);
+        }
+        assert_eq!(rls.n(), 200);
+        let [a, b] = rls.theta();
+        assert!((a - 1.3).abs() < 0.02, "a = {a}");
+        assert!((b - 0.7).abs() < 0.4, "b = {b}");
+        assert!((rls.predict([20.0, 1.0]) - 26.7).abs() < 0.2);
+    }
+
+    #[test]
+    fn rls_agrees_with_batch_lsq() {
+        // With lambda = 1 and a weak prior, the stream solution must match
+        // the batch normal-equations solution on the same samples.
+        let xs = [2.0, 4.0, 7.0, 11.0, 16.0, 22.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.8 * x + 2.0).collect();
+        let mut rls = Rls2::new([0.0, 0.0], 1e6, 1.0);
+        for (&x, &y) in xs.iter().zip(&ys) {
+            rls.update([x, 1.0], y);
+        }
+        let design: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x, 1.0]).collect();
+        let c = linear_lsq(&design, &ys).unwrap();
+        assert!((rls.theta()[0] - c[0]).abs() < 1e-3, "{:?} vs {c:?}", rls.theta());
+        assert!((rls.theta()[1] - c[1]).abs() < 1e-2);
+    }
+
+    #[test]
+    fn rls_survives_a_long_steady_stream_without_wind_up() {
+        // Forgetting (lambda < 1) + a constant regressor is the classic
+        // covariance wind-up case: without the trace cap, P overflows
+        // after ~1e5 updates and the fit NaN-poisons itself.  A long
+        // steady stream must stay finite and keep predicting the stream.
+        let mut rls = Rls2::new([1.0, 0.0], 100.0, 0.995);
+        let x = [20.0, 1.0];
+        for _ in 0..300_000 {
+            rls.update(x, 26.0);
+        }
+        let [a, b] = rls.theta();
+        assert!(a.is_finite() && b.is_finite(), "theta wound up: {a}, {b}");
+        assert!((rls.predict(x) - 26.0).abs() < 1e-6);
+        // ...and it still adapts afterwards (P did not collapse to zero)
+        for _ in 0..500 {
+            rls.update(x, 30.0);
+        }
+        assert!((rls.predict(x) - 30.0).abs() < 0.5, "{}", rls.predict(x));
+    }
+
+    #[test]
+    fn rls_ignores_poison() {
+        let mut rls = Rls2::new([1.0, 0.0], 100.0, 0.99);
+        rls.update([f64::NAN, 1.0], 3.0);
+        rls.update([2.0, 1.0], f64::INFINITY);
+        assert_eq!(rls.n(), 0);
+        assert_eq!(rls.theta(), [1.0, 0.0]);
+        rls.update([2.0, 1.0], 3.0);
+        assert_eq!(rls.n(), 1);
     }
 }

@@ -3,8 +3,10 @@
 //! structurally valid, SLO-meeting, deterministic plans.
 
 use igniter::gpu::{GpuKind, Model, ALL_MODELS};
-use igniter::perfmodel;
-use igniter::provisioner::{ffd, gpulets, igniter as ig, OnlinePlanner, ProfiledSystem, WorkloadSpec};
+use igniter::perfmodel::{self, AnalyticModel};
+use igniter::provisioner::{
+    ffd, gpulets, igniter as ig, OnlinePlanner, ProfiledSystem, WorkloadSpec,
+};
 use igniter::util::quick::{forall, Shrink};
 use igniter::util::rng::Rng;
 use igniter::util::lazy::Lazy;
@@ -189,7 +191,16 @@ fn alloc_gpus_supersets_never_shrink() {
             batch: d0.batch,
         }];
         let d1 = derived[1].unwrap();
-        if let Some(alloc) = ig::alloc_gpus(&SYS, &specs, &resident, 1, d1.r_lower, d1.batch) {
+        let alloc = ig::alloc_gpus(
+            &AnalyticModel::ALL,
+            &SYS,
+            &specs,
+            &resident,
+            1,
+            d1.r_lower,
+            d1.batch,
+        );
+        if let Some(alloc) = alloc {
             let r0 = alloc.iter().find(|a| a.workload == 0).unwrap().resources;
             if r0 < d0.r_lower - 1e-9 {
                 return Err(format!("resident shrunk from {} to {}", d0.r_lower, r0));

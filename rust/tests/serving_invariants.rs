@@ -219,7 +219,8 @@ fn over_capacity_workload_replicates_and_meets_slo() {
         "rate {rate:.0} should need replicas: {plan:?}"
     );
     plan.validate(1, SYS.hw.r_max).unwrap();
-    ig::validate_replica_shares(&SYS, &specs, &plan).unwrap();
+    ig::validate_replica_shares(&igniter::perfmodel::AnalyticModel::ALL, &SYS, &specs, &plan)
+        .unwrap();
 
     let mut sim = ClusterSim::new(
         GpuKind::V100,
@@ -361,7 +362,8 @@ fn migration_conserves_requests_under_spiky_replans() {
     // with both the retired and the fresh replica having served traffic
     assert!(
         stats.iter().any(|st| {
-            st.replica_served.len() >= 2 && st.replica_served.iter().filter(|&&s| s > 0).count() >= 2
+            st.replica_served.len() >= 2
+                && st.replica_served.iter().filter(|&&s| s > 0).count() >= 2
         }),
         "no workload shows a served split across the shadow switch: {:?}",
         stats.iter().map(|s| s.replica_served.clone()).collect::<Vec<_>>()

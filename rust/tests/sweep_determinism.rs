@@ -19,6 +19,7 @@ fn tiny_space() -> ScenarioSpace {
         epoch_ms: 700.0,
         warmup_ms: 200.0,
         fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
+        mismatch: false,
     }
 }
 
@@ -29,7 +30,16 @@ fn cfg(master_seed: u64, parallel: usize) -> SweepConfig {
         parallel,
         master_seed,
         space: tiny_space(),
+        calibrate: false,
     }
+}
+
+/// The mismatch + calibration lane under the same determinism contract.
+fn mismatch_cfg(master_seed: u64, parallel: usize) -> SweepConfig {
+    let mut c = cfg(master_seed, parallel);
+    c.space.mismatch = true;
+    c.calibrate = true;
+    c
 }
 
 #[test]
@@ -67,6 +77,25 @@ fn parallel_width_never_changes_results() {
             reference,
             "parallel={parallel} diverged"
         );
+    }
+}
+
+#[test]
+fn mismatch_and_calibration_lane_is_deterministic_too() {
+    // The model-mismatch lane (perturbed believed coefficients) with
+    // online calibration carries extra state (RLS fits, perturbation
+    // draws) — none of it may break the parallel == sequential contract,
+    // and the lane must actually differ from the plain sweep.
+    let seq = run_sweep(&mismatch_cfg(7, 1));
+    let par = run_sweep(&mismatch_cfg(7, 8));
+    assert_eq!(seq.fingerprint(), par.fingerprint(), "mismatch lane diverged");
+    assert_ne!(
+        seq.fingerprint(),
+        run_sweep(&cfg(7, 1)).fingerprint(),
+        "mismatch lane produced the plain sweep"
+    );
+    for r in &seq.results {
+        assert_eq!(r.dropped, 0, "{r:?}");
     }
 }
 

@@ -9,6 +9,11 @@ Compares three headline metrics of ``igniter sweep`` output:
   candidate costs more than ``(1 + tol) x`` baseline.
 * ``aggregate.mean_slo_attainment`` — higher is better; fail if below
   ``(1 - tol) x`` baseline.
+* ``aggregate.mean_pred_error`` / ``aggregate.p95_pred_error`` — the
+  performance model's serving-observed prediction error; lower is
+  better, gated like cost (and subject to the same provisional-baseline
+  5x widening).  A baseline that predates these metrics simply skips
+  them (printed as such) instead of failing the shape check.
 * ``wall.served_per_wall_s``        — sim throughput, higher is better;
   fail if below ``(1 - wall_tol) x`` baseline.  Wall-clock is
   machine-noisy (hosted CI runners vary well beyond 20%), so it gets
@@ -48,6 +53,19 @@ def metric(doc: dict, path: str) -> float:
     return float(cur)
 
 
+def metric_opt(doc: dict, path: str):
+    """Like ``metric`` but returns None when the path is absent — for
+    metrics added after a baseline was blessed."""
+    cur = doc
+    for seg in path.split("."):
+        if not isinstance(cur, dict) or seg not in cur:
+            return None
+        cur = cur[seg]
+    if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+        return None
+    return float(cur)
+
+
 def main() -> None:
     if len(sys.argv) != 3:
         die(f"usage: {sys.argv[0]} BENCH_baseline.json BENCH_sweep.json")
@@ -73,14 +91,29 @@ def main() -> None:
         die("sweep served no requests")
     if not isinstance(cand.get("scenarios"), list) or not cand["scenarios"]:
         die("candidate report has no per-scenario results")
+    # Prediction-error telemetry must actually flow: a candidate that
+    # emits the metric fields but recorded zero samples means the exec
+    # observation path broke — and "no samples" would otherwise read as
+    # zero error to the lower-is-better gate below.
+    samples = metric_opt(cand, "aggregate.pred_err_samples")
+    if samples is not None and samples <= 0:
+        die("sweep recorded no prediction-error samples (telemetry path broken)")
 
     # -- comparability: the sweep shape must match the baseline's --------
     # (a different scenario count / seed count / master seed / space draws
     # from a different distribution, so ratio-gating the means would be
     # meaningless; parallel width is deliberately not part of the config
     # block — it never changes the deterministic results)
-    base_cfg = base.get("config", {})
-    cand_cfg = cand.get("config", {})
+    base_cfg = dict(base.get("config", {}))
+    cand_cfg = dict(cand.get("config", {}))
+    # Config keys added after a baseline was blessed default to the
+    # off/false state they implicitly had then — a PR-4-era baseline must
+    # not fail the shape check merely because the candidate now reports
+    # "mismatch"/"calibrate" (both lanes default off; a baseline blessed
+    # WITH a lane on still mismatches a lane-off candidate, as it should).
+    for cfg in (base_cfg, cand_cfg):
+        cfg.setdefault("mismatch", False)
+        cfg.setdefault("calibrate", False)
     mismatched = sorted(
         k for k in set(base_cfg) | set(cand_cfg) if base_cfg.get(k) != cand_cfg.get(k)
     )
@@ -115,6 +148,14 @@ def main() -> None:
     print(f"bench gate: tolerance {det_tol:.0%}" + (" (provisional baseline)" if provisional else ""))
     gate("cost_per_hour", "aggregate.mean_cost_per_hour", False, det_tol)
     gate("slo_attainment", "aggregate.mean_slo_attainment", True, det_tol)
+    for name, path in [
+        ("pred_error_mean", "aggregate.mean_pred_error"),
+        ("pred_error_p95", "aggregate.p95_pred_error"),
+    ]:
+        if metric_opt(base, path) is None:
+            print(f"  {name:<22} skipped (baseline lacks '{path}' — re-bless to gate it)")
+        else:
+            gate(name, path, False, det_tol)  # prediction error: lower is better
     if provisional:
         print("  sim_throughput         skipped (baseline throughput is not a measurement)")
     else:
