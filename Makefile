@@ -18,8 +18,9 @@ PYTHON ?= python
 
 # `test` already runs every integration target (serving invariants,
 # determinism, sweep determinism, provisioner properties); `bench-build`
-# compiles the closed-loop + sweep benches; `sweep-quick` runs the same
-# sweep + regression gate as the CI bench-sweep job.
+# compiles every bench target (`cargo bench --no-run`), including the
+# sim-core throughput bench in benches/simulator.rs; `sweep-quick` runs
+# the same sweep + regression gate as the CI bench-sweep job.
 verify: build test bench-build fmt-check clippy pytest sweep-quick
 	@echo "verify: OK"
 
@@ -53,11 +54,14 @@ sweep-quick: build
 		--out BENCH_sweep.json
 	$(PYTHON) scripts/check_bench_regression.py BENCH_baseline.json BENCH_sweep.json
 
-# Regenerate the dynamic-summary golden from this machine's run and
-# overwrite the checked-in file (commit the result; see
-# rust/tests/golden/README.md for when re-blessing is legitimate).
+# Regenerate the dynamic-summary golden and the pinned sweep-fingerprint
+# digest from this machine's run, overwriting the checked-in files
+# (commit the result; see rust/tests/golden/README.md for when
+# re-blessing is legitimate).
 bless-golden:
 	IGNITER_BLESS=1 $(CARGO) test -q golden_summary_regression
+	rm -f rust/tests/golden/sweep_fingerprint.txt
+	$(CARGO) test -q --test sweep_determinism quick_sweep_fingerprint_pinned
 
 # Promote a fresh sweep run to the committed bench baseline (drops the
 # provisional marker by replacing the file with measured numbers).

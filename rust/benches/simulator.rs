@@ -3,9 +3,13 @@
 //! queue throughput.  These bound how long the Fig.-14-style serving
 //! experiments take.
 
+use igniter::coordinator::{ClusterSim, Policy, Reprovisioner};
 use igniter::gpu::{GpuDevice, GpuKind, Model};
+use igniter::provisioner::{self, ProfiledSystem};
 use igniter::sim::EventQueue;
-use igniter::util::bench::bench;
+use igniter::util::bench::{bench, bench_once};
+use igniter::workload::trace::{RateTrace, TraceKind};
+use igniter::workload::{app_workloads, ArrivalKind};
 
 fn main() {
     println!("== simulator benches ==");
@@ -39,4 +43,81 @@ fn main() {
         }
         acc
     });
+
+    // Interleaved schedule/pop with a spread of horizons: near events hit
+    // the ring, monitor ticks land hundreds of buckets out, and the
+    // horizon event routes through the overflow heap — the access pattern
+    // the calendar queue is shaped around, unlike the drain-only bench
+    // above.
+    bench("event_queue calendar mix x4000", 10, 200, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        q.schedule_at(60_000.0, u64::MAX); // horizon, via overflow
+        for i in 0..64u64 {
+            q.schedule_at((i % 13) as f64, i);
+        }
+        let mut acc = 0u64;
+        let mut n = 0u32;
+        while let Some((now, e)) = q.pop() {
+            acc = acc.wrapping_add(e);
+            n += 1;
+            if n > 4_000 || e == u64::MAX {
+                break;
+            }
+            // completion-style short hop + occasional monitor-style tick
+            q.schedule_at(now + 2.5 + (e % 7) as f64, e + 1);
+            if e % 16 == 0 {
+                q.schedule_at(now + 500.0, e + 2);
+            }
+        }
+        acc
+    });
+
+    // End-to-end sim-core throughput: the whole closed loop (batched
+    // arrivals -> slab queues -> SoA replicas -> calendar queue ->
+    // reprovisioner) on a 30 s diurnal trace, reported as simulated
+    // served requests per wall-second — the same metric
+    // `BENCH_sweep.json`'s `wall.sim_throughput_rps` tracks and
+    // `scripts/check_bench_regression.py` gates.
+    let kind = GpuKind::V100;
+    let (hw, wls) = igniter::profiler::profile_all(kind, 42);
+    let sys = ProfiledSystem {
+        hw,
+        coeffs: igniter::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    };
+    let specs = app_workloads();
+    let plan = provisioner::provision(&sys, &specs);
+    let epochs = 12;
+    let epoch_ms = 2_500.0;
+    let trace = RateTrace::generate(
+        TraceKind::Diurnal {
+            period_epochs: epochs,
+            floor: 0.35,
+        },
+        epochs,
+        specs.len(),
+        42,
+    );
+    let (served, ns) = bench_once("sim core closed loop 12wl x 30s diurnal", || {
+        let mut sim = ClusterSim::new(
+            kind,
+            &plan,
+            &specs,
+            Policy::Static,
+            ArrivalKind::Constant,
+            42,
+            &[],
+        );
+        sim.set_serving_policy(Box::new(Reprovisioner::new(
+            sys.clone(),
+            specs.clone(),
+            plan.clone(),
+        )));
+        sim.set_rate_trace(&trace, epoch_ms);
+        sim.set_horizon(epochs as f64 * epoch_ms, 1_000.0);
+        sim.run().iter().map(|s| s.served).sum::<u64>()
+    });
+    println!(
+        "  -> sim_throughput_rps: {:.0} ({served} served requests)",
+        served as f64 / (ns / 1e9)
+    );
 }

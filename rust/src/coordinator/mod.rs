@@ -18,6 +18,7 @@ pub mod batcher;
 pub mod estimator;
 pub mod monitor;
 pub mod realrun;
+pub mod replicas;
 pub mod router;
 pub mod server;
 
@@ -27,8 +28,8 @@ pub use monitor::{
     GsliceTuner, PolicyCtx, Reprovisioner, ServingPolicy, ShadowFailover, StaticPolicy,
     DEFAULT_SAFETY, EXEC_OBS_SPAN_MS, MONITOR_PERIOD_MS, SHADOW_EXTRA,
 };
+pub use replicas::{ReplicaPhase, ReplicaSet, WINDOW_SPAN_MS};
 pub use router::{RouteStrategy, Router};
 pub use server::{
-    dropped_requests, ClusterSim, Policy, ReplicaPhase, ReplicaState, TimelinePoint,
-    WorkloadStats, MIGRATION_WARMUP_MS,
+    dropped_requests, ClusterSim, Policy, TimelinePoint, WorkloadStats, MIGRATION_WARMUP_MS,
 };

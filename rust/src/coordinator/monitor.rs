@@ -11,9 +11,13 @@
 //! also return `PlanDelta`s from `reprovision`; the event loop realizes
 //! them (shadow warm-up, drain-before-retire) without knowing which
 //! policy asked.  `server.rs` knows nothing about any specific policy.
+//!
+//! Replica state arrives as the struct-of-arrays [`ReplicaSet`]: a
+//! policy's per-tick scan (phase filter + one window read) walks two
+//! dense arrays instead of striding over whole replica structs.
 
 use super::estimator::{Drift, RateEstimator};
-use super::server::{ReplicaPhase, ReplicaState};
+use super::replicas::{ReplicaPhase, ReplicaSet};
 use crate::gpu::GpuDevice;
 use crate::perfmodel::{rel_error, CalibratedModel};
 use crate::provisioner::{diff_plans, OnlinePlanner, Plan, PlanDelta, ProfiledSystem, WorkloadSpec};
@@ -31,7 +35,7 @@ pub const MIN_P99_SAMPLES: usize = 20;
 /// Mutable view a policy gets on monitor/tune ticks.
 pub struct PolicyCtx<'a> {
     pub devices: &'a mut [GpuDevice],
-    pub replicas: &'a mut [ReplicaState],
+    pub replicas: &'a mut ReplicaSet,
 }
 
 /// An online serving policy applied while the event loop runs.
@@ -82,33 +86,22 @@ pub struct ShadowFailover;
 
 impl ShadowFailover {
     fn activate(ctx: &mut PolicyCtx, p: usize) {
-        let gpu = ctx.replicas[p].gpu;
-        let tag = ctx.replicas[p].tag;
+        let reps = &mut *ctx.replicas;
+        let gpu = reps.gpu[p];
+        let tag = reps.tag[p];
         let free = ctx.devices[gpu].free_resources();
         let extra = SHADOW_EXTRA.min(free);
-        let new_r = ctx.replicas[p].resources + extra;
+        let new_r = reps.resources[p] + extra;
         ctx.devices[gpu].kill(tag);
         // shadow takes over under the same tag with the grown partition
-        ctx.devices[gpu].launch_unchecked(
-            tag,
-            ctx.replicas[p].spec.model,
-            new_r,
-            ctx.replicas[p].batch,
-        );
-        let rep = &mut ctx.replicas[p];
-        rep.resources = new_r;
-        rep.shadow_active = true;
-        rep.switches += 1;
+        ctx.devices[gpu].launch_unchecked(tag, reps.spec[p].model, new_r, reps.batch[p]);
+        reps.resources[p] = new_r;
+        reps.shadow_active[p] = true;
+        reps.switches[p] += 1;
         // restart the latency records: the new process starts clean, so
         // final stats (P99 / achieved rate) describe the post-switch
         // process — the pre-switch violations are what the switch fixed
-        rep.window.clear();
-        rep.exec_window.clear();
-        rep.hist.clear();
-        rep.recorded = 0;
-        rep.lat_sum = 0.0;
-        rep.queue_sum = 0.0;
-        rep.exec_sum = 0.0;
+        reps.clear_records(p);
     }
 }
 
@@ -119,16 +112,14 @@ impl ServingPolicy for ShadowFailover {
 
     fn on_monitor(&mut self, now: f64, ctx: &mut PolicyCtx) {
         for p in 0..ctx.replicas.len() {
-            if ctx.replicas[p].shadow_active || ctx.replicas[p].phase != ReplicaPhase::Active {
+            if ctx.replicas.shadow_active[p] || ctx.replicas.phase[p] != ReplicaPhase::Active {
                 continue; // one switch per replica; never touch a
                           // warming/draining/retired migration replica
             }
-            let rep = &ctx.replicas[p];
-            if let Some(p99) = rep
-                .window
-                .percentile_since(now - 1_000.0, 0.99, MIN_P99_SAMPLES)
+            if let Some(p99) =
+                ctx.replicas.window[p].percentile_since(now - 1_000.0, 0.99, MIN_P99_SAMPLES)
             {
-                if p99 > rep.spec.slo_ms {
+                if p99 > ctx.replicas.spec[p].slo_ms {
                     Self::activate(ctx, p);
                 }
             }
@@ -158,26 +149,25 @@ impl ServingPolicy for GsliceTuner {
 
     fn on_tune(&mut self, now: f64, ctx: &mut PolicyCtx) {
         for p in 0..ctx.replicas.len() {
-            let rep = &ctx.replicas[p];
-            if rep.phase != ReplicaPhase::Active {
+            if ctx.replicas.phase[p] != ReplicaPhase::Active {
                 continue;
             }
-            let Some(avg) = rep.window.mean_since(now - 10_000.0, 10) else {
+            let Some(avg) = ctx.replicas.window[p].mean_since(now - 10_000.0, 10) else {
                 continue;
             };
-            let half = rep.spec.slo_ms / 2.0;
-            let gpu = rep.gpu;
-            let tag = rep.tag;
+            let half = ctx.replicas.spec[p].slo_ms / 2.0;
+            let gpu = ctx.replicas.gpu[p];
+            let tag = ctx.replicas.tag[p];
             let step = ctx.devices[gpu].spec.r_unit * 2.0;
             if avg > half {
-                let r = rep.resources + step;
+                let r = ctx.replicas.resources[p] + step;
                 // interference-unaware: force the grow regardless of room
                 ctx.devices[gpu].force_resources(tag, r);
-                ctx.replicas[p].resources = r;
+                ctx.replicas.resources[p] = r;
             } else if avg < half * (1.0 - crate::provisioner::gslice::TUNING_THRESHOLD) {
-                let r = (rep.resources - step).max(ctx.devices[gpu].spec.r_unit);
+                let r = (ctx.replicas.resources[p] - step).max(ctx.devices[gpu].spec.r_unit);
                 ctx.devices[gpu].force_resources(tag, r);
-                ctx.replicas[p].resources = r;
+                ctx.replicas.resources[p] = r;
             }
         }
     }
@@ -221,6 +211,12 @@ pub struct Reprovisioner {
     /// rel_error(model-predicted t_inf, observed exec) per (tick,
     /// workload) with observations — the prediction-error telemetry.
     pred_errors: Vec<f64>,
+    /// Scratch reused by every tick's predicted-violation pass (avoids a
+    /// fresh `vec![false; n]` per monitor period).
+    violation_scratch: Vec<bool>,
+    /// Scratch holding the pre-respec plan for `diff_plans` — absorbed
+    /// via `Plan::copy_from` each trigger instead of a fresh deep clone.
+    plan_scratch: Plan,
     /// Re-plan for `observed x safety` so the fresh allocation keeps
     /// headroom while the estimator chases a rising rate.
     pub safety: f64,
@@ -236,6 +232,7 @@ impl Reprovisioner {
     pub fn new(sys: ProfiledSystem, specs: Vec<WorkloadSpec>, plan: Plan) -> Reprovisioner {
         let n = specs.len();
         let estimators = specs.iter().map(|s| RateEstimator::new(s.rate_rps)).collect();
+        let plan_scratch = plan.clone();
         Reprovisioner {
             planner: OnlinePlanner::from_plan(sys, specs, plan),
             live_ids: (0..n).collect(),
@@ -246,6 +243,8 @@ impl Reprovisioner {
             migrations_planned: 0,
             calibrate: false,
             pred_errors: Vec::new(),
+            violation_scratch: Vec::new(),
+            plan_scratch,
             safety: DEFAULT_SAFETY,
             // three monitor ticks: short enough to track a steep diurnal
             // slope step-by-step, long enough to stop per-tick churn
@@ -302,9 +301,10 @@ impl Reprovisioner {
     }
 
     fn migration_in_flight(ctx: &PolicyCtx, workload: Option<usize>) -> bool {
-        ctx.replicas.iter().any(|r| {
-            workload.map_or(true, |w| r.workload == w)
-                && matches!(r.phase, ReplicaPhase::Warming | ReplicaPhase::Draining)
+        let reps = &*ctx.replicas;
+        (0..reps.len()).any(|p| {
+            workload.map_or(true, |w| reps.workload[p] == w)
+                && matches!(reps.phase[p], ReplicaPhase::Warming | ReplicaPhase::Draining)
         })
     }
 
@@ -312,13 +312,14 @@ impl Reprovisioner {
     /// its Active replicas' exec windows (dispatch -> completion + load,
     /// queueing excluded — directly comparable to predicted t_inf).
     fn observed_exec_ms(ctx: &PolicyCtx, w: usize, now: f64) -> Option<f64> {
+        let reps = &*ctx.replicas;
         let mut sum = 0.0;
         let mut n = 0u32;
-        for r in ctx.replicas.iter() {
-            if r.workload != w || r.phase != ReplicaPhase::Active {
+        for p in 0..reps.len() {
+            if reps.workload[p] != w || reps.phase[p] != ReplicaPhase::Active {
                 continue;
             }
-            if let Some(m) = r.exec_window.mean_since(now - EXEC_OBS_SPAN_MS, 1) {
+            if let Some(m) = reps.exec_window[p].mean_since(now - EXEC_OBS_SPAN_MS, 1) {
                 sum += m;
                 n += 1;
             }
@@ -347,7 +348,9 @@ impl ServingPolicy for Reprovisioner {
         //    update the fit (one-tick lag, well inside the re-plan
         //    cooldown) so each workload costs a single `predict_full` —
         //    which builds a device view per call — instead of two.
-        let mut predicted_violation = vec![false; self.estimators.len()];
+        let mut predicted_violation = std::mem::take(&mut self.violation_scratch);
+        predicted_violation.clear();
+        predicted_violation.resize(self.estimators.len(), false);
         for w in 0..self.estimators.len() {
             let observed = Self::observed_exec_ms(ctx, w, now);
             if observed.is_none() && !self.calibrate {
@@ -440,7 +443,7 @@ impl ServingPolicy for Reprovisioner {
                 observed.max(1.0),
             ];
             let mut adopted = None;
-            let before = self.planner.plan().clone();
+            self.plan_scratch.copy_from(self.planner.plan());
             for &target in &candidates {
                 // a predicted violation re-plans even at an unchanged (or
                 // gently declining) design point: the goal is a
@@ -466,7 +469,8 @@ impl ServingPolicy for Reprovisioner {
             if let Some((new_id, target)) = adopted {
                 let mut new_ids = self.live_ids.clone();
                 new_ids[w] = new_id;
-                let moved = diff_plans(&before, self.planner.plan(), &self.live_ids, &new_ids);
+                let moved =
+                    diff_plans(&self.plan_scratch, self.planner.plan(), &self.live_ids, &new_ids);
                 self.live_ids = new_ids;
                 self.estimators[w].replanned(target);
                 // count only plan-*changing* re-plans: a respec that
@@ -488,10 +492,10 @@ impl ServingPolicy for Reprovisioner {
             && !Self::migration_in_flight(ctx, None)
         {
             self.last_rebalance_ms = now;
-            let before = self.planner.plan().clone();
+            self.plan_scratch.copy_from(self.planner.plan());
             if self.planner.rebalance().is_some() {
                 let moved = diff_plans(
-                    &before,
+                    &self.plan_scratch,
                     self.planner.plan(),
                     &self.live_ids,
                     &self.live_ids,
@@ -507,6 +511,8 @@ impl ServingPolicy for Reprovisioner {
                 deltas.extend(moved);
             }
         }
+        // park the violation flags for next tick's reuse
+        self.violation_scratch = predicted_violation;
         deltas
     }
 
@@ -521,6 +527,7 @@ mod tests {
     use crate::gpu::GpuKind;
     use crate::provisioner::{self, PlanDelta};
     use crate::workload::table1_workloads;
+    use std::sync::Arc;
 
     fn sys() -> ProfiledSystem {
         let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
@@ -540,7 +547,7 @@ mod tests {
         t_next: &mut [f64],
     ) -> Vec<PlanDelta> {
         let mut devices: Vec<GpuDevice> = Vec::new();
-        let mut replicas: Vec<ReplicaState> = Vec::new();
+        let mut replicas = ReplicaSet::new();
         let mut out = Vec::new();
         for tick in ticks {
             let now = tick as f64 * MONITOR_PERIOD_MS;
@@ -625,9 +632,6 @@ mod tests {
         // from the observed exec stream, trip the predicted-violation
         // trigger, and grow W1's allocation until the *corrected* model
         // meets the half-SLO again — all without any rate drift.
-        use crate::util::stats::{LatencyHistogram, SlidingWindow};
-        use std::collections::VecDeque;
-
         let s = sys();
         let specs = table1_workloads();
         let plan = provisioner::provision(&s, &specs);
@@ -638,28 +642,16 @@ mod tests {
         assert!(rp.calibrating());
 
         let mut devices: Vec<GpuDevice> = Vec::new();
-        let mut replicas = vec![ReplicaState {
-            spec: specs[0].clone(),
-            workload: 0,
-            gpu: gpu0,
-            tag: 0,
-            resources: alloc0.resources,
-            batch: alloc0.batch,
-            queue: VecDeque::new(),
-            busy: false,
-            exec_estimate: specs[0].slo_ms / 4.0,
-            window: SlidingWindow::new(10_000.0),
-            exec_window: SlidingWindow::new(10_000.0),
-            hist: LatencyHistogram::new(),
-            served: 0,
-            recorded: 0,
-            lat_sum: 0.0,
-            queue_sum: 0.0,
-            exec_sum: 0.0,
-            shadow_active: false,
-            switches: 0,
-            phase: ReplicaPhase::Active,
-        }];
+        let mut replicas = ReplicaSet::new();
+        replicas.launch(
+            Arc::new(specs[0].clone()),
+            0,
+            gpu0,
+            0,
+            alloc0.resources,
+            alloc0.batch,
+            ReplicaPhase::Active,
+        );
         let rates = planned_rates(&specs);
         let mut clocks = vec![0.0; specs.len()];
         for tick in 1..=24u32 {
@@ -667,7 +659,7 @@ mod tests {
             // ground truth: observed exec = 1.4x the analytic prediction
             // of the *current* allocation
             let raw_now = rp.planner.predict_full(rp.live_ids[0]).unwrap().0;
-            replicas[0].exec_window.push(now, raw_now.t_inf * 1.4);
+            replicas.exec_window[0].push(now, raw_now.t_inf * 1.4);
             for (w, &rate) in rates.iter().enumerate() {
                 let gap = 1000.0 / rate;
                 while clocks[w] < now {
@@ -713,9 +705,6 @@ mod tests {
         // Same mismatch world, calibration off: the error telemetry still
         // records, but the model absorbs nothing and no predicted-
         // violation re-plan fires (rate steady, capacity believed fine).
-        use crate::util::stats::{LatencyHistogram, SlidingWindow};
-        use std::collections::VecDeque;
-
         let s = sys();
         let specs = table1_workloads();
         let plan = provisioner::provision(&s, &specs);
@@ -724,34 +713,22 @@ mod tests {
         rp.rebalance_period_ms = 0.0;
         assert!(!rp.calibrating());
         let mut devices: Vec<GpuDevice> = Vec::new();
-        let mut replicas = vec![ReplicaState {
-            spec: specs[0].clone(),
-            workload: 0,
-            gpu: gpu0,
-            tag: 0,
-            resources: alloc0.resources,
-            batch: alloc0.batch,
-            queue: VecDeque::new(),
-            busy: false,
-            exec_estimate: specs[0].slo_ms / 4.0,
-            window: SlidingWindow::new(10_000.0),
-            exec_window: SlidingWindow::new(10_000.0),
-            hist: LatencyHistogram::new(),
-            served: 0,
-            recorded: 0,
-            lat_sum: 0.0,
-            queue_sum: 0.0,
-            exec_sum: 0.0,
-            shadow_active: false,
-            switches: 0,
-            phase: ReplicaPhase::Active,
-        }];
+        let mut replicas = ReplicaSet::new();
+        replicas.launch(
+            Arc::new(specs[0].clone()),
+            0,
+            gpu0,
+            0,
+            alloc0.resources,
+            alloc0.batch,
+            ReplicaPhase::Active,
+        );
         let rates = planned_rates(&specs);
         let mut clocks = vec![0.0; specs.len()];
         for tick in 1..=12u32 {
             let now = tick as f64 * MONITOR_PERIOD_MS;
             let raw_now = rp.planner.predict_full(rp.live_ids[0]).unwrap().0;
-            replicas[0].exec_window.push(now, raw_now.t_inf * 1.4);
+            replicas.exec_window[0].push(now, raw_now.t_inf * 1.4);
             for (w, &rate) in rates.iter().enumerate() {
                 let gap = 1000.0 / rate;
                 while clocks[w] < now {

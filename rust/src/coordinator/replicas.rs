@@ -1,0 +1,187 @@
+//! Struct-of-arrays replica state.  The monitor tick and the timeline
+//! sampler scan *every* replica once per period, but each scan touches
+//! only two or three fields — with an array-of-structs layout every
+//! touch dragged a whole ~300-byte `ReplicaState` cache line in.  Here
+//! each field lives in its own dense `Vec`, so a phase scan walks one
+//! byte-per-replica array and the hot dispatch path (`busy`, `batch`,
+//! `exec_estimate`, `queue`) stays within a few contiguous lines.
+//!
+//! Request timestamps are NOT stored here: queues are [`ReqQueue`]
+//! handles into the sim-wide [`crate::sim::slab::RequestSlab`] arena.
+//! Workload specs are shared via `Arc` — launching a migration replica
+//! clones a pointer, not a `String`.
+
+use crate::provisioner::WorkloadSpec;
+use crate::sim::slab::ReqQueue;
+use crate::util::stats::{LatencyHistogram, SlidingWindow};
+use std::sync::Arc;
+
+/// Latency-window span (ms): long enough for the slowest consumer (the
+/// GSLICE tuner reads 10 s), bounded so monitor scans never grow with the
+/// total served count.
+pub const WINDOW_SPAN_MS: f64 = 10_000.0;
+
+/// Lifecycle of a serving replica under shadow-instance migration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaPhase {
+    /// Receiving and serving traffic.
+    Active,
+    /// Freshly launched migration target: loaded on the device but not
+    /// yet routable (model load / context warm-up in progress).
+    Warming,
+    /// Replaced by a migration: receives no new arrivals, finishes its
+    /// queued + in-flight requests, then retires.
+    Draining,
+    /// Drained and killed; kept for lifetime stats only.
+    Retired,
+}
+
+/// All replicas' serving state, one parallel `Vec` per field (index =
+/// global replica id).  Fields are public so `monitor::ServingPolicy`
+/// implementations can act on them; disjoint-field mutable borrows
+/// through one `&mut ReplicaSet` are legal, which the serving loop
+/// leans on.
+#[derive(Debug, Default)]
+pub struct ReplicaSet {
+    pub spec: Vec<Arc<WorkloadSpec>>,
+    /// Workload id (index into the submitted specs).
+    pub workload: Vec<usize>,
+    pub gpu: Vec<usize>,
+    /// Device process tag (globally unique replica index).
+    pub tag: Vec<u64>,
+    pub resources: Vec<f64>,
+    pub batch: Vec<u32>,
+    /// Waiting + in-flight request arrival times (popped on completion);
+    /// handle into the sim's shared `RequestSlab`.
+    pub queue: Vec<ReqQueue>,
+    pub busy: Vec<bool>,
+    /// rolling estimate of batch execution latency (ms) for the batcher
+    pub exec_estimate: Vec<f64>,
+    /// time-bounded latency records (completion time, latency)
+    pub window: Vec<SlidingWindow>,
+    /// time-bounded *execution-span* records (completion time, exec ms):
+    /// dispatch -> completion + load, one entry per batch.  Queueing is
+    /// excluded, so these are directly comparable to the performance
+    /// model's t_inf — the observation stream the calibration layer
+    /// (`monitor::Reprovisioner`) fits its residual corrections from.
+    pub exec_window: Vec<SlidingWindow>,
+    pub hist: Vec<LatencyHistogram>,
+    pub served: Vec<u64>,
+    /// post-warmup latency records and their component sums (ms)
+    pub recorded: Vec<u64>,
+    pub lat_sum: Vec<f64>,
+    pub queue_sum: Vec<f64>,
+    pub exec_sum: Vec<f64>,
+    /// shadow process state (iGniter policy)
+    pub shadow_active: Vec<bool>,
+    pub switches: Vec<u32>,
+    /// migration lifecycle phase
+    pub phase: Vec<ReplicaPhase>,
+}
+
+impl ReplicaSet {
+    pub fn new() -> ReplicaSet {
+        ReplicaSet::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.workload.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workload.is_empty()
+    }
+
+    /// Append fresh serving-process state, shared by the initial plan
+    /// launch and the migration shadow launch; returns the new replica's
+    /// index.  A `Warming` replica starts busy so the batcher leaves it
+    /// alone until switch-over opens it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch(
+        &mut self,
+        spec: Arc<WorkloadSpec>,
+        workload: usize,
+        gpu: usize,
+        tag: u64,
+        resources: f64,
+        batch: u32,
+        phase: ReplicaPhase,
+    ) -> usize {
+        let p = self.len();
+        self.workload.push(workload);
+        self.gpu.push(gpu);
+        self.tag.push(tag);
+        self.resources.push(resources);
+        self.batch.push(batch);
+        self.queue.push(ReqQueue::new());
+        self.busy.push(phase == ReplicaPhase::Warming);
+        self.exec_estimate.push(spec.slo_ms / 4.0);
+        self.window.push(SlidingWindow::new(WINDOW_SPAN_MS));
+        self.exec_window.push(SlidingWindow::new(WINDOW_SPAN_MS));
+        self.hist.push(LatencyHistogram::new());
+        self.served.push(0);
+        self.recorded.push(0);
+        self.lat_sum.push(0.0);
+        self.queue_sum.push(0.0);
+        self.exec_sum.push(0.0);
+        self.shadow_active.push(false);
+        self.switches.push(0);
+        self.phase.push(phase);
+        self.spec.push(spec);
+        p
+    }
+
+    /// Reset replica `p`'s latency records — used by shadow failover when
+    /// the relaunched process should be judged on fresh observations.
+    pub fn clear_records(&mut self, p: usize) {
+        self.window[p].clear();
+        self.exec_window[p].clear();
+        self.hist[p].clear();
+        self.recorded[p] = 0;
+        self.lat_sum[p] = 0.0;
+        self.queue_sum[p] = 0.0;
+        self.exec_sum[p] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Model;
+
+    #[test]
+    fn launch_appends_one_slot_per_field() {
+        let mut set = ReplicaSet::new();
+        let spec = Arc::new(WorkloadSpec::new(0, Model::AlexNet, 16.0, 400.0));
+        let p = set.launch(Arc::clone(&spec), 0, 2, 7, 0.4, 4, ReplicaPhase::Active);
+        assert_eq!(p, 0);
+        assert_eq!(set.len(), 1);
+        assert!(!set.busy[0], "Active launches idle");
+        assert_eq!(set.exec_estimate[0], 4.0); // slo/4
+        let q = set.launch(spec, 0, 3, 8, 0.2, 4, ReplicaPhase::Warming);
+        assert_eq!(q, 1);
+        assert!(set.busy[1], "Warming launches busy (batcher keep-out)");
+        assert_eq!(set.gpu, vec![2, 3]);
+        assert_eq!(set.tag, vec![7, 8]);
+    }
+
+    #[test]
+    fn clear_records_resets_observations_only() {
+        let mut set = ReplicaSet::new();
+        let spec = Arc::new(WorkloadSpec::new(1, Model::Ssd, 40.0, 100.0));
+        set.launch(spec, 1, 0, 0, 0.5, 8, ReplicaPhase::Active);
+        set.window[0].push(100.0, 12.0);
+        set.hist[0].record(0.012);
+        set.recorded[0] = 1;
+        set.lat_sum[0] = 12.0;
+        set.served[0] = 5;
+        set.switches[0] = 1;
+        set.clear_records(0);
+        assert_eq!(set.recorded[0], 0);
+        assert_eq!(set.lat_sum[0], 0.0);
+        assert!(set.window[0].mean_since(0.0, 1).is_none());
+        // lifetime counters survive a record reset
+        assert_eq!(set.served[0], 5);
+        assert_eq!(set.switches[0], 1);
+    }
+}

@@ -23,6 +23,12 @@
 //! gpulet (`arrivals == served + still_queued` holds through any number
 //! of migrations).
 //!
+//! Hot-path layout (see DESIGN.md §"Sim-core memory layout"): replica
+//! state is a struct-of-arrays [`ReplicaSet`], request timestamps live
+//! in one shared [`RequestSlab`] arena, `Event` is a small `Copy`
+//! payload (migration batches park in per-group `fresh_batches`), and
+//! arrivals are drawn through a chunked [`ArrivalBuffer`].
+//!
 //! Time unit: virtual milliseconds.
 
 use super::batcher::{BatchDecision, BatchPolicy, BatchView, TritonAdaptive};
@@ -30,19 +36,19 @@ use super::monitor::{
     GsliceTuner, PolicyCtx, ServingPolicy, ShadowFailover, StaticPolicy, MIN_P99_SAMPLES,
     MONITOR_PERIOD_MS,
 };
+use super::replicas::{ReplicaPhase, ReplicaSet};
 use super::router::{RouteStrategy, Router};
 use crate::gpu::{GpuDevice, GpuKind};
 use crate::provisioner::{Plan, PlanDelta, WorkloadSpec};
+use crate::sim::slab::RequestSlab;
 use crate::sim::EventQueue;
-use crate::util::stats::{mean, percentile_sorted, LatencyHistogram, SlidingWindow};
+use crate::util::stats::{mean, percentile_sorted, LatencyHistogram};
 use crate::workload::trace::{RateTrace, TracedArrivalGen};
-use crate::workload::{ArrivalGen, ArrivalKind, ArrivalStream};
+use crate::workload::{ArrivalBuffer, ArrivalGen, ArrivalKind, ArrivalStream};
 use std::collections::VecDeque;
+use std::sync::Arc;
 
-/// Latency-window span (ms): long enough for the slowest consumer (the
-/// GSLICE tuner reads 10 s), bounded so monitor scans never grow with the
-/// total served count.
-pub const WINDOW_SPAN_MS: f64 = 10_000.0;
+pub use super::replicas::WINDOW_SPAN_MS;
 
 /// Shadow warm-up span (ms): model load + CUDA context for a freshly
 /// launched migration replica.  The old replicas keep serving for the
@@ -74,7 +80,10 @@ impl Policy {
     }
 }
 
-#[derive(Debug, Clone)]
+/// Fixed-size event payload: ~10^6 of these flow through the calendar
+/// queue per simulated second, so none of the variants may own heap data
+/// (the migration fresh-batch `Vec` lives in `WorkloadGroup` instead).
+#[derive(Debug, Clone, Copy)]
 enum Event {
     /// One request of workload group `g` arrives (routed on pop).
     Arrival { g: usize },
@@ -89,107 +98,16 @@ enum Event {
     },
     Monitor,
     Tune,
-    /// A migration's warm-up finished: activate the `fresh` replicas of
-    /// group `g` and start draining the ones they replace.
-    SwitchOver { g: usize, fresh: Vec<usize> },
-}
-
-/// Lifecycle of a serving replica under shadow-instance migration.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ReplicaPhase {
-    /// Receiving and serving traffic.
-    Active,
-    /// Freshly launched migration target: loaded on the device but not
-    /// yet routable (model load / context warm-up in progress).
-    Warming,
-    /// Replaced by a migration: receives no new arrivals, finishes its
-    /// queued + in-flight requests, then retires.
-    Draining,
-    /// Drained and killed; kept for lifetime stats only.
-    Retired,
-}
-
-/// Per-replica serving state: one serving process on one device.
-/// Public so `monitor::ServingPolicy` implementations can act on it.
-#[derive(Debug)]
-pub struct ReplicaState {
-    pub spec: WorkloadSpec,
-    /// Workload id (index into the submitted specs).
-    pub workload: usize,
-    pub gpu: usize,
-    /// Device process tag (globally unique replica index).
-    pub tag: u64,
-    pub resources: f64,
-    pub batch: u32,
-    /// Waiting + in-flight request arrival times (popped on completion).
-    pub queue: VecDeque<f64>,
-    pub busy: bool,
-    /// rolling estimate of batch execution latency (ms) for the batcher
-    pub exec_estimate: f64,
-    /// time-bounded latency records (completion time, latency)
-    pub window: SlidingWindow,
-    /// time-bounded *execution-span* records (completion time, exec ms):
-    /// dispatch -> completion + load, one entry per batch.  Queueing is
-    /// excluded, so these are directly comparable to the performance
-    /// model's t_inf — the observation stream the calibration layer
-    /// (`monitor::Reprovisioner`) fits its residual corrections from.
-    pub exec_window: SlidingWindow,
-    pub hist: LatencyHistogram,
-    pub served: u64,
-    /// post-warmup latency records and their component sums (ms)
-    pub recorded: u64,
-    pub lat_sum: f64,
-    pub queue_sum: f64,
-    pub exec_sum: f64,
-    /// shadow process state (iGniter policy)
-    pub shadow_active: bool,
-    pub switches: u32,
-    /// migration lifecycle phase
-    pub phase: ReplicaPhase,
-}
-
-impl ReplicaState {
-    /// Fresh serving-process state, shared by the initial plan launch and
-    /// the migration shadow launch.  A `Warming` replica starts busy so
-    /// the batcher leaves it alone until switch-over opens it.
-    fn launch(
-        spec: WorkloadSpec,
-        workload: usize,
-        gpu: usize,
-        tag: u64,
-        resources: f64,
-        batch: u32,
-        phase: ReplicaPhase,
-    ) -> ReplicaState {
-        ReplicaState {
-            workload,
-            gpu,
-            tag,
-            resources,
-            batch,
-            queue: VecDeque::new(),
-            busy: phase == ReplicaPhase::Warming,
-            exec_estimate: spec.slo_ms / 4.0,
-            window: SlidingWindow::new(WINDOW_SPAN_MS),
-            exec_window: SlidingWindow::new(WINDOW_SPAN_MS),
-            hist: LatencyHistogram::new(),
-            served: 0,
-            recorded: 0,
-            lat_sum: 0.0,
-            queue_sum: 0.0,
-            exec_sum: 0.0,
-            shadow_active: false,
-            switches: 0,
-            phase,
-            spec,
-        }
-    }
+    /// A migration's warm-up finished: activate the oldest pending fresh
+    /// batch of group `g` (parked in `WorkloadGroup::fresh_batches`) and
+    /// start draining the replicas it replaces.
+    SwitchOver { g: usize },
 }
 
 /// Per-workload bookkeeping: the replica group, its shared arrival stream,
 /// and the aggregated timeline.
 struct WorkloadGroup {
-    spec: WorkloadSpec,
+    spec: Arc<WorkloadSpec>,
     /// Global replica indices of this workload's group (including
     /// warming/draining/retired migration members, in launch order).
     members: Vec<usize>,
@@ -197,7 +115,14 @@ struct WorkloadGroup {
     /// over this without rescanning phases; rebuilt only at the rare
     /// phase transitions (migration switch-over).
     routable: Vec<usize>,
-    arrivals: ArrivalStream,
+    arrivals: ArrivalBuffer,
+    /// Pending migration payloads in schedule order: `apply_delta` pushes
+    /// a fresh-replica batch here and schedules a payload-free
+    /// `SwitchOver { g }`; the event pops the front.  Same-group
+    /// switch-overs pop in their schedule order (the event queue is FIFO
+    /// at equal times), so multiple in-flight migrations behave exactly
+    /// as when each event carried its own `Vec`.
+    fresh_batches: VecDeque<Vec<usize>>,
     arrivals_count: u64,
     timeline: Vec<TimelinePoint>,
     served_since_sample: u64,
@@ -264,7 +189,10 @@ pub struct ClusterSim {
     seed: u64,
     arrival_kind: ArrivalKind,
     devices: Vec<GpuDevice>,
-    replicas: Vec<ReplicaState>,
+    /// Struct-of-arrays replica state (index = global replica id).
+    replicas: ReplicaSet,
+    /// Shared arena backing every replica's request-timestamp queue.
+    req_slab: RequestSlab,
     groups: Vec<WorkloadGroup>,
     /// replica index -> group index
     group_of: Vec<usize>,
@@ -302,49 +230,40 @@ impl ClusterSim {
         let mut devices: Vec<GpuDevice> = (0..plan.num_gpus())
             .map(|g| GpuDevice::new(kind, seed ^ (g as u64 + 1)))
             .collect();
-        let mut replicas: Vec<ReplicaState> = Vec::new();
+        // one shared Arc per spec: replicas and groups clone pointers
+        let specs_arc: Vec<Arc<WorkloadSpec>> = specs.iter().cloned().map(Arc::new).collect();
+        let mut replicas = ReplicaSet::new();
         for (g, alloc) in plan.all() {
             let mut r = alloc.resources;
             if let Some((_, shave)) = underprovision.iter().find(|(w, _)| *w == alloc.workload) {
                 r = (r - shave).max(devices[g].spec.r_unit);
             }
-            let spec = specs[alloc.workload].clone();
+            let spec = Arc::clone(&specs_arc[alloc.workload]);
             let tag = replicas.len() as u64;
             // launch_unchecked: interference-unaware plans (GSLICE+) may
             // oversubscribe a device; the hardware then time-slices SMs.
             devices[g].launch_unchecked(tag, spec.model, r, alloc.batch);
-            replicas.push(ReplicaState::launch(
-                spec,
-                alloc.workload,
-                g,
-                tag,
-                r,
-                alloc.batch,
-                ReplicaPhase::Active,
-            ));
+            replicas.launch(spec, alloc.workload, g, tag, r, alloc.batch, ReplicaPhase::Active);
         }
         // Replica groups in workload-id order: stats index == workload id
         // whenever the plan covers every spec (the common case).
         let mut groups: Vec<WorkloadGroup> = Vec::new();
-        for (w, spec) in specs.iter().enumerate() {
-            let members: Vec<usize> = replicas
-                .iter()
-                .enumerate()
-                .filter(|(_, r)| r.workload == w)
-                .map(|(p, _)| p)
-                .collect();
+        for (w, spec) in specs_arc.iter().enumerate() {
+            let members: Vec<usize> =
+                (0..replicas.len()).filter(|&p| replicas.workload[p] == w).collect();
             if members.is_empty() {
                 continue;
             }
             groups.push(WorkloadGroup {
-                spec: spec.clone(),
+                spec: Arc::clone(spec),
                 routable: members.clone(),
                 members,
-                arrivals: ArrivalStream::Steady(ArrivalGen::new(
+                arrivals: ArrivalBuffer::new(ArrivalStream::Steady(ArrivalGen::new(
                     arrival,
                     spec.rate_rps,
                     seed ^ (0x5EED + w as u64),
-                )),
+                ))),
+                fresh_batches: VecDeque::new(),
                 arrivals_count: 0,
                 timeline: Vec::new(),
                 served_since_sample: 0,
@@ -364,6 +283,7 @@ impl ClusterSim {
             arrival_kind: arrival,
             devices,
             replicas,
+            req_slab: RequestSlab::new(),
             groups,
             group_of,
             events: EventQueue::new(),
@@ -410,17 +330,19 @@ impl ClusterSim {
     /// Drive every workload's arrivals from a time-varying `RateTrace`
     /// (each epoch spans `epoch_ms` of virtual time) instead of the
     /// steady nominal rate: the live counterpart of the epoch-replay in
-    /// `experiments::dynamic`.  Deterministic per the sim's seed.
+    /// `experiments::dynamic`.  Deterministic per the sim's seed.  The
+    /// trace is cloned once and shared across groups via `Arc`.
     pub fn set_rate_trace(&mut self, trace: &RateTrace, epoch_ms: f64) {
+        let trace = Arc::new(trace.clone());
         for grp in &mut self.groups {
-            grp.arrivals = ArrivalStream::Traced(TracedArrivalGen::new(
+            grp.arrivals.set_stream(ArrivalStream::Traced(TracedArrivalGen::new(
                 self.arrival_kind,
                 grp.spec.rate_rps,
-                trace.clone(),
+                Arc::clone(&trace),
                 grp.spec.id,
                 epoch_ms,
                 self.seed ^ (0x5EED + grp.spec.id as u64),
-            ));
+            )));
         }
     }
 
@@ -438,16 +360,15 @@ impl ClusterSim {
 
     fn try_dispatch(&mut self, p: usize) {
         let now = self.events.now();
-        let rep = &self.replicas[p];
-        if rep.busy {
+        if self.replicas.busy[p] {
             return;
         }
         let view = BatchView {
-            queue_len: rep.queue.len(),
-            oldest_arrival: rep.queue.front().copied(),
-            max_batch: rep.batch,
-            slo_ms: rep.spec.slo_ms,
-            exec_estimate_ms: rep.exec_estimate,
+            queue_len: self.replicas.queue[p].len(),
+            oldest_arrival: self.req_slab.front(&self.replicas.queue[p]),
+            max_batch: self.replicas.batch[p],
+            slo_ms: self.replicas.spec[p].slo_ms,
+            exec_estimate_ms: self.replicas.exec_estimate[p],
         };
         match self.batcher.decide(now, &view) {
             BatchDecision::Idle => {}
@@ -457,18 +378,18 @@ impl ClusterSim {
                     .schedule_at(due.max(now + 0.01), Event::TryDispatch { p });
             }
             BatchDecision::Dispatch(n) => {
-                debug_assert!(n > 0 && n as usize <= rep.queue.len());
-                let tag = rep.tag;
-                let gpu = rep.gpu;
+                debug_assert!(n > 0 && n as usize <= self.replicas.queue[p].len());
+                let tag = self.replicas.tag[p];
+                let gpu = self.replicas.gpu[p];
                 let q = self.devices[gpu]
                     .query_latency(tag, n)
                     .expect("process vanished");
                 // Pipeline: the process is busy for t_gpu + t_feedback; the
                 // batch's own latency includes its data loading (Eq. 1).
                 let busy = q.t_gpu + q.t_feedback;
-                let rep = &mut self.replicas[p];
-                rep.busy = true;
-                rep.exec_estimate = 0.8 * rep.exec_estimate + 0.2 * q.t_inf;
+                self.replicas.busy[p] = true;
+                self.replicas.exec_estimate[p] =
+                    0.8 * self.replicas.exec_estimate[p] + 0.2 * q.t_inf;
                 self.events.schedule_in(
                     busy,
                     Event::Complete {
@@ -504,18 +425,17 @@ impl ClusterSim {
     /// A draining replica finished its last request: kill the process and
     /// keep the carcass for lifetime stats.
     fn retire(&mut self, p: usize) {
-        debug_assert_eq!(self.replicas[p].phase, ReplicaPhase::Draining);
-        debug_assert!(self.replicas[p].queue.is_empty() && !self.replicas[p].busy);
+        debug_assert_eq!(self.replicas.phase[p], ReplicaPhase::Draining);
+        debug_assert!(self.replicas.queue[p].is_empty() && !self.replicas.busy[p]);
         // settle the occupancy integral at pre-retire state: a device this
         // kill vacates mid-interval was occupied up to exactly this instant
         let now = self.events.now();
         self.accrue_gpu_time(now);
-        let tag = self.replicas[p].tag;
-        let gpu = self.replicas[p].gpu;
+        let tag = self.replicas.tag[p];
+        let gpu = self.replicas.gpu[p];
         self.devices[gpu].kill(tag);
-        let rep = &mut self.replicas[p];
-        rep.phase = ReplicaPhase::Retired;
-        rep.resources = 0.0;
+        self.replicas.phase[p] = ReplicaPhase::Retired;
+        self.replicas.resources[p] = 0.0;
     }
 
     /// Realize one plan-delta from the serving policy.
@@ -528,14 +448,16 @@ impl ClusterSim {
             } => {
                 // in-place MPS partition resize of the live replica
                 if let Some(p) = (0..self.replicas.len()).find(|&p| {
-                    let r = &self.replicas[p];
-                    r.workload == workload
-                        && r.gpu == gpu
-                        && matches!(r.phase, ReplicaPhase::Active | ReplicaPhase::Warming)
+                    self.replicas.workload[p] == workload
+                        && self.replicas.gpu[p] == gpu
+                        && matches!(
+                            self.replicas.phase[p],
+                            ReplicaPhase::Active | ReplicaPhase::Warming
+                        )
                 }) {
-                    let tag = self.replicas[p].tag;
+                    let tag = self.replicas.tag[p];
                     self.devices[gpu].force_resources(tag, resources);
-                    self.replicas[p].resources = resources;
+                    self.replicas.resources[p] = resources;
                 }
             }
             PlanDelta::Migrate(m) => {
@@ -558,10 +480,10 @@ impl ClusterSim {
                 self.accrue_gpu_time(now);
                 // launch the shadow replicas; they warm up while the old
                 // group keeps serving (busy=true keeps the batcher away)
+                let spec = Arc::clone(&self.groups[g].spec);
                 let mut fresh = Vec::with_capacity(m.to.len());
                 for (gpu, alloc) in &m.to {
                     self.ensure_devices(*gpu);
-                    let spec = self.groups[g].spec.clone();
                     let tag = self.replicas.len() as u64;
                     self.devices[*gpu].launch_unchecked(
                         tag,
@@ -569,23 +491,23 @@ impl ClusterSim {
                         alloc.resources,
                         alloc.batch,
                     );
-                    let p = self.replicas.len();
-                    self.replicas.push(ReplicaState::launch(
-                        spec,
+                    let p = self.replicas.launch(
+                        Arc::clone(&spec),
                         m.workload,
                         *gpu,
                         tag,
                         alloc.resources,
                         alloc.batch,
                         ReplicaPhase::Warming,
-                    ));
+                    );
                     self.group_of.push(g);
                     self.groups[g].members.push(p);
                     fresh.push(p);
                 }
                 self.migrations += 1;
+                self.groups[g].fresh_batches.push_back(fresh);
                 self.events
-                    .schedule_in(MIGRATION_WARMUP_MS, Event::SwitchOver { g, fresh });
+                    .schedule_in(MIGRATION_WARMUP_MS, Event::SwitchOver { g });
             }
         }
     }
@@ -603,10 +525,10 @@ impl ClusterSim {
             let mut resources = 0.0;
             let mut batch = 0u32;
             for &p in &self.groups[g].members {
-                self.replicas[p].window.values_since_into(since, &mut lat);
-                if self.replicas[p].phase != ReplicaPhase::Retired {
-                    resources += self.replicas[p].resources;
-                    batch = batch.max(self.replicas[p].batch);
+                self.replicas.window[p].values_since_into(since, &mut lat);
+                if self.replicas.phase[p] != ReplicaPhase::Retired {
+                    resources += self.replicas.resources[p];
+                    batch = batch.max(self.replicas.batch[p]);
                 }
             }
             let p99 = if lat.len() < MIN_P99_SAMPLES {
@@ -655,14 +577,12 @@ impl ClusterSim {
                     // route among the cached Active members only: warming
                     // shadows are not ready, draining ones are retiring
                     let grp = &self.groups[g];
-                    let replicas = &self.replicas;
-                    let p = self.router.route(
-                        g,
-                        &grp.routable,
-                        |p| replicas[p].queue.len(),
-                        |p| replicas[p].resources,
-                    );
-                    self.replicas[p].queue.push_back(now);
+                    let queues = &self.replicas.queue;
+                    let res = &self.replicas.resources;
+                    let p = self
+                        .router
+                        .route(g, &grp.routable, |p| queues[p].len(), |p| res[p]);
+                    self.req_slab.push_back(&mut self.replicas.queue[p], now);
                     self.groups[g].arrivals_count += 1;
                     let w = self.groups[g].spec.id;
                     self.policy.on_arrival(now, w);
@@ -678,36 +598,39 @@ impl ClusterSim {
                     t_load,
                 } => {
                     let record = now >= self.warmup_ms;
-                    let rep = &mut self.replicas[p];
+                    let reps = &mut self.replicas;
                     // queueing-vs-execution split: every request of the
                     // batch executes for the same span after dispatch
                     let exec_ms = (now + t_load) - dispatched;
                     // one observation per batch, warm-up included — the
                     // calibration consumer applies its own gating
-                    rep.exec_window.push(now, exec_ms);
+                    reps.exec_window[p].push(now, exec_ms);
                     for _ in 0..n {
-                        let arr = rep.queue.pop_front().expect("queue underflow");
+                        let arr = self
+                            .req_slab
+                            .pop_front(&mut reps.queue[p])
+                            .expect("queue underflow");
                         // Eq. 1 view: latency = queueing + load + gpu + feedback
                         let lat = (now + t_load) - arr;
                         debug_assert!(lat >= 0.0);
                         if record {
-                            rep.window.push(now, lat);
-                            rep.hist.record(lat / 1000.0);
-                            rep.recorded += 1;
-                            rep.lat_sum += lat;
-                            rep.queue_sum += dispatched - arr;
-                            rep.exec_sum += exec_ms;
+                            reps.window[p].push(now, lat);
+                            reps.hist[p].record(lat / 1000.0);
+                            reps.recorded[p] += 1;
+                            reps.lat_sum[p] += lat;
+                            reps.queue_sum[p] += dispatched - arr;
+                            reps.exec_sum[p] += exec_ms;
                         }
-                        rep.served += 1;
+                        reps.served[p] += 1;
                     }
-                    rep.busy = false;
+                    reps.busy[p] = false;
                     let g = self.group_of[p];
                     self.groups[g].served_since_sample += n as u64;
                     self.try_dispatch(p);
                     // a draining replica with nothing left retires now
-                    if self.replicas[p].phase == ReplicaPhase::Draining
-                        && self.replicas[p].queue.is_empty()
-                        && !self.replicas[p].busy
+                    if self.replicas.phase[p] == ReplicaPhase::Draining
+                        && self.replicas.queue[p].is_empty()
+                        && !self.replicas.busy[p]
                     {
                         self.retire(p);
                     }
@@ -738,35 +661,43 @@ impl ClusterSim {
                         self.events.schedule_in(period, Event::Tune);
                     }
                 }
-                Event::SwitchOver { g, fresh } => {
+                Event::SwitchOver { g } => {
+                    let fresh = self.groups[g]
+                        .fresh_batches
+                        .pop_front()
+                        .expect("switch-over without a pending fresh batch");
                     // drain everything the fresh replicas replace...
-                    let members = self.groups[g].members.clone();
-                    for p in members {
+                    for i in 0..self.groups[g].members.len() {
+                        let p = self.groups[g].members[i];
                         if fresh.contains(&p) {
                             continue;
                         }
-                        if self.replicas[p].phase == ReplicaPhase::Active {
-                            self.replicas[p].phase = ReplicaPhase::Draining;
-                            if self.replicas[p].queue.is_empty() && !self.replicas[p].busy {
+                        if self.replicas.phase[p] == ReplicaPhase::Active {
+                            self.replicas.phase[p] = ReplicaPhase::Draining;
+                            if self.replicas.queue[p].is_empty() && !self.replicas.busy[p] {
                                 self.retire(p); // already idle
                             }
                         }
                     }
                     // ...then open the fresh ones for traffic
                     for &p in &fresh {
-                        debug_assert_eq!(self.replicas[p].phase, ReplicaPhase::Warming);
-                        self.replicas[p].phase = ReplicaPhase::Active;
-                        self.replicas[p].busy = false;
+                        debug_assert_eq!(self.replicas.phase[p], ReplicaPhase::Warming);
+                        self.replicas.phase[p] = ReplicaPhase::Active;
+                        self.replicas.busy[p] = false;
                     }
                     // rebuild the routing cache for the new Active set
-                    let replicas = &self.replicas;
-                    let routable: Vec<usize> = self.groups[g]
-                        .members
-                        .iter()
-                        .copied()
-                        .filter(|&p| replicas[p].phase == ReplicaPhase::Active)
-                        .collect();
-                    self.groups[g].routable = routable;
+                    // (in place — no member-list clone)
+                    let phases = &self.replicas.phase;
+                    let WorkloadGroup {
+                        members, routable, ..
+                    } = &mut self.groups[g];
+                    routable.clear();
+                    routable.extend(
+                        members
+                            .iter()
+                            .copied()
+                            .filter(|&p| phases[p] == ReplicaPhase::Active),
+                    );
                     for p in fresh {
                         self.try_dispatch(p);
                     }
@@ -791,24 +722,24 @@ impl ClusterSim {
                 let mut still_queued = 0u64;
                 let mut replica_served = Vec::with_capacity(grp.members.len());
                 for &p in &grp.members {
-                    let rep = &self.replicas[p];
+                    let reps = &self.replicas;
                     // lifetime stats span every member — including
                     // replicas retired by a shadow migration, so P99 and
                     // the conservation counters cover the whole run
-                    hist.merge(&rep.hist);
-                    served += rep.served;
-                    recorded += rep.recorded;
-                    lat_sum += rep.lat_sum;
-                    queue_sum += rep.queue_sum;
-                    exec_sum += rep.exec_sum;
-                    switches += rep.switches;
-                    still_queued += rep.queue.len() as u64;
-                    replica_served.push(rep.served);
+                    hist.merge(&reps.hist[p]);
+                    served += reps.served[p];
+                    recorded += reps.recorded[p];
+                    lat_sum += reps.lat_sum[p];
+                    queue_sum += reps.queue_sum[p];
+                    exec_sum += reps.exec_sum[p];
+                    switches += reps.switches[p];
+                    still_queued += reps.queue[p].len() as u64;
+                    replica_served.push(reps.served[p]);
                     // ...but the "current configuration" fields describe
                     // only what is still on a device
-                    if rep.phase != ReplicaPhase::Retired {
-                        final_resources += rep.resources;
-                        final_batch = final_batch.max(rep.batch);
+                    if reps.phase[p] != ReplicaPhase::Retired {
+                        final_resources += reps.resources[p];
+                        final_batch = final_batch.max(reps.batch[p]);
                     }
                 }
                 // lifetime P99 from the merged log-bucket histogram (~2 %

@@ -408,6 +408,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "served req/s (wall)".into(),
         f(agg.total_served as f64 / report.wall_s.max(1e-9), 0),
     ]);
+    let sim_wall_s: f64 = report.results.iter().map(|r| r.wall_ms).sum::<f64>() / 1e3;
+    t.row(&[
+        "sim throughput (req/s, 1 core)".into(),
+        f(agg.total_served as f64 / sim_wall_s.max(1e-9), 0),
+    ]);
     println!("{}", t.render());
 
     // persist before any failure exit: the per-scenario JSON is exactly

@@ -62,8 +62,31 @@ pub fn alloc_gpus(
     r_lower_w: f64,
     batch_w: u32,
 ) -> Option<Vec<Alloc>> {
+    let mut allocs = Vec::new();
+    alloc_gpus_into(model, sys, specs, resident, w, r_lower_w, batch_w, &mut allocs)
+        .then_some(allocs)
+}
+
+/// Allocation-reusing core of [`alloc_gpus`]: writes the post-placement
+/// allocations into `out` (cleared first) and returns whether the device
+/// can host the workload.  `out` keeps its capacity across calls, so the
+/// online planner's candidate scans stop allocating a fresh `Vec` per
+/// (device, target) probe.  On `false`, `out`'s contents are unspecified.
+#[allow(clippy::too_many_arguments)]
+pub fn alloc_gpus_into(
+    model: &dyn PerfModel,
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+    resident: &[Alloc],
+    w: usize,
+    r_lower_w: f64,
+    batch_w: u32,
+    out: &mut Vec<Alloc>,
+) -> bool {
     let hw = &sys.hw;
-    let mut allocs: Vec<Alloc> = resident.to_vec();
+    let allocs = out;
+    allocs.clear();
+    allocs.extend_from_slice(resident);
     allocs.push(Alloc {
         workload: w,
         resources: r_lower_w,
@@ -71,13 +94,13 @@ pub fn alloc_gpus(
     });
 
     let total = |a: &[Alloc]| -> f64 { a.iter().map(|x| x.resources).sum() };
-    if total(&allocs) > hw.r_max + 1e-9 {
-        return None;
+    if total(allocs) > hw.r_max + 1e-9 {
+        return false;
     }
 
     // Iteratively grow SLO-violating workloads by r_unit (lines 2-11).
     let terms = model.terms();
-    let mut scorer = DeviceScorer::from_placed(hw, sys.placed_of(specs, &allocs));
+    let mut scorer = DeviceScorer::from_placed(hw, sys.placed_of(specs, allocs));
     let mut flag = true;
     while flag {
         flag = false;
@@ -94,11 +117,11 @@ pub fn alloc_gpus(
             scorer.set_resources(i, allocs[i].resources);
             flag = true;
         }
-        if total(&allocs) > hw.r_max + 1e-9 {
-            return None;
+        if total(allocs) > hw.r_max + 1e-9 {
+            return false;
         }
     }
-    Some(allocs)
+    true
 }
 
 /// Minimum replica count `k` (with the per-replica `Derived`) such that an

@@ -11,8 +11,8 @@ pub mod online;
 pub mod types;
 
 pub use igniter::{
-    alloc_gpus, derive_all, predict_plan, provision, provision_with, replica_split,
-    validate_replica_shares, Derived, MAX_REPLICAS,
+    alloc_gpus, alloc_gpus_into, derive_all, predict_plan, provision, provision_with,
+    replica_split, validate_replica_shares, Derived, MAX_REPLICAS,
 };
 pub use online::{OnlinePlanner, Placed};
 pub use types::{diff_plans, Alloc, Migration, Plan, PlanDelta, ProfiledSystem, WorkloadSpec};

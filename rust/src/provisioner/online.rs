@@ -8,7 +8,7 @@
 //! instances (the paper's periodic execution).
 
 use super::igniter::{
-    alloc_gpus, derive_all, provision_with, provision_with_derived, replica_split, Derived,
+    alloc_gpus_into, derive_all, provision_with, provision_with_derived, replica_split, Derived,
 };
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
 use crate::perfmodel::{model, AnalyticModel, PerfModel, Prediction};
@@ -27,6 +27,14 @@ pub struct OnlinePlanner {
     /// swaps in a `CalibratedModel` it feeds from observed latencies, so
     /// re-plans trust the corrected predictions.
     model: Box<dyn PerfModel>,
+    /// Pre-respec plan snapshot, reused across respecs (`Plan::copy_from`)
+    /// so the atomic-rollback guarantee stops costing a deep clone per
+    /// re-plan attempt.
+    rollback: Plan,
+    /// Candidate / best-so-far allocation scratch for `place`'s
+    /// per-device `alloc_gpus_into` probes.
+    cand_scratch: Vec<Alloc>,
+    best_scratch: Vec<Alloc>,
 }
 
 /// Outcome of an arrival.
@@ -45,9 +53,12 @@ impl OnlinePlanner {
         OnlinePlanner {
             sys,
             specs: Vec::new(),
+            rollback: plan.clone(),
             plan,
             active: Vec::new(),
             model: Box::new(AnalyticModel::ALL),
+            cand_scratch: Vec::new(),
+            best_scratch: Vec::new(),
         }
     }
 
@@ -57,9 +68,12 @@ impl OnlinePlanner {
         OnlinePlanner {
             sys,
             specs,
+            rollback: plan.clone(),
             plan,
             active,
             model: Box::new(AnalyticModel::ALL),
+            cand_scratch: Vec::new(),
+            best_scratch: Vec::new(),
         }
     }
 
@@ -125,9 +139,14 @@ impl OnlinePlanner {
     /// Greedy min-interference placement of one allocation item (Alg. 1
     /// inner loop against the current live allocations).
     fn place(&mut self, id: usize, derived: Derived) -> Placed {
-        let mut best: Option<(usize, Vec<Alloc>, f64)> = None;
+        // Scratch buffers live on the planner: the candidate probe below
+        // runs once per (device, target) pair under the serving loop, and
+        // `alloc_gpus_into` keeps the capacity across all of them.
+        let mut cand = std::mem::take(&mut self.cand_scratch);
+        let mut best_alloc = std::mem::take(&mut self.best_scratch);
+        let mut best: Option<(usize, f64)> = None;
         for g in 0..self.plan.gpus.len() {
-            if let Some(alloc) = alloc_gpus(
+            if alloc_gpus_into(
                 self.model.as_ref(),
                 &self.sys,
                 &self.specs,
@@ -135,13 +154,14 @@ impl OnlinePlanner {
                 id,
                 derived.r_lower,
                 derived.batch,
+                &mut cand,
             ) {
-                // `alloc_gpus` preserves order (residents first, the new
-                // item last), so the growth comparison is positional —
+                // `alloc_gpus_into` preserves order (residents first, the
+                // new item last), so the growth comparison is positional —
                 // replicas of one workload co-resident on a device stay
                 // distinct (same rule as igniter::place_items).
                 let mut r_inter = 0.0;
-                for (i, a) in alloc.iter().enumerate() {
+                for (i, a) in cand.iter().enumerate() {
                     let before = if i < self.plan.gpus[g].len() {
                         self.plan.gpus[g][i].resources
                     } else {
@@ -149,25 +169,26 @@ impl OnlinePlanner {
                     };
                     r_inter += a.resources - before;
                 }
-                if best.as_ref().map_or(true, |(_, _, b)| r_inter < *b - 1e-12) {
-                    best = Some((g, alloc, r_inter));
+                if best.map_or(true, |(_, b)| r_inter < b - 1e-12) {
+                    best = Some((g, r_inter));
+                    std::mem::swap(&mut best_alloc, &mut cand);
                 }
             }
         }
-        match best {
-            Some((g, alloc, _)) => {
-                self.plan.gpus[g] = alloc;
+        let placed = match best {
+            Some((g, _)) => {
+                self.plan.gpus[g].clone_from(&best_alloc);
                 Placed::Existing(g)
             }
             None => {
-                // Fresh device: still score through alloc_gpus (a no-op
-                // growth for the analytic model, a real one for a
+                // Fresh device: still score through alloc_gpus_into (a
+                // no-op growth for the analytic model, a real one for a
                 // calibrated model that knows the class runs slow).  When
                 // even full-device growth cannot meet the corrected bound
-                // (None), the best effort on an idle device is the FULL
+                // (false), the best effort on an idle device is the FULL
                 // device — falling back to the analytic minimum would
                 // *shrink* a workload that is known to run slow.
-                let alloc = alloc_gpus(
+                let ok = alloc_gpus_into(
                     self.model.as_ref(),
                     &self.sys,
                     &self.specs,
@@ -175,18 +196,23 @@ impl OnlinePlanner {
                     id,
                     derived.r_lower,
                     derived.batch,
-                )
-                .unwrap_or_else(|| {
-                    vec![Alloc {
+                    &mut cand,
+                );
+                if !ok {
+                    cand.clear();
+                    cand.push(Alloc {
                         workload: id,
                         resources: self.sys.hw.r_max,
                         batch: derived.batch,
-                    }]
-                });
-                self.plan.gpus.push(alloc);
+                    });
+                }
+                self.plan.gpus.push(cand.clone());
                 Placed::NewGpu(self.plan.gpus.len() - 1)
             }
-        }
+        };
+        self.cand_scratch = cand;
+        self.best_scratch = best_alloc;
+        placed
     }
 
     /// Handle a departed workload: free its partition.  Co-residents keep
@@ -215,18 +241,20 @@ impl OnlinePlanner {
         if id >= self.specs.len() || !self.active[id] {
             return Err(anyhow!("workload {id} not active"));
         }
-        let saved_plan = self.plan.clone();
+        // snapshot into the reusable rollback plan instead of deep-cloning
+        let mut rollback = std::mem::take(&mut self.rollback);
+        rollback.copy_from(&self.plan);
         let (model, slo_ms) = (self.specs[id].model, self.specs[id].slo_ms);
-        self.remove(id)?;
-        match self.add(WorkloadSpec::new(0, model, slo_ms, new_rate_rps)) {
-            Ok(placed) => Ok(placed),
-            Err(e) => {
-                // rollback: re-activate the old placement untouched
-                self.active[id] = true;
-                self.plan = saved_plan;
-                Err(e)
-            }
+        let res = self
+            .remove(id)
+            .and_then(|()| self.add(WorkloadSpec::new(0, model, slo_ms, new_rate_rps)));
+        if res.is_err() {
+            // rollback: re-activate the old placement untouched
+            self.active[id] = true;
+            std::mem::swap(&mut self.plan, &mut rollback);
         }
+        self.rollback = rollback;
+        res
     }
 
     /// Periodic re-pack: run Alg. 1 from scratch on the active set and

@@ -42,7 +42,7 @@ pub struct Alloc {
 }
 
 /// A complete provisioning plan over a homogeneous GPU pool.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Plan {
     /// Strategy that produced the plan (for reporting).
     pub strategy: String,
@@ -66,6 +66,17 @@ impl Plan {
 
     pub fn num_gpus(&self) -> usize {
         self.gpus.len()
+    }
+
+    /// Become a copy of `other`, reusing this plan's existing allocations
+    /// (strings, outer `Vec`, per-device `Vec`s) instead of deep-cloning.
+    /// The online loop snapshots the standing plan every trigger
+    /// (`diff_plans` needs the before-image), so this is hot.
+    pub fn copy_from(&mut self, other: &Plan) {
+        self.strategy.clone_from(&other.strategy);
+        self.gpu.clone_from(&other.gpu);
+        self.unit_price = other.unit_price;
+        self.gpus.clone_from(&other.gpus);
     }
 
     /// Hourly monetary cost C (Eq. 12): #instances x unit price.

@@ -2,12 +2,38 @@
 //! event queue with deterministic tie-breaking.  The serving coordinator
 //! (rust/src/coordinator) runs on top of this for all latency/throughput
 //! experiments, so results are exactly reproducible per seed.
+//!
+//! The queue is a calendar (bucketed) queue rather than a single binary
+//! heap: serving timestamps are dense and bounded (sub-ms gaps, horizons
+//! of seconds to minutes), so binning events into 1 ms buckets makes the
+//! common push O(1) instead of O(log n) while popping in exactly the same
+//! `total_cmp`-then-FIFO order as the heap it replaced.  The old heap
+//! survives under `#[cfg(test)]` as `reference::HeapQueue`, the ordering
+//! oracle for the differential property test below.  See DESIGN.md
+//! §"Sim-core memory layout" for the pop-order proof sketch.
+
+pub mod slab;
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// Virtual time in milliseconds.
 pub type SimTime = f64;
+
+/// Bucket width is 1 ms; the ring covers this many consecutive buckets.
+/// Must be a power of two (slot index is `bucket & RING_MASK`).
+const RING_BUCKETS: u64 = 2048;
+const RING_MASK: u64 = RING_BUCKETS - 1;
+
+/// Millisecond bucket of a timestamp: `floor(at)`.  Monotone in `at`, so
+/// ordering buckets first and `(at, seq)` within a bucket is the same
+/// total order the old single heap used.  (`as u64` clamps negatives to
+/// 0 and saturates at `u64::MAX` — both fine: times are clamped to `now`
+/// on insert and saturated buckets still sort last.)
+#[inline]
+fn bucket(at: SimTime) -> u64 {
+    at as u64
+}
 
 /// A scheduled event carrying a caller-defined payload.
 #[derive(Debug, Clone)]
@@ -45,9 +71,29 @@ impl<E> PartialOrd for Scheduled<E> {
 }
 
 /// Event queue + clock.
+///
+/// Invariants (between public calls):
+/// * `current` holds every pending event whose bucket is <= `cursor`;
+///   it is a real heap, so mixed buckets inside it still pop in exact
+///   `(at, seq)` order.
+/// * `ring[b & RING_MASK]` holds exactly the events with bucket `b` for
+///   `cursor < b < cursor + RING_BUCKETS` — distinct buckets in that
+///   window map to distinct slots, so a slot never mixes buckets.
+/// * `overflow` holds events whose bucket was >= `cursor + RING_BUCKETS`
+///   at insert time; its min bucket is always > `cursor`.
+///
+/// `refill` advances `cursor` to the minimum pending bucket across ring
+/// and overflow and drains that whole bucket into `current`, so the head
+/// of `current` is always the global minimum.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    current: BinaryHeap<Scheduled<E>>,
+    ring: Vec<Vec<Scheduled<E>>>,
+    /// Total events parked in `ring` (so `len` is O(1)).
+    ring_len: usize,
+    overflow: BinaryHeap<Scheduled<E>>,
+    /// Bucket the `current` heap is (at least) caught up to.
+    cursor: u64,
     now: SimTime,
     seq: u64,
     processed: u64,
@@ -62,7 +108,11 @@ impl<E> Default for EventQueue<E> {
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            current: BinaryHeap::new(),
+            ring: (0..RING_BUCKETS).map(|_| Vec::new()).collect(),
+            ring_len: 0,
+            overflow: BinaryHeap::new(),
+            cursor: 0,
             now: 0.0,
             seq: 0,
             processed: 0,
@@ -74,11 +124,11 @@ impl<E> EventQueue<E> {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.current.len() + self.ring_len + self.overflow.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     pub fn processed(&self) -> u64 {
@@ -89,12 +139,24 @@ impl<E> EventQueue<E> {
     pub fn schedule_at(&mut self, at: SimTime, payload: E) {
         debug_assert!(at.is_finite(), "non-finite event time {at}");
         let at = if at < self.now { self.now } else { at };
-        self.heap.push(Scheduled {
+        let ev = Scheduled {
             at,
             seq: self.seq,
             payload,
-        });
+        };
         self.seq += 1;
+        let b = bucket(at);
+        if b <= self.cursor {
+            // Current (or, after a peek advanced the cursor, an earlier)
+            // bucket: goes straight into the heap, which totally orders
+            // its members — nothing in ring/overflow can precede it.
+            self.current.push(ev);
+        } else if b - self.cursor < RING_BUCKETS {
+            self.ring[(b & RING_MASK) as usize].push(ev);
+            self.ring_len += 1;
+        } else {
+            self.overflow.push(ev);
+        }
     }
 
     /// Schedule `payload` after a delay from now.
@@ -103,18 +165,121 @@ impl<E> EventQueue<E> {
         self.schedule_at(self.now + delay.max(0.0), payload);
     }
 
+    /// When `current` is drained, advance `cursor` to the earliest
+    /// pending bucket and move that whole bucket (from the ring slot
+    /// and/or overflow) into `current`.
+    fn refill(&mut self) {
+        if !self.current.is_empty() {
+            return;
+        }
+        let ring_next = if self.ring_len == 0 {
+            None
+        } else {
+            // The nearest non-empty slot is at most RING_BUCKETS-1 ahead.
+            let mut b = self.cursor + 1;
+            loop {
+                debug_assert!(b - self.cursor < RING_BUCKETS, "ring scan escaped its window");
+                if !self.ring[(b & RING_MASK) as usize].is_empty() {
+                    break Some(b);
+                }
+                b += 1;
+            }
+        };
+        let overflow_next = self.overflow.peek().map(|e| bucket(e.at));
+        let target = match (ring_next, overflow_next) {
+            (Some(r), Some(o)) => r.min(o),
+            (Some(r), None) => r,
+            (None, Some(o)) => o,
+            (None, None) => return,
+        };
+        self.cursor = target;
+        if ring_next == Some(target) {
+            let slot = (target & RING_MASK) as usize;
+            let mut drained = std::mem::take(&mut self.ring[slot]);
+            self.ring_len -= drained.len();
+            for ev in drained.drain(..) {
+                self.current.push(ev);
+            }
+            // hand the (empty, capacity-retaining) Vec back to the slot
+            self.ring[slot] = drained;
+        }
+        // Overflow events were binned against an older cursor, so some may
+        // share the target bucket (or an equal one the ring also holds) —
+        // drain them too or they would pop after later ring buckets.
+        while self
+            .overflow
+            .peek()
+            .is_some_and(|e| bucket(e.at) == target)
+        {
+            self.current.push(self.overflow.pop().expect("peeked"));
+        }
+    }
+
     /// Pop the next event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        let ev = self.heap.pop()?;
+        self.refill();
+        let ev = self.current.pop()?;
         debug_assert!(ev.at >= self.now, "time went backwards");
         self.now = ev.at;
         self.processed += 1;
         Some((ev.at, ev.payload))
     }
 
-    /// Peek the next event time without advancing.
-    pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|e| e.at)
+    /// Peek the next event time without advancing.  (`&mut` because the
+    /// head may need to be pulled forward out of the ring first.)
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        self.refill();
+        self.current.peek().map(|e| e.at)
+    }
+}
+
+/// The pre-calendar-queue implementation: one `BinaryHeap` over the very
+/// same `Scheduled` ordering.  Kept (test-only) as the ordering oracle
+/// for the differential property test — if the calendar queue ever pops
+/// in a different order, the test names the diverging element.
+#[cfg(test)]
+pub(crate) mod reference {
+    use super::{Scheduled, SimTime};
+    use std::collections::BinaryHeap;
+
+    pub struct HeapQueue<E> {
+        heap: BinaryHeap<Scheduled<E>>,
+        now: SimTime,
+        seq: u64,
+    }
+
+    impl<E> HeapQueue<E> {
+        pub fn new() -> Self {
+            HeapQueue {
+                heap: BinaryHeap::new(),
+                now: 0.0,
+                seq: 0,
+            }
+        }
+
+        pub fn now(&self) -> SimTime {
+            self.now
+        }
+
+        pub fn schedule_at(&mut self, at: SimTime, payload: E) {
+            let at = if at < self.now { self.now } else { at };
+            self.heap.push(Scheduled {
+                at,
+                seq: self.seq,
+                payload,
+            });
+            self.seq += 1;
+        }
+
+        pub fn pop(&mut self) -> Option<(SimTime, E)> {
+            let ev = self.heap.pop()?;
+            self.now = ev.at;
+            Some((ev.at, ev.payload))
+        }
+
+        pub fn peek_time(&self) -> Option<SimTime> {
+            self.heap.peek().map(|e| e.at)
+        }
     }
 }
 
@@ -180,5 +345,144 @@ mod tests {
         assert!(q.pop().is_none());
         assert!(q.is_empty());
         assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn far_future_events_route_through_overflow() {
+        // Beyond the ring window at insert time -> overflow; order and
+        // clock still exact across the ring/overflow boundary.
+        let mut q = EventQueue::new();
+        let far = (RING_BUCKETS as f64) * 3.0 + 0.5;
+        q.schedule_at(far, "far");
+        q.schedule_at(1.5, "near");
+        q.schedule_at(far, "far2"); // FIFO tie inside overflow
+        assert_eq!(q.len(), 3);
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["near", "far", "far2"]);
+        assert_eq!(q.now(), far);
+    }
+
+    #[test]
+    fn overflow_bucket_can_precede_ring_bucket_after_jump() {
+        // An overflow event binned against cursor=0 can, after the cursor
+        // jumps forward, be EARLIER than the next ring bucket — refill
+        // must take the min across both, not prefer the ring.
+        let mut q = EventQueue::new();
+        let of = RING_BUCKETS as f64 + 10.0; // overflow at insert (cursor 0)
+        q.schedule_at(of, "overflow-early");
+        q.schedule_at(5.0, "first");
+        q.pop(); // now = 5, cursor = 5
+        // lands in the ring (bucket within 5..5+RING) but AFTER the parked
+        // overflow event's bucket
+        q.schedule_at(of + 100.0, "ring-late");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["overflow-early", "ring-late"]);
+    }
+
+    #[test]
+    fn ring_rotates_across_many_windows() {
+        // March the clock through several full ring rotations; every slot
+        // gets reused and the clock stays exact.
+        let mut q = EventQueue::new();
+        q.schedule_at(0.25, 0u64);
+        let mut popped = 0u64;
+        let mut last = -1.0;
+        while let Some((t, i)) = q.pop() {
+            assert!(t > last);
+            last = t;
+            popped += 1;
+            if i < 3 * RING_BUCKETS {
+                // +1.75 ms per hop: hits every slot parity over time
+                q.schedule_in(1.75, i + 1);
+            }
+        }
+        assert_eq!(popped, 3 * RING_BUCKETS + 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_after_cursor_advance_keeps_earlier_inserts_ordered() {
+        // peek_time refills (cursor jumps to the peeked bucket); an event
+        // scheduled afterwards at an earlier-but->=now time must still pop
+        // first.
+        let mut q = EventQueue::new();
+        q.schedule_at(100.0, "late");
+        assert_eq!(q.peek_time(), Some(100.0)); // cursor -> 100, now still 0
+        q.schedule_at(40.0, "early");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["early", "late"]);
+    }
+
+    #[test]
+    fn property_calendar_pops_identical_to_heap_reference() {
+        // Differential test: random interleavings of schedule / pop /
+        // peek — with integral-time ties, sub-ms offsets, far-future
+        // (overflow) times, and deliberately-late (clamped) times — must
+        // produce bit-identical pop sequences on the calendar queue and
+        // the retained BinaryHeap reference.
+        use super::reference::HeapQueue;
+        crate::util::quick::forall(
+            1106,
+            60,
+            |r| {
+                let n = 30 + r.below(150) as usize;
+                (0..n)
+                    .map(|_| (r.below(100), r.next_u64()))
+                    .collect::<Vec<(u64, u64)>>()
+            },
+            |ops| {
+                let mut cal: EventQueue<u32> = EventQueue::new();
+                let mut heap: HeapQueue<u32> = HeapQueue::new();
+                let mut id: u32 = 0;
+                for &(sel, raw) in ops {
+                    if sel < 55 {
+                        let t = match sel % 4 {
+                            // integral ms: maximal tie pressure
+                            0 => (raw % 50) as f64,
+                            // half-ms grid inside the ring window
+                            1 => (raw % 4_000) as f64 * 0.5,
+                            // far future: exercises overflow + cursor jumps
+                            2 => cal.now() + (raw % 20_000) as f64 * 1.7,
+                            // late (often < now): exercises the clamp path
+                            _ => cal.now() - 5.0 - (raw % 100) as f64,
+                        };
+                        cal.schedule_at(t, id);
+                        heap.schedule_at(t, id);
+                        id += 1;
+                    } else if sel < 90 {
+                        let a = cal.pop();
+                        let b = heap.pop();
+                        crate::prop_assert!(
+                            a.map(|(t, e)| (t.to_bits(), e)) == b.map(|(t, e)| (t.to_bits(), e)),
+                            "pop diverged: calendar {a:?} vs heap {b:?}"
+                        );
+                    } else {
+                        let a = cal.peek_time().map(f64::to_bits);
+                        let b = heap.peek_time().map(f64::to_bits);
+                        crate::prop_assert!(a == b, "peek diverged");
+                    }
+                    crate::prop_assert!(
+                        cal.now().to_bits() == heap.now().to_bits(),
+                        "clock diverged: {} vs {}",
+                        cal.now(),
+                        heap.now()
+                    );
+                }
+                // drain both to the end
+                loop {
+                    let a = cal.pop();
+                    let b = heap.pop();
+                    crate::prop_assert!(
+                        a.map(|(t, e)| (t.to_bits(), e)) == b.map(|(t, e)| (t.to_bits(), e)),
+                        "drain diverged: calendar {a:?} vs heap {b:?}"
+                    );
+                    if a.is_none() {
+                        break;
+                    }
+                }
+                crate::prop_assert!(cal.is_empty(), "calendar not empty after drain");
+                Ok(())
+            },
+        );
     }
 }

@@ -183,10 +183,21 @@ impl SweepReport {
     pub fn wall_json(&self) -> Json {
         let agg = self.aggregate();
         let wall = self.wall_s.max(1e-9);
+        // Sim-core throughput: served virtual requests per second of
+        // summed per-task simulation wall — independent of the worker
+        // count, unlike `served_per_wall_s` (which divides by the
+        // parallel whole-sweep wall).  This is the number the sim-core
+        // refactors are gated on (`benches/simulator.rs`,
+        // `check_bench_regression.py`).
+        let sim_wall_s: f64 = self.results.iter().map(|r| r.wall_ms).sum::<f64>() / 1e3;
         Json::obj()
             .set("wall_s", self.wall_s)
             .set("scenarios_per_s", self.results.len() as f64 / wall)
             .set("served_per_wall_s", agg.total_served as f64 / wall)
+            .set(
+                "sim_throughput_rps",
+                agg.total_served as f64 / sim_wall_s.max(1e-9),
+            )
             .set("parallel", self.config.parallel)
     }
 
@@ -314,6 +325,9 @@ mod tests {
         assert_eq!(parsed.path("scenarios.0.gpu").unwrap().as_str(), Some("V100"));
         assert_eq!(parsed.path("aggregate.feasible").unwrap().as_usize(), Some(1));
         assert!(parsed.path("wall.scenarios_per_s").unwrap().as_f64().unwrap() > 0.0);
+        // total_served / (sum of per-task sim wall): 1000 / 0.0125 s
+        let sim_rps = parsed.path("wall.sim_throughput_rps").unwrap().as_f64().unwrap();
+        assert!((sim_rps - 1000.0 / 0.0125).abs() < 1e-6, "sim_rps {sim_rps}");
         assert_eq!(parsed.path("config.master_seed").unwrap().as_u64(), Some(42));
     }
 }

@@ -121,6 +121,55 @@ impl ArrivalStream {
     }
 }
 
+/// Arrival timestamps pre-generated per refill, amortizing the
+/// per-arrival enum dispatch + RNG call over a chunk.
+pub const ARRIVAL_CHUNK: usize = 64;
+
+/// Batched front-end over an [`ArrivalStream`]: `next()` serves from a
+/// pre-generated chunk of [`ARRIVAL_CHUNK`] timestamps and refills
+/// lazily.  Bit-identical to calling the stream directly — a generator's
+/// state depends only on its own draw sequence, never on *when* the
+/// consumer asks — so batching reorders nothing.
+#[derive(Debug, Clone)]
+pub struct ArrivalBuffer {
+    stream: ArrivalStream,
+    buf: Vec<f64>,
+    pos: usize,
+}
+
+impl ArrivalBuffer {
+    pub fn new(stream: ArrivalStream) -> ArrivalBuffer {
+        ArrivalBuffer {
+            stream,
+            buf: Vec::with_capacity(ARRIVAL_CHUNK),
+            pos: 0,
+        }
+    }
+
+    /// Replace the underlying stream, discarding any buffered (not yet
+    /// consumed) timestamps from the old one.
+    pub fn set_stream(&mut self, stream: ArrivalStream) {
+        self.stream = stream;
+        self.buf.clear();
+        self.pos = 0;
+    }
+
+    /// Next arrival timestamp (ms since start), monotone increasing.
+    pub fn next(&mut self) -> f64 {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            for _ in 0..ARRIVAL_CHUNK {
+                let t = self.stream.next();
+                self.buf.push(t);
+            }
+            self.pos = 0;
+        }
+        let t = self.buf[self.pos];
+        self.pos += 1;
+        t
+    }
+}
+
 /// Per-model feasible envelope `(slo_lo_ms, slo_hi_ms, rate_lo_rps,
 /// rate_hi_rps)` — the Fig.-21 synthetic distribution, provisionable on
 /// the stronger GPU at full resources.  Single source for both
@@ -205,6 +254,38 @@ mod tests {
             (measured - 400.0).abs() < 15.0,
             "measured rate {measured:.1}"
         );
+    }
+
+    #[test]
+    fn buffered_arrivals_match_the_unbuffered_stream() {
+        for kind in [ArrivalKind::Constant, ArrivalKind::Poisson] {
+            let mut raw = ArrivalStream::Steady(ArrivalGen::new(kind, 350.0, 99));
+            let mut buffered =
+                ArrivalBuffer::new(ArrivalStream::Steady(ArrivalGen::new(kind, 350.0, 99)));
+            // cross several chunk boundaries
+            for i in 0..(ARRIVAL_CHUNK * 3 + 7) {
+                let a = raw.next();
+                let b = buffered.next();
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} arrival {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn set_stream_discards_buffered_arrivals() {
+        let mut buffered = ArrivalBuffer::new(ArrivalStream::Steady(ArrivalGen::new(
+            ArrivalKind::Constant,
+            1000.0,
+            1,
+        )));
+        buffered.next(); // forces a chunk of the old stream into the buffer
+        buffered.set_stream(ArrivalStream::Steady(ArrivalGen::new(
+            ArrivalKind::Constant,
+            500.0,
+            1,
+        )));
+        // first arrival of the NEW stream, not a leftover 1 ms gap
+        assert!((buffered.next() - 2.0).abs() < 1e-9);
     }
 
     #[test]

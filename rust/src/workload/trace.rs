@@ -11,6 +11,7 @@
 
 use super::ArrivalKind;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Shape of a synthetic rate trace.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -121,7 +122,9 @@ impl RateTrace {
 pub struct TracedArrivalGen {
     kind: ArrivalKind,
     base_rps: f64,
-    trace: RateTrace,
+    /// Shared, never mutated: one `RateTrace` can drive every workload's
+    /// generator without per-group deep copies of the multiplier matrix.
+    trace: Arc<RateTrace>,
     workload: usize,
     epoch_ms: f64,
     rng: Rng,
@@ -132,7 +135,7 @@ impl TracedArrivalGen {
     pub fn new(
         kind: ArrivalKind,
         base_rps: f64,
-        trace: RateTrace,
+        trace: Arc<RateTrace>,
         workload: usize,
         epoch_ms: f64,
         seed: u64,
@@ -363,7 +366,8 @@ mod tests {
         // two-epoch step trace must show the step in the arrival spacing.
         let mut tr = RateTrace::generate(TraceKind::Ramp { from: 0.5, to: 1.0 }, 2, 1, 1);
         tr.multiplier = vec![vec![0.5], vec![1.0]];
-        let mut g = TracedArrivalGen::new(ArrivalKind::Constant, 100.0, tr, 0, 1_000.0, 7);
+        let mut g =
+            TracedArrivalGen::new(ArrivalKind::Constant, 100.0, Arc::new(tr), 0, 1_000.0, 7);
         let t1 = g.next(); // rate 50 rps -> 20 ms gap
         assert!((t1 - 20.0).abs() < 1e-9);
         let mut last = t1;
@@ -378,8 +382,14 @@ mod tests {
     fn traced_arrivals_deterministic_per_seed() {
         let tr = RateTrace::generate(TraceKind::Spiky { base: 0.3, p: 0.25 }, 8, 3, 5);
         let run = |seed: u64| {
-            let mut g =
-                TracedArrivalGen::new(ArrivalKind::Poisson, 300.0, tr.clone(), 1, 500.0, seed);
+            let mut g = TracedArrivalGen::new(
+                ArrivalKind::Poisson,
+                300.0,
+                Arc::new(tr.clone()),
+                1,
+                500.0,
+                seed,
+            );
             (0..500).map(|_| g.next().to_bits()).collect::<Vec<_>>()
         };
         assert_eq!(run(11), run(11));

@@ -147,6 +147,43 @@ fn single_task_replays_bit_identically() {
 }
 
 #[test]
+fn quick_sweep_fingerprint_pinned_across_refactors() {
+    // Bit-identity across *code versions*, not just across runs: the
+    // FNV-1a hash of a small sweep's deterministic fingerprint is pinned
+    // to a committed golden.  A sim-core refactor (event queue, request
+    // slab, SoA replica state, arrival batching) that changes ANY
+    // deterministic byte — event pop order, RNG draw order, float
+    // summation order — fails here even though the per-run determinism
+    // properties above still pass.  Blessed on first run (see
+    // tests/golden/README.md); re-bless by deleting the file.
+    let fp = run_sweep(&cfg(4242, 2)).fingerprint();
+    let mut hash: u64 = 0xcbf29ce484222325;
+    for b in fp.as_bytes() {
+        hash ^= *b as u64;
+        hash = hash.wrapping_mul(0x100000001b3);
+    }
+    let digest = format!("{hash:016x}");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/sweep_fingerprint.txt");
+    if !path.exists() {
+        std::fs::write(&path, digest + "\n").expect("bless sweep fingerprint golden");
+        eprintln!(
+            "WARNING: blessed new sweep-fingerprint golden at {} — commit it",
+            path.display()
+        );
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).expect("read sweep fingerprint golden");
+    assert_eq!(
+        golden.trim(),
+        digest,
+        "sweep fingerprint changed: the refactor is NOT bit-identical \
+         (delete {} to re-bless only if the change is intended)",
+        path.display()
+    );
+}
+
+#[test]
 fn report_json_is_valid_and_consistent() {
     use igniter::util::json::Json;
     let report = run_sweep(&cfg(3, 4));

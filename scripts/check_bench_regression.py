@@ -15,7 +15,12 @@ Compares three headline metrics of ``igniter sweep`` output:
   5x widening).  A baseline that predates these metrics simply skips
   them (printed as such) instead of failing the shape check.
 * ``wall.served_per_wall_s``        — sim throughput, higher is better;
-  fail if below ``(1 - wall_tol) x`` baseline.  Wall-clock is
+  fail if below ``(1 - wall_tol) x`` baseline.
+* ``wall.sim_throughput_rps``       — served virtual requests per second
+  of *summed per-task* simulation wall (worker-count independent, the
+  sim-core speed number `benches/simulator.rs` also reports); higher is
+  better, gated like ``served_per_wall_s`` and skipped with a notice
+  when the baseline predates the metric.  Wall-clock is
   machine-noisy (hosted CI runners vary well beyond 20%), so it gets
   its own, wider tolerance and only gates when the baseline carries a
   measured value — bless the baseline FROM A CI ARTIFACT (download the
@@ -158,8 +163,16 @@ def main() -> None:
             gate(name, path, False, det_tol)  # prediction error: lower is better
     if provisional:
         print("  sim_throughput         skipped (baseline throughput is not a measurement)")
+        print("  sim_throughput_rps     skipped (baseline throughput is not a measurement)")
     else:
         gate("sim_throughput", "wall.served_per_wall_s", True, wall_tol)
+        if metric_opt(base, "wall.sim_throughput_rps") is None:
+            print(
+                "  sim_throughput_rps     skipped (baseline lacks "
+                "'wall.sim_throughput_rps' — re-bless to gate it)"
+            )
+        else:
+            gate("sim_throughput_rps", "wall.sim_throughput_rps", True, wall_tol)
 
     if provisional:
         print(
