@@ -5,6 +5,8 @@
 #                     Layer-1 tests, and the CI-quick sweep + bench gate
 #                     (verify mirrors .github/workflows/ci.yml exactly)
 #   make sweep-quick  the CI sweep invocation + baseline gate, standalone
+#   make sweep-full-smoke  the CI full-space smoke lane (8 full-distribution
+#                     scenarios through the indexed placement engine)
 #   make bless-golden regenerate + overwrite the dynamic-summary golden
 #   make bless-bench  re-bless BENCH_baseline.json from a fresh local run
 #   make artifacts    AOT-lower the model zoo to artifacts/ (needs jax)
@@ -14,7 +16,7 @@ CARGO ?= cargo
 PYTHON ?= python
 
 .PHONY: verify build test test-invariants bench-build fmt-check clippy pytest \
-        sweep-quick bless-golden bless-bench artifacts clean
+        sweep-quick sweep-full-smoke bless-golden bless-bench artifacts clean
 
 # `test` already runs every integration target (serving invariants,
 # determinism, sweep determinism, provisioner properties); `bench-build`
@@ -54,6 +56,14 @@ sweep-quick: build
 		--out BENCH_sweep.json
 	$(PYTHON) scripts/check_bench_regression.py BENCH_baseline.json BENCH_sweep.json
 
+# The CI full-space smoke lane: a few full-distribution scenarios (up to
+# 1000 workloads) exercising the indexed placement engine end-to-end.
+# Ungated (no full-space baseline); the job-level timeout in CI is the
+# budget it must fit.
+sweep-full-smoke: build
+	$(CARGO) run --release -- sweep --full --scenarios 8 --seeds 1 --parallel 8 \
+		--out BENCH_full_smoke.json
+
 # Regenerate the dynamic-summary golden and the pinned sweep-fingerprint
 # digest from this machine's run, overwriting the checked-in files
 # (commit the result; see rust/tests/golden/README.md for when
@@ -78,4 +88,4 @@ artifacts:
 
 clean:
 	$(CARGO) clean
-	rm -rf results BENCH_sweep.json
+	rm -rf results BENCH_sweep.json BENCH_full_smoke.json

@@ -1,0 +1,60 @@
+//! Bench: the fleet-scale placement engine vs the retained linear scan.
+//!
+//! Alg. 1 placement at 50/200/1000 workloads, both through the indexed
+//! `PlacementEngine` (headroom buckets + persistent per-device scorers +
+//! admissible pruning — the default `provision_with` path) and through
+//! the retained exhaustive reference (`provision_with_linear`).  The two
+//! must produce bit-identical plans — asserted here before timing, so a
+//! bench run that would publish numbers for divergent plans aborts.
+//!
+//! Prints `plan_throughput_pps` (placement items per wall-second) for
+//! each side — the same work unit `wall.plan_throughput_pps` counts in
+//! `BENCH_sweep.json`, measured here on the pure offline pass.
+
+use igniter::gpu::GpuKind;
+use igniter::perfmodel::AnalyticModel;
+use igniter::provisioner::{igniter as ig, ProfiledSystem};
+use igniter::util::bench::bench;
+use igniter::workload::synthetic_workloads;
+
+fn sys() -> ProfiledSystem {
+    let (hw, wls) = igniter::profiler::profile_all(GpuKind::V100, 42);
+    ProfiledSystem {
+        hw,
+        coeffs: igniter::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+    }
+}
+
+fn main() {
+    println!("== placement-engine benches (indexed vs linear scan) ==");
+    let s = sys();
+
+    for &m in &[50usize, 200, 1000] {
+        let specs = synthetic_workloads(m, 42);
+
+        let indexed = ig::provision_with(&AnalyticModel::ALL, &s, &specs);
+        let linear = ig::provision_with_linear(&AnalyticModel::ALL, &s, &specs);
+        assert_eq!(
+            indexed, linear,
+            "engine diverged from the linear reference at m={m}"
+        );
+        let placements = indexed.total_allocs();
+
+        // the linear scan is ~quadratic in fleet size — keep its
+        // iteration count down at the top end
+        let (warmup, iters) = if m <= 200 { (2, 20) } else { (1, 3) };
+        let lin = bench(&format!("place_linear(m={m})"), warmup, iters, || {
+            ig::provision_with_linear(&AnalyticModel::ALL, &s, &specs)
+        });
+        let idx = bench(&format!("place_indexed(m={m})"), warmup, iters, || {
+            ig::provision_with(&AnalyticModel::ALL, &s, &specs)
+        });
+        let pps = |mean_ns: f64| placements as f64 / (mean_ns / 1e9).max(1e-12);
+        println!(
+            "  m={m}: {placements} placements | plan_throughput_pps linear {:.0} | indexed {:.0} | speedup {:.2}x",
+            pps(lin.mean_ns),
+            pps(idx.mean_ns),
+            lin.mean_ns / idx.mean_ns.max(1e-12),
+        );
+    }
+}

@@ -65,6 +65,13 @@ pub trait ServingPolicy {
     fn prediction_errors(&self) -> &[f64] {
         &[]
     }
+    /// `(performed placements, planning wall ms)` the policy's embedded
+    /// planner accumulated over the run — the serving-side inputs of the
+    /// sweep's `wall.plan_throughput_pps`.  Default: `(0, 0.0)` for
+    /// policies that never re-plan.
+    fn planning_activity(&self) -> (u64, f64) {
+        (0, 0.0)
+    }
 }
 
 /// Static plan: no runtime adjustment.
@@ -217,6 +224,10 @@ pub struct Reprovisioner {
     /// Scratch holding the pre-respec plan for `diff_plans` — absorbed
     /// via `Plan::copy_from` each trigger instead of a fresh deep clone.
     plan_scratch: Plan,
+    /// Wall time spent inside the embedded planner's respec/rebalance
+    /// calls (ms) — the denominator side of `wall.plan_throughput_pps`.
+    /// Measurement only: never feeds a placement or simulation decision.
+    plan_wall_ms: f64,
     /// Re-plan for `observed x safety` so the fresh allocation keeps
     /// headroom while the estimator chases a rising rate.
     pub safety: f64,
@@ -245,6 +256,7 @@ impl Reprovisioner {
             pred_errors: Vec::new(),
             violation_scratch: Vec::new(),
             plan_scratch,
+            plan_wall_ms: 0.0,
             safety: DEFAULT_SAFETY,
             // three monitor ticks: short enough to track a steep diurnal
             // slope step-by-step, long enough to stop per-tick churn
@@ -459,7 +471,10 @@ impl ServingPolicy for Reprovisioner {
                 if !gains {
                     break;
                 }
-                if let Ok((new_id, _)) = self.planner.respec(self.live_ids[w], target) {
+                let t0 = std::time::Instant::now();
+                let res = self.planner.respec(self.live_ids[w], target);
+                self.plan_wall_ms += t0.elapsed().as_secs_f64() * 1e3;
+                if let Ok((new_id, _)) = res {
                     adopted = Some((new_id, target));
                     break;
                 }
@@ -493,7 +508,10 @@ impl ServingPolicy for Reprovisioner {
         {
             self.last_rebalance_ms = now;
             self.plan_scratch.copy_from(self.planner.plan());
-            if self.planner.rebalance().is_some() {
+            let t0 = std::time::Instant::now();
+            let rebalanced = self.planner.rebalance();
+            self.plan_wall_ms += t0.elapsed().as_secs_f64() * 1e3;
+            if rebalanced.is_some() {
                 let moved = diff_plans(
                     &self.plan_scratch,
                     self.planner.plan(),
@@ -518,6 +536,10 @@ impl ServingPolicy for Reprovisioner {
 
     fn prediction_errors(&self) -> &[f64] {
         &self.pred_errors
+    }
+
+    fn planning_activity(&self) -> (u64, f64) {
+        (self.planner.placements(), self.plan_wall_ms)
     }
 }
 

@@ -413,6 +413,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "sim throughput (req/s, 1 core)".into(),
         f(agg.total_served as f64 / sim_wall_s.max(1e-9), 0),
     ]);
+    let placements: u64 = report.results.iter().map(|r| r.placements).sum();
+    let plan_wall_s: f64 = report.results.iter().map(|r| r.plan_wall_ms).sum::<f64>() / 1e3;
+    t.row(&[
+        "plan throughput (placements/s)".into(),
+        f(placements as f64 / plan_wall_s.max(1e-9), 0),
+    ]);
     println!("{}", t.render());
 
     // persist before any failure exit: the per-scenario JSON is exactly

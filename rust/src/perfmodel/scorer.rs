@@ -88,6 +88,28 @@ impl<'a> DeviceScorer<'a> {
         s
     }
 
+    /// Seed from *cached* slot contributions — the placement engine's
+    /// persistent per-device state.  No coefficient-law evaluations run:
+    /// the caller guarantees each `(cache_util, power_w)` pair is the
+    /// cached output of the same pure laws `ScoredSlot::new` evaluates
+    /// for that placement, so the bitwise invariant carries over (the
+    /// in-order `resum` is identical to `from_placed`'s).
+    pub fn from_cached(
+        hw: &'a HardwareCoeffs,
+        slots: impl IntoIterator<Item = (PlacedWorkload<'a>, f64, f64)>,
+    ) -> DeviceScorer<'a> {
+        let mut s = DeviceScorer::new(hw);
+        for (placed, cache_util, power_w) in slots {
+            s.slots.push(ScoredSlot {
+                placed,
+                cache_util,
+                power_w,
+            });
+        }
+        s.resum();
+        s
+    }
+
     pub fn len(&self) -> usize {
         self.slots.len()
     }
@@ -274,6 +296,38 @@ mod tests {
         }
         assert_eq!(bulk.power_demand_w().to_bits(), one.power_demand_w().to_bits());
         assert!((bulk.allocated() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_cached_equals_from_placed_bitwise() {
+        // The engine harvests (cache_util, power_w) once per mutation and
+        // replays them through from_cached — the seeded scorer must be
+        // indistinguishable from a from_placed rebuild.
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::V100, 42);
+        let placed: Vec<PlacedWorkload> = (0..5)
+            .map(|i| PlacedWorkload {
+                coeffs: &wls[i % wls.len()],
+                batch: 2.0 + i as f64,
+                resources: 0.1 + 0.05 * i as f64,
+            })
+            .collect();
+        let full = DeviceScorer::from_placed(&hw, placed.iter().cloned());
+        let cached = DeviceScorer::from_cached(
+            &hw,
+            placed.iter().cloned().map(|p| {
+                let cu = p.coeffs.cache_util(p.batch, p.resources);
+                let pw = p.coeffs.power_w(p.batch, p.resources);
+                (p, cu, pw)
+            }),
+        );
+        assert_eq!(full.len(), cached.len());
+        assert_eq!(
+            full.power_demand_w().to_bits(),
+            cached.power_demand_w().to_bits()
+        );
+        for i in 0..placed.len() {
+            assert_eq!(bits(&full.predict(i)), bits(&cached.predict(i)));
+        }
     }
 
     #[test]

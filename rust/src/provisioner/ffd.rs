@@ -55,10 +55,18 @@ pub fn provision_ffd_pp(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
         rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
     });
 
+    // Running per-device totals, maintained as the same in-order sum
+    // alloc_gpus takes on entry: the headroom pre-skip below is bitwise
+    // the reject it would hit, so first-fit picks the same device while
+    // skipping the resident-copy + predict work on full ones.
+    let mut used: Vec<f64> = Vec::new();
     for &w in &order {
         let d = derived[w].unwrap();
         let mut placed = false;
         for g in 0..plan.gpus.len() {
+            if used[g] + d.r_lower > hw.r_max + 1e-9 {
+                continue;
+            }
             if let Some(alloc) = alloc_gpus(
                 &AnalyticModel::ALL,
                 sys,
@@ -68,6 +76,7 @@ pub fn provision_ffd_pp(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
                 d.r_lower,
                 d.batch,
             ) {
+                used[g] = alloc.iter().map(|a| a.resources).sum();
                 plan.gpus[g] = alloc;
                 placed = true;
                 break; // first fit
@@ -79,6 +88,7 @@ pub fn provision_ffd_pp(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
                 resources: d.r_lower,
                 batch: d.batch,
             }]);
+            used.push(d.r_lower);
         }
     }
     plan

@@ -59,6 +59,15 @@ pub struct TypedPlan {
     pub replicated: ReplicatedSpecs,
 }
 
+impl TypedPlan {
+    /// Placement items Alg. 1 executed to build this plan (every replica
+    /// of every workload) — the per-candidate work unit
+    /// `wall.plan_throughput_pps` counts.
+    pub fn placements(&self) -> usize {
+        self.plan.total_allocs()
+    }
+}
+
 /// Provision with iGniter on one GPU type, replicating as needed
 /// (static analytic scoring).
 pub fn provision_on(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Option<TypedPlan> {

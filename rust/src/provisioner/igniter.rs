@@ -10,6 +10,7 @@
 //! `Plan::replicas`), and `validate_replica_shares` checks every replica's
 //! predicted latency/throughput against its share of the traffic.
 
+use super::engine::PlacementEngine;
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
 use crate::gpu::Model;
 use crate::perfmodel::{self, AnalyticModel, DeviceScorer, PerfModel};
@@ -99,8 +100,25 @@ pub fn alloc_gpus_into(
     }
 
     // Iteratively grow SLO-violating workloads by r_unit (lines 2-11).
-    let terms = model.terms();
     let mut scorer = DeviceScorer::from_placed(hw, sys.placed_of(specs, allocs));
+    grow_allocs(model, hw, specs, &mut scorer, allocs)
+}
+
+/// Algorithm 2's growth loop (lines 2-11), factored out so the placement
+/// engine can run it over a scorer seeded from cached contributions
+/// ([`DeviceScorer::from_cached`]) instead of a fresh `from_placed`
+/// rebuild.  `scorer` must mirror `allocs` slot for slot on entry.
+/// Returns whether the device hosts the set (the same contract as
+/// [`alloc_gpus_into`] after its entry check).
+pub(crate) fn grow_allocs(
+    model: &dyn PerfModel,
+    hw: &crate::perfmodel::HardwareCoeffs,
+    specs: &[WorkloadSpec],
+    scorer: &mut DeviceScorer,
+    allocs: &mut Vec<Alloc>,
+) -> bool {
+    let total = |a: &[Alloc]| -> f64 { a.iter().map(|x| x.resources).sum() };
+    let terms = model.terms();
     let mut flag = true;
     while flag {
         flag = false;
@@ -172,6 +190,38 @@ pub fn provision(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
 /// independently; panics only when a workload stays infeasible past
 /// `MAX_REPLICAS` (i.e. the SLO itself cannot be met at any rate).
 pub fn provision_with(model: &dyn PerfModel, sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Plan {
+    let plan = place_items(model, sys, specs, expand_items(sys, specs));
+    // Static models must always produce a self-consistently valid plan.
+    // A calibrated model is exempt: its corrected SLOs may be genuinely
+    // unsatisfiable on this GPU type (that is the *finding*, not a bug),
+    // in which case the plan is the best-effort growth.
+    if model.observations() == 0 {
+        debug_assert!(
+            validate_replica_shares(model, sys, specs, &plan).is_ok(),
+            "{:?}",
+            validate_replica_shares(model, sys, specs, &plan)
+        );
+    }
+    plan
+}
+
+/// [`provision_with`] driven by the retained exhaustive device scan
+/// (`place_items_linear`) instead of the indexed engine — the bitwise
+/// reference the differential tests and the provisioner bench pin the
+/// engine against.
+pub fn provision_with_linear(
+    model: &dyn PerfModel,
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+) -> Plan {
+    place_items_linear(model, sys, specs, expand_items(sys, specs))
+}
+
+/// Expand workloads into placement items: feasible workloads place once;
+/// over-capacity workloads split into the minimum even rate-sharing
+/// replica count, one item per replica.  Panics only when a workload
+/// stays infeasible past `MAX_REPLICAS`.
+fn expand_items(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Vec<(usize, Derived)> {
     let derived = derive_all(sys, specs);
     let mut items: Vec<(usize, Derived)> = Vec::new();
     for (w, d) in derived.iter().enumerate() {
@@ -190,19 +240,7 @@ pub fn provision_with(model: &dyn PerfModel, sys: &ProfiledSystem, specs: &[Work
             }
         }
     }
-    let plan = place_items(model, sys, specs, items);
-    // Static models must always produce a self-consistently valid plan.
-    // A calibrated model is exempt: its corrected SLOs may be genuinely
-    // unsatisfiable on this GPU type (that is the *finding*, not a bug),
-    // in which case the plan is the best-effort growth.
-    if model.observations() == 0 {
-        debug_assert!(
-            validate_replica_shares(model, sys, specs, &plan).is_ok(),
-            "{:?}",
-            validate_replica_shares(model, sys, specs, &plan)
-        );
-    }
-    plan
+    items
 }
 
 /// Alg. 1 over an externally derived set (the heterogeneous wrapper
@@ -214,18 +252,68 @@ pub fn provision_with_derived(
     specs: &[WorkloadSpec],
     derived: &[Option<Derived>],
 ) -> Plan {
-    let items: Vec<(usize, Derived)> = derived
+    place_items(model, sys, specs, derived_items(derived))
+}
+
+/// [`provision_with_derived`] on the retained exhaustive scan — the
+/// linear reference for the heterogeneous provisioning path.
+pub fn provision_with_derived_linear(
+    model: &dyn PerfModel,
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+    derived: &[Option<Derived>],
+) -> Plan {
+    place_items_linear(model, sys, specs, derived_items(derived))
+}
+
+fn derived_items(derived: &[Option<Derived>]) -> Vec<(usize, Derived)> {
+    derived
         .iter()
         .enumerate()
         .filter_map(|(w, d)| d.map(|d| (w, d)))
-        .collect();
-    place_items(model, sys, specs, items)
+        .collect()
 }
 
 /// Shared placement loop of Alg. 1: sort items by `r_lower` descending
 /// and greedily place each on the GPU with minimum increased-interference
 /// resources, provisioning a fresh GPU when none fits.
+///
+/// The device scan runs on the indexed [`PlacementEngine`] (headroom
+/// buckets + persistent per-device scorer state + admissible pruning) —
+/// bitwise plan-identical to [`place_items_linear`], pinned by the
+/// differential property tests in `engine.rs` and
+/// `tests/provisioner_invariants.rs`.
 fn place_items(
+    model: &dyn PerfModel,
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+    mut items: Vec<(usize, Derived)>,
+) -> Plan {
+    let mut plan = Plan::new("iGniter", &sys.hw);
+    plan.gpus.push(Vec::new()); // g <- 1
+
+    // Sort by r_lower descending (line 3); the sort is stable, so equal
+    // keys — in particular replicas of one workload — keep their order.
+    items.sort_by(|(wa, da), (wb, db)| {
+        db.r_lower
+            .partial_cmp(&da.r_lower)
+            .unwrap()
+            .then(wa.cmp(wb))
+    });
+
+    let mut engine = PlacementEngine::new(&sys.hw);
+    engine.push_device(sys, specs, &[]);
+    for &(w, d) in &items {
+        engine.place(model, sys, specs, &mut plan, w, d);
+    }
+    plan
+}
+
+/// The retained exhaustive placement loop: scans every device per item
+/// with a fresh `alloc_gpus` probe.  O(items × devices × growth) — kept
+/// verbatim as the bitwise reference the engine is pinned against, and
+/// as the baseline side of `benches/provisioner.rs`.
+pub fn place_items_linear(
     model: &dyn PerfModel,
     sys: &ProfiledSystem,
     specs: &[WorkloadSpec],
@@ -246,9 +334,7 @@ fn place_items(
 
     // Running per-device allocation totals: a device without `r_lower`
     // headroom can never host the item (alloc_gpus' entry check), so it
-    // is skipped before the resident-copy + predict work.  At sweep
-    // scale most devices are near-full, so this prunes almost every
-    // candidate of the O(m) inner scan.
+    // is skipped before the resident-copy + predict work.
     let mut used: Vec<f64> = vec![0.0];
 
     for &(w, d) in &items {
@@ -315,23 +401,70 @@ fn place_items(
     plan
 }
 
+/// One exhaustive min-`r_inter` scan over the current devices for a
+/// single item — the per-step linear reference `engine::search` is
+/// differentially tested against.  Returns the winning device, its grown
+/// allocation list, and its `r_inter`, or `None` when no device fits.
+pub fn find_best_linear(
+    model: &dyn PerfModel,
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+    gpus: &[Vec<Alloc>],
+    w: usize,
+    d: Derived,
+) -> Option<(usize, Vec<Alloc>, f64)> {
+    let hw = &sys.hw;
+    let mut best: Option<(usize, Vec<Alloc>, f64)> = None;
+    for (g, residents) in gpus.iter().enumerate() {
+        let entry: f64 = residents.iter().map(|a| a.resources).sum();
+        if entry + d.r_lower > hw.r_max + 1e-9 {
+            continue;
+        }
+        if let Some(alloc) = alloc_gpus(model, sys, specs, residents, w, d.r_lower, d.batch) {
+            let mut r_inter = 0.0;
+            for (i, a) in alloc.iter().enumerate() {
+                let before = if i < residents.len() {
+                    residents[i].resources
+                } else {
+                    d.r_lower
+                };
+                r_inter += a.resources - before;
+            }
+            let better = match &best {
+                None => true,
+                Some((_, _, b)) => r_inter < *b - 1e-12,
+            };
+            if better {
+                best = Some((g, alloc, r_inter));
+            }
+        }
+    }
+    best
+}
+
 /// Validate every allocation of a plan against its *replica share* of the
 /// workload's traffic under `model`: predicted `t_inf <= T_slo / 2` and
 /// predicted throughput covering `rate / replica_count` (the even
 /// per-replica arrival split the coordinator's router realizes).
+///
+/// Predictions run through one [`DeviceScorer`] per GPU — the device
+/// aggregates are summed once, so validation is O(allocations) instead
+/// of O(allocations × residents).  Bit-identical to per-slot
+/// `model.predict` (the scorer property tests pin this).
 pub fn validate_replica_shares(
     model: &dyn PerfModel,
     sys: &ProfiledSystem,
     specs: &[WorkloadSpec],
     plan: &Plan,
 ) -> Result<(), String> {
+    let terms = model.terms();
     for g in 0..plan.gpus.len() {
-        let placed = plan.placed_device(sys, specs, g);
+        let scorer = DeviceScorer::from_placed(&sys.hw, plan.placed_device(sys, specs, g));
         for (i, a) in plan.gpus[g].iter().enumerate() {
             let spec = &specs[a.workload];
             let k = plan.replica_count(a.workload).max(1);
             let share = spec.rate_rps / k as f64;
-            let p = model.predict(&sys.hw, &placed, i);
+            let p = model.correct(&scorer.placed(i).coeffs.name, scorer.predict_with(i, terms));
             if p.t_inf > spec.slo_ms / 2.0 + 1e-6 {
                 return Err(format!(
                     "gpu {g}: {} replica predicted t_inf {:.2} > half-SLO {:.2}",

@@ -2,6 +2,7 @@
 //! and the Sec.-5.1 baselines (FFD+, FFD++, GSLICE+, gpu-lets+), plus the
 //! heterogeneous-cluster extension.
 
+pub mod engine;
 pub mod ffd;
 pub mod gpulets;
 pub mod gslice;
@@ -10,9 +11,11 @@ pub mod igniter;
 pub mod online;
 pub mod types;
 
+pub use engine::PlacementEngine;
 pub use igniter::{
-    alloc_gpus, alloc_gpus_into, derive_all, predict_plan, provision, provision_with,
-    replica_split, validate_replica_shares, Derived, MAX_REPLICAS,
+    alloc_gpus, alloc_gpus_into, derive_all, find_best_linear, predict_plan, provision,
+    provision_with, provision_with_linear, replica_split, validate_replica_shares, Derived,
+    MAX_REPLICAS,
 };
 pub use online::{OnlinePlanner, Placed};
 pub use types::{diff_plans, Alloc, Migration, Plan, PlanDelta, ProfiledSystem, WorkloadSpec};

@@ -7,9 +7,8 @@
 //! from-scratch Alg.-1 plan to decide whether a full re-pack would save
 //! instances (the paper's periodic execution).
 
-use super::igniter::{
-    alloc_gpus_into, derive_all, provision_with, provision_with_derived, replica_split, Derived,
-};
+use super::engine::PlacementEngine;
+use super::igniter::{derive_all, provision_with, provision_with_derived, replica_split, Derived};
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
 use crate::perfmodel::{model, AnalyticModel, PerfModel, Prediction};
 use crate::util::error::{anyhow, Result};
@@ -31,10 +30,16 @@ pub struct OnlinePlanner {
     /// so the atomic-rollback guarantee stops costing a deep clone per
     /// re-plan attempt.
     rollback: Plan,
-    /// Candidate / best-so-far allocation scratch for `place`'s
-    /// per-device `alloc_gpus_into` probes.
-    cand_scratch: Vec<Alloc>,
-    best_scratch: Vec<Alloc>,
+    /// The persistent indexed placement engine: headroom buckets +
+    /// per-device scorer state, kept in sync with `plan` across every
+    /// mutation (place syncs itself; remove/respec-rollback/rebalance
+    /// resync explicitly) so each arrival probe reuses the maintained
+    /// state instead of rebuilding it per device.
+    engine: PlacementEngine,
+    /// Placement items executed so far (initial plan + every later
+    /// arrival/respec replica) — the numerator of
+    /// `wall.plan_throughput_pps`.
+    placements: u64,
 }
 
 /// Outcome of an arrival.
@@ -50,6 +55,7 @@ impl OnlinePlanner {
     /// Start with an empty cluster (static analytic model).
     pub fn new(sys: ProfiledSystem) -> OnlinePlanner {
         let plan = Plan::new("iGniter-online", &sys.hw);
+        let engine = PlacementEngine::new(&sys.hw);
         OnlinePlanner {
             sys,
             specs: Vec::new(),
@@ -57,14 +63,15 @@ impl OnlinePlanner {
             plan,
             active: Vec::new(),
             model: Box::new(AnalyticModel::ALL),
-            cand_scratch: Vec::new(),
-            best_scratch: Vec::new(),
+            engine,
+            placements: 0,
         }
     }
 
     /// Start from an existing offline plan (static analytic model).
     pub fn from_plan(sys: ProfiledSystem, specs: Vec<WorkloadSpec>, plan: Plan) -> OnlinePlanner {
         let active = vec![true; specs.len()];
+        let engine = PlacementEngine::from_plan(&sys, &specs, &plan);
         OnlinePlanner {
             sys,
             specs,
@@ -72,8 +79,8 @@ impl OnlinePlanner {
             plan,
             active,
             model: Box::new(AnalyticModel::ALL),
-            cand_scratch: Vec::new(),
-            best_scratch: Vec::new(),
+            engine,
+            placements: 0,
         }
     }
 
@@ -137,82 +144,33 @@ impl OnlinePlanner {
     }
 
     /// Greedy min-interference placement of one allocation item (Alg. 1
-    /// inner loop against the current live allocations).
+    /// inner loop against the current live allocations), through the
+    /// persistent indexed engine — decision-identical to the retained
+    /// exhaustive scan (`igniter::find_best_linear`), which had no
+    /// headroom skip: the engine's exact entry check is bitwise the
+    /// reject `alloc_gpus_into` would hit on those devices anyway.
     fn place(&mut self, id: usize, derived: Derived) -> Placed {
-        // Scratch buffers live on the planner: the candidate probe below
-        // runs once per (device, target) pair under the serving loop, and
-        // `alloc_gpus_into` keeps the capacity across all of them.
-        let mut cand = std::mem::take(&mut self.cand_scratch);
-        let mut best_alloc = std::mem::take(&mut self.best_scratch);
-        let mut best: Option<(usize, f64)> = None;
-        for g in 0..self.plan.gpus.len() {
-            if alloc_gpus_into(
-                self.model.as_ref(),
-                &self.sys,
-                &self.specs,
-                &self.plan.gpus[g],
-                id,
-                derived.r_lower,
-                derived.batch,
-                &mut cand,
-            ) {
-                // `alloc_gpus_into` preserves order (residents first, the
-                // new item last), so the growth comparison is positional —
-                // replicas of one workload co-resident on a device stay
-                // distinct (same rule as igniter::place_items).
-                let mut r_inter = 0.0;
-                for (i, a) in cand.iter().enumerate() {
-                    let before = if i < self.plan.gpus[g].len() {
-                        self.plan.gpus[g][i].resources
-                    } else {
-                        derived.r_lower
-                    };
-                    r_inter += a.resources - before;
-                }
-                if best.map_or(true, |(_, b)| r_inter < b - 1e-12) {
-                    best = Some((g, r_inter));
-                    std::mem::swap(&mut best_alloc, &mut cand);
-                }
-            }
+        self.placements += 1;
+        let (g, fresh) = self.engine.place(
+            self.model.as_ref(),
+            &self.sys,
+            &self.specs,
+            &mut self.plan,
+            id,
+            derived,
+        );
+        if fresh {
+            Placed::NewGpu(g)
+        } else {
+            Placed::Existing(g)
         }
-        let placed = match best {
-            Some((g, _)) => {
-                self.plan.gpus[g].clone_from(&best_alloc);
-                Placed::Existing(g)
-            }
-            None => {
-                // Fresh device: still score through alloc_gpus_into (a
-                // no-op growth for the analytic model, a real one for a
-                // calibrated model that knows the class runs slow).  When
-                // even full-device growth cannot meet the corrected bound
-                // (false), the best effort on an idle device is the FULL
-                // device — falling back to the analytic minimum would
-                // *shrink* a workload that is known to run slow.
-                let ok = alloc_gpus_into(
-                    self.model.as_ref(),
-                    &self.sys,
-                    &self.specs,
-                    &[],
-                    id,
-                    derived.r_lower,
-                    derived.batch,
-                    &mut cand,
-                );
-                if !ok {
-                    cand.clear();
-                    cand.push(Alloc {
-                        workload: id,
-                        resources: self.sys.hw.r_max,
-                        batch: derived.batch,
-                    });
-                }
-                self.plan.gpus.push(cand.clone());
-                Placed::NewGpu(self.plan.gpus.len() - 1)
-            }
-        };
-        self.cand_scratch = cand;
-        self.best_scratch = best_alloc;
-        placed
+    }
+
+    /// Placement items executed so far: the denominator work-count of
+    /// `wall.plan_throughput_pps` (each arrival replica, respec replica,
+    /// and adopted-rebalance allocation counts once).
+    pub fn placements(&self) -> u64 {
+        self.placements
     }
 
     /// Handle a departed workload: free its partition.  Co-residents keep
@@ -222,8 +180,13 @@ impl OnlinePlanner {
             return Err(anyhow!("workload {id} not active"));
         }
         self.active[id] = false;
-        for g in &mut self.plan.gpus {
-            g.retain(|a| a.workload != id);
+        for g in 0..self.plan.gpus.len() {
+            let before = self.plan.gpus[g].len();
+            self.plan.gpus[g].retain(|a| a.workload != id);
+            if self.plan.gpus[g].len() != before {
+                self.engine
+                    .sync_device(g, &self.sys, &self.specs, &self.plan.gpus[g]);
+            }
         }
         Ok(())
     }
@@ -249,9 +212,12 @@ impl OnlinePlanner {
             .remove(id)
             .and_then(|()| self.add(WorkloadSpec::new(0, model, slo_ms, new_rate_rps)));
         if res.is_err() {
-            // rollback: re-activate the old placement untouched
+            // rollback: re-activate the old placement untouched, and
+            // re-mirror the engine onto the restored plan (the failed
+            // attempt's remove already resynced some devices).
             self.active[id] = true;
             std::mem::swap(&mut self.plan, &mut rollback);
+            self.engine.rebuild(&self.sys, &self.specs, &self.plan);
         }
         self.rollback = rollback;
         res
@@ -269,6 +235,7 @@ impl OnlinePlanner {
             .collect();
         if live.is_empty() {
             self.plan.gpus.clear();
+            self.engine.rebuild(&self.sys, &self.specs, &self.plan);
             return Some(0);
         }
         // Re-index into a dense spec set for the offline pass.
@@ -286,6 +253,8 @@ impl OnlinePlanner {
         } else {
             provision_with_derived(self.model.as_ref(), &self.sys, &dense, &derived)
         };
+        // the from-scratch pass executed one placement item per allocation
+        self.placements += fresh.total_allocs() as u64;
         if fresh.num_gpus() < self.occupied_gpus() {
             // translate back to original ids
             let mut gpus = Vec::new();
@@ -301,6 +270,7 @@ impl OnlinePlanner {
                 );
             }
             self.plan.gpus = gpus;
+            self.engine.rebuild(&self.sys, &self.specs, &self.plan);
             Some(self.occupied_gpus())
         } else {
             None

@@ -68,6 +68,12 @@ impl Plan {
         self.gpus.len()
     }
 
+    /// Total allocations across all devices (every replica counts once) —
+    /// the number of placement items Alg. 1 executed to build the plan.
+    pub fn total_allocs(&self) -> usize {
+        self.gpus.iter().map(|g| g.len()).sum()
+    }
+
     /// Become a copy of `other`, reusing this plan's existing allocations
     /// (strings, outer `Vec`, per-device `Vec`s) instead of deep-cloning.
     /// The online loop snapshots the standing plan every trigger

@@ -130,7 +130,14 @@ fn result_json(r: &ScenarioResult, with_wall: bool) -> Json {
         .set("pred_err_p95", r.pred_err_p95)
         .set("pred_err_samples", r.pred_err_samples);
     if with_wall {
-        j = j.set("wall_ms", r.wall_ms);
+        // `placements` is deterministic, but it is a work count feeding
+        // `plan_throughput_pps`, not a scenario outcome — it stays in the
+        // wall section so the deterministic fingerprint (and its FNV-1a
+        // golden) is byte-identical to pre-engine reports.
+        j = j
+            .set("wall_ms", r.wall_ms)
+            .set("placements", r.placements)
+            .set("plan_wall_ms", r.plan_wall_ms);
     }
     j
 }
@@ -190,6 +197,13 @@ impl SweepReport {
         // refactors are gated on (`benches/simulator.rs`,
         // `check_bench_regression.py`).
         let sim_wall_s: f64 = self.results.iter().map(|r| r.wall_ms).sum::<f64>() / 1e3;
+        // Placement-engine throughput: placement items executed (initial
+        // provisioning over every candidate GPU type + every closed-loop
+        // respec/rebalance placement) per second of summed planning wall.
+        // The number the provisioner-engine refactors are gated on
+        // (`benches/provisioner.rs`, `check_bench_regression.py`).
+        let placements: u64 = self.results.iter().map(|r| r.placements).sum();
+        let plan_wall_s: f64 = self.results.iter().map(|r| r.plan_wall_ms).sum::<f64>() / 1e3;
         Json::obj()
             .set("wall_s", self.wall_s)
             .set("scenarios_per_s", self.results.len() as f64 / wall)
@@ -197,6 +211,11 @@ impl SweepReport {
             .set(
                 "sim_throughput_rps",
                 agg.total_served as f64 / sim_wall_s.max(1e-9),
+            )
+            .set("total_placements", placements)
+            .set(
+                "plan_throughput_pps",
+                placements as f64 / plan_wall_s.max(1e-9),
             )
             .set("parallel", self.config.parallel)
     }
@@ -249,6 +268,8 @@ mod tests {
             pred_err_mean: 0.2,
             pred_err_p95: 0.5,
             pred_err_samples: 40,
+            placements: 50,
+            plan_wall_ms: 2.5,
             wall_ms: 12.5,
         }
     }
@@ -310,6 +331,9 @@ mod tests {
         let mut slower = a.clone();
         slower.wall_s = 99.0;
         slower.results[0].wall_ms = 9999.0;
+        // the planning work-count/wall live in the wall section only
+        slower.results[0].placements = 77;
+        slower.results[0].plan_wall_ms = 123.0;
         assert_eq!(a.fingerprint(), slower.fingerprint());
         // ...while any deterministic metric changes it
         let mut different = a.clone();
@@ -328,6 +352,11 @@ mod tests {
         // total_served / (sum of per-task sim wall): 1000 / 0.0125 s
         let sim_rps = parsed.path("wall.sim_throughput_rps").unwrap().as_f64().unwrap();
         assert!((sim_rps - 1000.0 / 0.0125).abs() < 1e-6, "sim_rps {sim_rps}");
+        // placements / (sum of per-task planning wall): 50 / 0.0025 s
+        assert_eq!(parsed.path("wall.total_placements").unwrap().as_u64(), Some(50));
+        let pps = parsed.path("wall.plan_throughput_pps").unwrap().as_f64().unwrap();
+        assert!((pps - 50.0 / 0.0025).abs() < 1e-6, "plan_pps {pps}");
+        assert_eq!(parsed.path("scenarios.0.placements").unwrap().as_u64(), Some(50));
         assert_eq!(parsed.path("config.master_seed").unwrap().as_u64(), Some(42));
     }
 }

@@ -84,6 +84,15 @@ pub struct ScenarioResult {
     pub pred_err_mean: f64,
     pub pred_err_p95: f64,
     pub pred_err_samples: u64,
+    /// Placement items executed for this task: the initial provisioning
+    /// pass over every candidate GPU type (charged to seed 0, where the
+    /// shared work happens) plus every closed-loop respec/rebalance
+    /// placement.  Deterministic, but serialized only in the wall section
+    /// (it is a work count for `plan_throughput_pps`, not a result).
+    pub placements: u64,
+    /// Wall-clock spent inside placement (provisioning + online
+    /// re-plans); subset of `wall_ms` (NOT deterministic).
+    pub plan_wall_ms: f64,
     /// Wall-clock of provision + simulate (NOT deterministic).
     pub wall_ms: f64,
 }
@@ -95,6 +104,9 @@ struct Provisioned {
     plan: crate::provisioner::Plan,
     /// Replicated spec set (rate shares) the plan indexes.
     rspecs: Vec<crate::provisioner::WorkloadSpec>,
+    /// Placement items Alg. 1 executed across ALL candidate GPU types
+    /// (cheapest-selection provisions every type, not just the winner).
+    placements: u64,
 }
 
 /// Provision the cheapest fleet shape for a scenario; `None` when no
@@ -105,12 +117,14 @@ fn provision_scenario(scenario: &Scenario, systems: &[ProfiledSystem]) -> Option
     if candidates.is_empty() {
         return None;
     }
+    let placements: u64 = candidates.iter().map(|tp| tp.placements() as u64).sum();
     let tp = candidates.remove(0);
     let kind = GpuKind::parse(&tp.plan.gpu).expect("plan carries a known GPU type");
     Some(Provisioned {
         kind,
         plan: tp.plan,
         rspecs: tp.replicated.specs,
+        placements,
     })
 }
 
@@ -147,6 +161,8 @@ fn serve_task(
         pred_err_mean: 0.0,
         pred_err_p95: 0.0,
         pred_err_samples: 0,
+        placements: 0,
+        plan_wall_ms: 0.0,
         wall_ms: 0.0,
     };
     let Some(p) = prov else {
@@ -196,6 +212,9 @@ fn serve_task(
         result.pred_err_p95 = percentile(errs, 0.95);
         result.pred_err_samples = errs.len() as u64;
     }
+    let (placements, plan_wall_ms) = sim.serving_policy().planning_activity();
+    result.placements = placements;
+    result.plan_wall_ms = plan_wall_ms;
     result.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     result
 }
@@ -212,6 +231,8 @@ pub fn run_task(cfg: &SweepConfig, systems: &[ProfiledSystem], task: usize) -> S
     let prov_ms = t0.elapsed().as_secs_f64() * 1e3;
     let mut r = serve_task(cfg, &believed, &scenario, prov.as_ref(), task);
     r.wall_ms += prov_ms;
+    r.plan_wall_ms += prov_ms;
+    r.placements += prov.as_ref().map_or(0, |p| p.placements);
     r
 }
 
@@ -233,6 +254,8 @@ fn run_scenario(
         .map(|si| serve_task(cfg, &believed, &scenario, prov.as_ref(), scenario_id * seeds + si))
         .collect();
     out[0].wall_ms += prov_ms;
+    out[0].plan_wall_ms += prov_ms;
+    out[0].placements += prov.as_ref().map_or(0, |p| p.placements);
     out
 }
 

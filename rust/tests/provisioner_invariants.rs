@@ -335,6 +335,77 @@ fn online_planner_never_overcommits_and_keeps_slos() {
 }
 
 #[test]
+fn indexed_placement_matches_linear_reference_on_sweep_scenarios() {
+    // The PR-7 differential pin at integration scale: over random quick()
+    // scenarios and a capped full()-space sample, the engine-backed
+    // provisioning path (headroom index + persistent scorers + admissible
+    // pruning) must produce plans equal to the retained exhaustive scan —
+    // f64-equal allocation by allocation (`Plan: PartialEq`), on every
+    // profiled GPU type, through the same heterogeneous front-end the
+    // sweep runner uses (replicate_for -> derive_all ->
+    // provision_with_derived).
+    use igniter::provisioner::heterogeneous;
+    use igniter::sweep::{Scenario, ScenarioSpace};
+
+    let pair = igniter::sweep::profiled_pair(42);
+    let mut small_full = ScenarioSpace::full();
+    // the linear reference is ~quadratic in fleet size — cap the mix so
+    // the reference side stays test-budget sized while still exercising
+    // fleets an order of magnitude past quick()
+    small_full.min_workloads = 60;
+    small_full.max_workloads = 120;
+    let lanes: [(&ScenarioSpace, u64, usize); 2] =
+        [(&ScenarioSpace::quick(), 9001, 5), (&small_full, 9002, 2)];
+
+    for (space, master, count) in lanes {
+        for id in 0..count {
+            let scenario = Scenario::generate(space, master, id);
+            for sys in &pair {
+                let Some(replicated) = heterogeneous::replicate_for(sys, &scenario.specs) else {
+                    continue; // infeasible on this GPU type
+                };
+                let derived = ig::derive_all(sys, &replicated.specs);
+                if derived.iter().any(|d| d.is_none()) {
+                    continue;
+                }
+                let indexed =
+                    ig::provision_with_derived(&AnalyticModel::ALL, sys, &replicated.specs, &derived);
+                let linear = ig::provision_with_derived_linear(
+                    &AnalyticModel::ALL,
+                    sys,
+                    &replicated.specs,
+                    &derived,
+                );
+                assert_eq!(
+                    indexed, linear,
+                    "engine diverged on scenario {id} (master {master}) on {}",
+                    sys.hw.gpu
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn indexed_provision_matches_linear_through_replica_splitting_front_end() {
+    // Same pin through provision_with's own replica-splitting expansion
+    // (the offline path the OnlinePlanner's rebalance also takes).
+    forall(808, 25, gen_specs, |gs| {
+        let specs = to_specs(gs);
+        let indexed = ig::provision_with(&AnalyticModel::ALL, &SYS, &specs);
+        let linear = ig::provision_with_linear(&AnalyticModel::ALL, &SYS, &specs);
+        if indexed != linear {
+            return Err(format!(
+                "engine diverged: {} vs {} GPUs",
+                indexed.num_gpus(),
+                linear.num_gpus()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn gpulets_structural_invariants() {
     forall(606, 40, gen_specs, |gs| {
         let specs = to_specs(gs);

@@ -139,8 +139,13 @@ fn single_task_replays_bit_identically() {
         let systems = profiled_pair(42);
         run_task(&c, &systems, 3)
     };
+    // `placements` is deterministic and must replay identically; only
+    // the wall clocks are exempt
+    assert_eq!(a.placements, b.placements);
+    assert!(a.placements > 0, "task performed no placements");
     let strip = |mut r: igniter::sweep::ScenarioResult| {
         r.wall_ms = 0.0;
+        r.plan_wall_ms = 0.0;
         r
     };
     assert_eq!(strip(a), strip(b));
@@ -200,4 +205,10 @@ fn report_json_is_valid_and_consistent() {
     // wall section present but quarantined from the fingerprint
     assert!(parsed.path("wall.wall_s").unwrap().as_f64().unwrap() >= 0.0);
     assert!(!report.fingerprint().contains("wall_ms"));
+    // the placement-engine throughput is measured and nonzero, and its
+    // inputs stay out of the deterministic subset with the other wall data
+    assert!(parsed.path("wall.plan_throughput_pps").unwrap().as_f64().unwrap() > 0.0);
+    assert!(parsed.path("wall.total_placements").unwrap().as_u64().unwrap() > 0);
+    assert!(!report.fingerprint().contains("placements"));
+    assert!(!report.fingerprint().contains("plan_wall_ms"));
 }

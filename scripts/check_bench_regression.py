@@ -20,7 +20,13 @@ Compares three headline metrics of ``igniter sweep`` output:
   of *summed per-task* simulation wall (worker-count independent, the
   sim-core speed number `benches/simulator.rs` also reports); higher is
   better, gated like ``served_per_wall_s`` and skipped with a notice
-  when the baseline predates the metric.  Wall-clock is
+  when the baseline predates the metric.
+* ``wall.plan_throughput_pps``      — placement items per second of
+  summed planning wall (offline Alg. 1 passes plus online
+  respec/rebalance re-planning — the placement-engine speed number
+  `benches/provisioner.rs` also reports); higher is better, gated like
+  ``sim_throughput_rps`` and skipped with a notice when the baseline
+  predates the metric (pre-PR-7 baselines).  Wall-clock is
   machine-noisy (hosted CI runners vary well beyond 20%), so it gets
   its own, wider tolerance and only gates when the baseline carries a
   measured value — bless the baseline FROM A CI ARTIFACT (download the
@@ -103,6 +109,13 @@ def main() -> None:
     samples = metric_opt(cand, "aggregate.pred_err_samples")
     if samples is not None and samples <= 0:
         die("sweep recorded no prediction-error samples (telemetry path broken)")
+    # Same for placement telemetry: a candidate emitting the planning
+    # throughput with zero placements behind it means the counter plumbing
+    # (provisioner -> planner -> runner) broke, and the wall gate below
+    # would happily compare a meaningless number.
+    placements = metric_opt(cand, "wall.total_placements")
+    if placements is not None and placements <= 0:
+        die("sweep recorded no placements (placement-engine telemetry broken)")
 
     # -- comparability: the sweep shape must match the baseline's --------
     # (a different scenario count / seed count / master seed / space draws
@@ -164,15 +177,20 @@ def main() -> None:
     if provisional:
         print("  sim_throughput         skipped (baseline throughput is not a measurement)")
         print("  sim_throughput_rps     skipped (baseline throughput is not a measurement)")
+        print("  plan_throughput_pps    skipped (baseline throughput is not a measurement)")
     else:
         gate("sim_throughput", "wall.served_per_wall_s", True, wall_tol)
-        if metric_opt(base, "wall.sim_throughput_rps") is None:
-            print(
-                "  sim_throughput_rps     skipped (baseline lacks "
-                "'wall.sim_throughput_rps' — re-bless to gate it)"
-            )
-        else:
-            gate("sim_throughput_rps", "wall.sim_throughput_rps", True, wall_tol)
+        for name, path in [
+            ("sim_throughput_rps", "wall.sim_throughput_rps"),
+            ("plan_throughput_pps", "wall.plan_throughput_pps"),
+        ]:
+            if metric_opt(base, path) is None:
+                print(
+                    f"  {name:<22} skipped (baseline lacks "
+                    f"'{path}' — re-bless to gate it)"
+                )
+            else:
+                gate(name, path, True, wall_tol)
 
     if provisional:
         print(
