@@ -7,6 +7,10 @@
 #   make sweep-quick  the CI sweep invocation + baseline gate, standalone
 #   make sweep-full-smoke  the CI full-space smoke lane (8 full-distribution
 #                     scenarios through the indexed placement engine)
+#   make sweep-chaos  the CI chaos lane: seeded fault injection
+#                     (deaths/stragglers/hangs) served through the
+#                     resilience stack, gated once a chaos baseline exists
+#   make bless-bench-chaos  bless BENCH_baseline_chaos.json from a local run
 #   make bless-golden regenerate + overwrite the dynamic-summary golden
 #   make bless-bench  re-bless BENCH_baseline.json from a fresh local run
 #   make artifacts    AOT-lower the model zoo to artifacts/ (needs jax)
@@ -16,14 +20,15 @@ CARGO ?= cargo
 PYTHON ?= python
 
 .PHONY: verify build test test-invariants bench-build fmt-check clippy pytest \
-        sweep-quick sweep-full-smoke bless-golden bless-bench artifacts clean
+        sweep-quick sweep-full-smoke sweep-chaos bless-golden bless-bench \
+        bless-bench-chaos artifacts clean
 
 # `test` already runs every integration target (serving invariants,
 # determinism, sweep determinism, provisioner properties); `bench-build`
 # compiles every bench target (`cargo bench --no-run`), including the
 # sim-core throughput bench in benches/simulator.rs; `sweep-quick` runs
 # the same sweep + regression gate as the CI bench-sweep job.
-verify: build test bench-build fmt-check clippy pytest sweep-quick
+verify: build test bench-build fmt-check clippy pytest sweep-quick sweep-chaos
 	@echo "verify: OK"
 
 # Standalone pass over just the serving/provisioning invariant +
@@ -64,6 +69,20 @@ sweep-full-smoke: build
 	$(CARGO) run --release -- sweep --full --scenarios 8 --seeds 1 --parallel 8 \
 		--out BENCH_full_smoke.json
 
+# The CI chaos lane: seeded fault plans (device deaths, stragglers,
+# replica hangs) served through breakers/shed/hedge + failover respec.
+# The binary enforces the structural bars (drops explicit, bounded);
+# the run-over-run recovery/drop gates engage once a chaos baseline is
+# blessed (bless-bench-chaos, or commit a green CI run's artifact).
+sweep-chaos: build
+	$(CARGO) run --release -- sweep --faults --scenarios 48 --seeds 2 --parallel 8 \
+		--out BENCH_chaos.json
+	@if [ -f BENCH_baseline_chaos.json ]; then \
+		$(PYTHON) scripts/check_bench_regression.py BENCH_baseline_chaos.json BENCH_chaos.json; \
+	else \
+		echo "chaos lane ungated — run 'make bless-bench-chaos' and commit BENCH_baseline_chaos.json"; \
+	fi
+
 # Regenerate the dynamic-summary golden and the pinned sweep-fingerprint
 # digest from this machine's run, overwriting the checked-in files
 # (commit the result; see rust/tests/golden/README.md for when
@@ -80,6 +99,13 @@ bless-bench: build
 		--out BENCH_baseline.json
 	@echo "BENCH_baseline.json re-blessed from this run — review and commit it"
 
+# Promote a fresh chaos sweep to the chaos baseline (same shape as the
+# sweep-chaos lane so the gate's config check matches).
+bless-bench-chaos: build
+	$(CARGO) run --release -- sweep --faults --scenarios 48 --seeds 2 --parallel 8 \
+		--out BENCH_baseline_chaos.json
+	@echo "BENCH_baseline_chaos.json blessed from this run — review and commit it"
+
 pytest:
 	$(PYTHON) -m pytest python/tests -q
 
@@ -88,4 +114,4 @@ artifacts:
 
 clean:
 	$(CARGO) clean
-	rm -rf results BENCH_sweep.json BENCH_full_smoke.json
+	rm -rf results BENCH_sweep.json BENCH_full_smoke.json BENCH_chaos.json

@@ -3,9 +3,10 @@
 //! queue throughput.  These bound how long the Fig.-14-style serving
 //! experiments take.
 
-use igniter::coordinator::{ClusterSim, Policy, Reprovisioner};
+use igniter::coordinator::{ClusterSim, Policy, Reprovisioner, Resilience};
 use igniter::gpu::{GpuDevice, GpuKind, Model};
 use igniter::provisioner::{self, ProfiledSystem};
+use igniter::sim::faults::{FaultPlan, FaultSpace};
 use igniter::sim::EventQueue;
 use igniter::util::bench::{bench, bench_once};
 use igniter::workload::trace::{RateTrace, TraceKind};
@@ -119,5 +120,37 @@ fn main() {
     println!(
         "  -> sim_throughput_rps: {:.0} ({served} served requests)",
         served as f64 / (ns / 1e9)
+    );
+
+    // The same closed loop with the chaos layer live: a sampled fault
+    // plan, breakers, shed/hedge routing, and failover respecs.  The
+    // interesting number is the overhead relative to the fault-free run
+    // above — the chaos machinery must cost noise, not throughput.
+    let horizon = epochs as f64 * epoch_ms;
+    let fplan = FaultPlan::generate(&FaultSpace::chaos(), 42, 0, horizon);
+    let (served_chaos, ns_chaos) = bench_once("sim core chaos 12wl x 30s diurnal", || {
+        let mut sim = ClusterSim::new(
+            kind,
+            &plan,
+            &specs,
+            Policy::Static,
+            ArrivalKind::Constant,
+            42,
+            &[],
+        );
+        sim.set_serving_policy(Box::new(
+            Reprovisioner::new(sys.clone(), specs.clone(), plan.clone())
+                .with_resilience(Resilience::ALL),
+        ));
+        sim.set_fault_plan(fplan.clone());
+        sim.set_rate_trace(&trace, epoch_ms);
+        sim.set_horizon(horizon, 1_000.0);
+        sim.run().iter().map(|s| s.served).sum::<u64>()
+    });
+    println!(
+        "  -> chaos sim_throughput_rps: {:.0} ({served_chaos} served, {} fault event(s), {:+.1}% wall vs fault-free)",
+        served_chaos as f64 / (ns_chaos / 1e9),
+        fplan.len(),
+        (ns_chaos / ns - 1.0) * 100.0
     );
 }

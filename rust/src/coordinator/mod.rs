@@ -25,8 +25,9 @@ pub mod server;
 pub use batcher::{BatchDecision, BatchPolicy, BatchView, EagerBatcher, TritonAdaptive};
 pub use estimator::{Drift, RateEstimator};
 pub use monitor::{
-    GsliceTuner, PolicyCtx, Reprovisioner, ServingPolicy, ShadowFailover, StaticPolicy,
-    DEFAULT_SAFETY, EXEC_OBS_SPAN_MS, MONITOR_PERIOD_MS, SHADOW_EXTRA,
+    GsliceTuner, PolicyCtx, Reprovisioner, Resilience, ServingPolicy, ShadowFailover,
+    StaticPolicy, BREAKER_PROBATION_MS, DEFAULT_SAFETY, EXEC_OBS_SPAN_MS, HANG_TIMEOUT_MS,
+    MONITOR_PERIOD_MS, SHADOW_EXTRA, STRAGGLER_TRIP_MULT,
 };
 pub use replicas::{ReplicaPhase, ReplicaSet, WINDOW_SPAN_MS};
 pub use router::{RouteStrategy, Router};

@@ -38,6 +38,40 @@ pub struct PolicyCtx<'a> {
     pub replicas: &'a mut ReplicaSet,
 }
 
+/// Per-workload resilience switches a serving policy grants the event
+/// loop (all off by default — fault-free serving is bit-identical to the
+/// pre-fault-lane behaviour):
+///
+/// * `breaker` — run the straggler/hang detector each monitor tick; an
+///   open breaker routes arrivals around the sick replica, a confirmed
+///   hang is condemned (force-retired, queue re-homed) and replaced.
+/// * `shed` — on a degraded group, drop an arrival at admission when the
+///   best replica's expected drain already blows twice the SLO budget
+///   (counted in `WorkloadStats::dropped`, never silent).
+/// * `hedge` — on a degraded group, route by deterministic two-choice on
+///   expected drain time instead of raw queue depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resilience {
+    pub breaker: bool,
+    pub shed: bool,
+    pub hedge: bool,
+}
+
+impl Resilience {
+    /// Everything off (the default for every policy).
+    pub const OFF: Resilience = Resilience {
+        breaker: false,
+        shed: false,
+        hedge: false,
+    };
+    /// Everything on (the chaos sweep lane).
+    pub const ALL: Resilience = Resilience {
+        breaker: true,
+        shed: true,
+        hedge: true,
+    };
+}
+
 /// An online serving policy applied while the event loop runs.
 pub trait ServingPolicy {
     fn name(&self) -> &'static str;
@@ -71,6 +105,11 @@ pub trait ServingPolicy {
     /// policies that never re-plan.
     fn planning_activity(&self) -> (u64, f64) {
         (0, 0.0)
+    }
+    /// Resilience switches granted to workload `w` (default: all off —
+    /// the event loop's fault-free paths stay bit-identical).
+    fn resilience(&self, _workload: usize) -> Resilience {
+        Resilience::OFF
     }
 }
 
@@ -193,6 +232,22 @@ pub const COLLAPSE_SUSTAIN: u32 = 2;
 /// plan keeps absorbing rate growth while the estimator chases it.
 pub const DEFAULT_SAFETY: f64 = 1.2;
 
+/// Breaker trip threshold: recent observed exec latency beyond this
+/// multiple of the model's (corrected) prediction marks the replica a
+/// straggler.  Chosen above the paper's ~15 % max prediction error but
+/// below the smallest injected dilation (2x), so real stragglers trip
+/// and healthy noise never does.
+pub const STRAGGLER_TRIP_MULT: f64 = 1.9;
+/// A replica busy on one batch for longer than
+/// `max(HANG_TIMEOUT_MS, exec_estimate x HANG_ESTIMATE_MULT)` is a
+/// confirmed hang: condemn it (no batch legitimately runs seconds).
+pub const HANG_TIMEOUT_MS: f64 = 2_000.0;
+pub const HANG_ESTIMATE_MULT: f64 = 6.0;
+/// Quiet spell before an open (non-condemned) breaker closes and the
+/// replica is readmitted to routing — long enough for a transient
+/// straggler span to show up as recovered observations.
+pub const BREAKER_PROBATION_MS: f64 = 1_500.0;
+
 /// The closed re-provisioning loop (iGniter Sec. 5.3): per-workload
 /// `RateEstimator`s sense sustained arrival-rate drift or predicted-SLO
 /// headroom collapse; on a trigger the embedded `OnlinePlanner` re-plans
@@ -228,6 +283,12 @@ pub struct Reprovisioner {
     /// calls (ms) — the denominator side of `wall.plan_throughput_pps`.
     /// Measurement only: never feeds a placement or simulation decision.
     plan_wall_ms: f64,
+    /// Devices whose death has already been failed over (the sim keeps a
+    /// dead device in `ctx.devices` forever; react exactly once).
+    dead_seen: Vec<bool>,
+    /// Resilience switches granted to every workload (see `Resilience`;
+    /// `OFF` keeps fault-free serving bit-identical).
+    resilience: Resilience,
     /// Re-plan for `observed x safety` so the fresh allocation keeps
     /// headroom while the estimator chases a rising rate.
     pub safety: f64,
@@ -257,6 +318,8 @@ impl Reprovisioner {
             violation_scratch: Vec::new(),
             plan_scratch,
             plan_wall_ms: 0.0,
+            dead_seen: Vec::new(),
+            resilience: Resilience::OFF,
             safety: DEFAULT_SAFETY,
             // three monitor ticks: short enough to track a steep diurnal
             // slope step-by-step, long enough to stop per-tick churn
@@ -281,6 +344,13 @@ impl Reprovisioner {
     /// Is online calibration enabled?
     pub fn calibrating(&self) -> bool {
         self.calibrate
+    }
+
+    /// Grant resilience switches to every workload (the chaos lane passes
+    /// `Resilience::ALL`).  Off by default.
+    pub fn with_resilience(mut self, r: Resilience) -> Reprovisioner {
+        self.resilience = r;
+        self
     }
 
     /// Observations absorbed by the planner's model (0 when static).
@@ -338,6 +408,116 @@ impl Reprovisioner {
         }
         (n > 0).then(|| sum / n as f64)
     }
+
+    /// Re-place workload `w` (serving index) for its currently observed
+    /// rate with safety padding, bypassing the drift cooldown — shared by
+    /// device-death failover and hang condemnation, where waiting out a
+    /// cooldown means serving nothing.  Returns the plan-deltas to
+    /// realize (empty when no feasible placement or nothing moved).
+    fn respec_workload(&mut self, now: f64, w: usize) -> Vec<PlanDelta> {
+        let observed = self.estimators[w].rate_rps();
+        let target = (observed * self.safety).max(1.0);
+        self.plan_scratch.copy_from(self.planner.plan());
+        let t0 = std::time::Instant::now();
+        let res = self.planner.respec(self.live_ids[w], target);
+        self.plan_wall_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.last_migration_ms[w] = now;
+        let Ok((new_id, _)) = res else {
+            return Vec::new();
+        };
+        let mut new_ids = self.live_ids.clone();
+        new_ids[w] = new_id;
+        let moved = diff_plans(&self.plan_scratch, self.planner.plan(), &self.live_ids, &new_ids);
+        self.live_ids = new_ids;
+        self.estimators[w].replanned(target);
+        if !moved.is_empty() {
+            self.migrations_planned += 1;
+        }
+        moved
+    }
+
+    /// Unplanned failover: a device the sim killed vanishes from the
+    /// planner's world (`OnlinePlanner::fail_device`) and every workload
+    /// that lost replicas on it is re-placed on the survivors — or on a
+    /// freshly provisioned instance when nothing fits.  Reacts exactly
+    /// once per dead device; a no-op while every device is healthy.
+    fn check_failover(&mut self, now: f64, ctx: &mut PolicyCtx) -> Vec<PlanDelta> {
+        let mut deltas = Vec::new();
+        for g in 0..ctx.devices.len() {
+            if !ctx.devices[g].is_dead() {
+                continue;
+            }
+            if self.dead_seen.len() <= g {
+                self.dead_seen.resize(g + 1, false);
+            }
+            if self.dead_seen[g] {
+                continue;
+            }
+            self.dead_seen[g] = true;
+            let t0 = std::time::Instant::now();
+            let victims = self.planner.fail_device(g);
+            self.plan_wall_ms += t0.elapsed().as_secs_f64() * 1e3;
+            for id in victims {
+                if let Some(w) = self.live_ids.iter().position(|&v| v == id) {
+                    deltas.extend(self.respec_workload(now, w));
+                }
+            }
+        }
+        deltas
+    }
+
+    /// Straggler/hang detection, one pass per monitor tick (only when
+    /// `resilience.breaker` is granted).  Stragglers — recent observed
+    /// exec far past the (corrected) prediction — get an open breaker:
+    /// routed around, readmitted after probation.  Hangs — busy on one
+    /// batch beyond any plausible span — are condemned; the sim
+    /// force-retires them and the replacement respec is returned here.
+    fn run_breakers(&mut self, now: f64, ctx: &mut PolicyCtx) -> Vec<PlanDelta> {
+        let mut deltas = Vec::new();
+        for p in 0..ctx.replicas.len() {
+            if ctx.replicas.phase[p] != ReplicaPhase::Active
+                || ctx.replicas.lost[p]
+                || ctx.replicas.condemned[p]
+            {
+                continue;
+            }
+            let w = ctx.replicas.workload[p];
+            if w >= self.live_ids.len() {
+                continue;
+            }
+            let hang_after =
+                HANG_TIMEOUT_MS.max(ctx.replicas.exec_estimate[p] * HANG_ESTIMATE_MULT);
+            if ctx.replicas.busy[p] && now - ctx.replicas.busy_since[p] > hang_after {
+                ctx.replicas.condemned[p] = true;
+                ctx.replicas.breaker_open[p] = true;
+                ctx.replicas.breaker_since[p] = now;
+                if !Self::migration_in_flight(ctx, Some(w)) {
+                    deltas.extend(self.respec_workload(now, w));
+                }
+                continue;
+            }
+            if ctx.replicas.breaker_open[p] {
+                // probation: give the replica a quiet spell, then readmit
+                if now - ctx.replicas.breaker_since[p] >= BREAKER_PROBATION_MS {
+                    ctx.replicas.breaker_open[p] = false;
+                }
+                continue;
+            }
+            let Some(obs) = ctx.replicas.exec_window[p].mean_since(now - EXEC_OBS_SPAN_MS, 2)
+            else {
+                continue;
+            };
+            let Some((raw, corrected)) = self.planner.predict_full(self.live_ids[w]) else {
+                continue;
+            };
+            let pred = if self.calibrate { corrected.t_inf } else { raw.t_inf };
+            if obs > pred * STRAGGLER_TRIP_MULT {
+                ctx.replicas.breaker_open[p] = true;
+                ctx.replicas.breaker_since[p] = now;
+            }
+        }
+        deltas
+    }
 }
 
 impl ServingPolicy for Reprovisioner {
@@ -350,6 +530,15 @@ impl ServingPolicy for Reprovisioner {
     }
 
     fn reprovision(&mut self, now: f64, ctx: &mut PolicyCtx) -> Vec<PlanDelta> {
+        // 0'. fault lane first: unplanned failover for freshly dead
+        //     devices (always on — an outage is not drift and skips the
+        //     cooldown), then breaker maintenance when granted.  Both are
+        //     exact no-ops in fault-free serving.
+        let mut fault_deltas = self.check_failover(now, ctx);
+        if self.resilience.breaker {
+            fault_deltas.extend(self.run_breakers(now, ctx));
+        }
+
         // 0. one prediction pass per workload: error telemetry, and (when
         //    calibrating) the model feed plus the predicted-violation
         //    flags step 2 consumes.  The error series is recorded
@@ -414,7 +603,7 @@ impl ServingPolicy for Reprovisioner {
         for est in &mut self.estimators {
             est.on_tick(now);
         }
-        let mut deltas = Vec::new();
+        let mut deltas = fault_deltas;
 
         // 2. drift / headroom triggers, one workload at a time
         for w in 0..self.estimators.len() {
@@ -540,6 +729,10 @@ impl ServingPolicy for Reprovisioner {
 
     fn planning_activity(&self) -> (u64, f64) {
         (self.planner.placements(), self.plan_wall_ms)
+    }
+
+    fn resilience(&self, _workload: usize) -> Resilience {
+        self.resilience
     }
 }
 
@@ -771,6 +964,136 @@ mod tests {
         let mean: f64 =
             rp.prediction_errors().iter().sum::<f64>() / rp.prediction_errors().len() as f64;
         assert!((0.25..0.33).contains(&mean), "mean error {mean:.3}");
+    }
+
+    #[test]
+    fn dead_device_triggers_cooldown_free_failover() {
+        // Kill device 0 of a freshly provisioned fleet at t = 100 ms —
+        // far inside the drift cooldown.  Every workload resident on it
+        // must be re-placed immediately, and never onto the dead device.
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let n_gpus = plan.num_gpus();
+        let victims: Vec<usize> = plan.gpus[0].iter().map(|a| a.workload).collect();
+        assert!(!victims.is_empty(), "fixture: device 0 must host someone");
+        let mut rp = Reprovisioner::new(s, specs.clone(), plan);
+        rp.rebalance_period_ms = 0.0;
+        let mut devices: Vec<GpuDevice> =
+            (0..n_gpus).map(|g| GpuDevice::new(GpuKind::V100, g as u64)).collect();
+        devices[0].fail();
+        let mut replicas = ReplicaSet::new();
+        let deltas = rp.reprovision(
+            100.0,
+            &mut PolicyCtx {
+                devices: &mut devices,
+                replicas: &mut replicas,
+            },
+        );
+        for &w in &victims {
+            assert!(
+                deltas
+                    .iter()
+                    .any(|d| matches!(d, PlanDelta::Migrate(m) if m.workload == w)),
+                "victim {w} was not re-placed: {deltas:?}"
+            );
+        }
+        for d in &deltas {
+            if let PlanDelta::Migrate(m) = d {
+                assert!(
+                    m.to.iter().all(|(g, _)| *g != 0),
+                    "replacement landed on the dead device: {m:?}"
+                );
+            }
+        }
+        assert!(rp.migrations_planned() >= victims.len() as u32);
+        // the death is reacted to exactly once
+        let again = rp.reprovision(
+            600.0,
+            &mut PolicyCtx {
+                devices: &mut devices,
+                replicas: &mut replicas,
+            },
+        );
+        assert!(
+            again
+                .iter()
+                .all(|d| !matches!(d, PlanDelta::Migrate(m) if victims.contains(&m.workload))),
+            "second tick re-failed the same device: {again:?}"
+        );
+    }
+
+    #[test]
+    fn breaker_trips_on_stragglers_and_condemns_hangs() {
+        let s = sys();
+        let specs = table1_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let (gpu0, alloc0) = plan.find(0).unwrap();
+        let (gpu1, alloc1) = plan.find(1).unwrap();
+        let mut rp =
+            Reprovisioner::new(s, specs.clone(), plan.clone()).with_resilience(Resilience::ALL);
+        rp.rebalance_period_ms = 0.0;
+        let mut devices: Vec<GpuDevice> = Vec::new();
+        let mut replicas = ReplicaSet::new();
+        replicas.launch(
+            Arc::new(specs[0].clone()),
+            0,
+            gpu0,
+            0,
+            alloc0.resources,
+            alloc0.batch,
+            ReplicaPhase::Active,
+        );
+        // straggling observations: 3x the model's prediction
+        let raw = rp.planner.predict_full(0).unwrap().0.t_inf;
+        replicas.exec_window[0].push(400.0, raw * 3.0);
+        replicas.exec_window[0].push(450.0, raw * 3.0);
+        rp.reprovision(
+            500.0,
+            &mut PolicyCtx {
+                devices: &mut devices,
+                replicas: &mut replicas,
+            },
+        );
+        assert!(replicas.breaker_open[0], "straggler never tripped");
+        assert!(!replicas.condemned[0], "a straggler is not a hang");
+        assert_eq!(replicas.breaker_since[0], 500.0);
+        // probation: with the bad window aged out, the breaker closes
+        rp.reprovision(
+            2_500.0,
+            &mut PolicyCtx {
+                devices: &mut devices,
+                replicas: &mut replicas,
+            },
+        );
+        assert!(!replicas.breaker_open[0], "probation never closed it");
+        // hang: a replica wedged on one batch far past any plausible span
+        replicas.launch(
+            Arc::new(specs[1].clone()),
+            1,
+            gpu1,
+            1,
+            alloc1.resources,
+            alloc1.batch,
+            ReplicaPhase::Active,
+        );
+        replicas.busy[1] = true;
+        replicas.busy_since[1] = 500.0;
+        let deltas = rp.reprovision(
+            4_000.0,
+            &mut PolicyCtx {
+                devices: &mut devices,
+                replicas: &mut replicas,
+            },
+        );
+        assert!(replicas.condemned[1], "hang never condemned");
+        assert!(replicas.breaker_open[1]);
+        assert!(
+            deltas
+                .iter()
+                .any(|d| matches!(d, PlanDelta::Migrate(m) if m.workload == 1)),
+            "condemnation did not spawn a replacement: {deltas:?}"
+        );
     }
 
     #[test]

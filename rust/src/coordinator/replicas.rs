@@ -77,6 +77,28 @@ pub struct ReplicaSet {
     pub switches: Vec<u32>,
     /// migration lifecycle phase
     pub phase: Vec<ReplicaPhase>,
+    /// Fault state (sim-side): a hung replica accepts dispatches but its
+    /// completions are suppressed until the breaker condemns it.
+    pub hung: Vec<bool>,
+    /// Force-retired by device death or condemnation: any stale
+    /// `Complete`/`TryDispatch` events still in the calendar are ignored.
+    pub lost: Vec<bool>,
+    /// Breaker state (policy-side): an open breaker removes the replica
+    /// from its group's routable set until probation closes it.
+    pub breaker_open: Vec<bool>,
+    pub breaker_since: Vec<f64>,
+    /// When the current in-flight batch was dispatched (hang detection:
+    /// busy for far longer than any plausible exec span trips the
+    /// breaker).
+    pub busy_since: Vec<f64>,
+    /// Sim time this replica was launched — lets the recovery metric
+    /// distinguish replacement capacity (launched after the fault) from
+    /// survivors.
+    pub launched_ms: Vec<f64>,
+    /// Policy verdict: this replica is dead-to-us (hang confirmed);
+    /// the sim force-retires it and re-queues its requests on the next
+    /// breaker-enforcement pass.
+    pub condemned: Vec<bool>,
 }
 
 impl ReplicaSet {
@@ -127,6 +149,13 @@ impl ReplicaSet {
         self.shadow_active.push(false);
         self.switches.push(0);
         self.phase.push(phase);
+        self.hung.push(false);
+        self.lost.push(false);
+        self.breaker_open.push(false);
+        self.breaker_since.push(0.0);
+        self.busy_since.push(0.0);
+        self.launched_ms.push(0.0);
+        self.condemned.push(false);
         self.spec.push(spec);
         p
     }
@@ -163,6 +192,10 @@ mod tests {
         assert!(set.busy[1], "Warming launches busy (batcher keep-out)");
         assert_eq!(set.gpu, vec![2, 3]);
         assert_eq!(set.tag, vec![7, 8]);
+        // fault state launches clean
+        assert!(!set.hung[0] && !set.lost[0] && !set.condemned[0]);
+        assert!(!set.breaker_open[0]);
+        assert_eq!(set.launched_ms, vec![0.0, 0.0]);
     }
 
     #[test]

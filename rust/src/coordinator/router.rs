@@ -92,6 +92,47 @@ impl Router {
     }
 }
 
+impl Router {
+    /// Hedged dispatch for degraded groups (a breaker is open somewhere
+    /// in the workload): deterministic power-of-two-choices on *expected
+    /// drain time* rather than raw queue depth.  The two members with the
+    /// fewest outstanding requests are compared by `drain_ms(p)` (queue
+    /// depth x exec estimate / batch) and the faster drainer wins — so a
+    /// recovering-but-slow survivor is not flooded just because its queue
+    /// momentarily looks short.  Pure in its inputs: lowest index wins
+    /// every tie, no RNG.
+    pub fn route_hedged<F, D>(&mut self, _w: usize, group: &[usize], outstanding: F, drain_ms: D) -> usize
+    where
+        F: Fn(usize) -> usize,
+        D: Fn(usize) -> f64,
+    {
+        assert!(!group.is_empty(), "hedged route over an empty group");
+        if group.len() == 1 {
+            return group[0];
+        }
+        // first and second minima by outstanding count (first-index ties)
+        let (mut a, mut b) = (group[0], usize::MAX);
+        for &p in &group[1..] {
+            if outstanding(p) < outstanding(a) {
+                b = a;
+                a = p;
+            } else if b == usize::MAX || outstanding(p) < outstanding(b) {
+                b = p;
+            }
+        }
+        if b == usize::MAX {
+            return a;
+        }
+        // hedge: between the two shortest queues, prefer the faster
+        // drain; `a` (the earlier/shorter member) keeps exact ties
+        if drain_ms(b).total_cmp(&drain_ms(a)) == std::cmp::Ordering::Less {
+            b
+        } else {
+            a
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +168,29 @@ mod tests {
         }
         assert_eq!(counts[1], 50);
         assert_eq!(counts[2], 50);
+    }
+
+    #[test]
+    fn hedged_route_prefers_the_faster_drain_of_the_two_shortest() {
+        let mut r = Router::new(RouteStrategy::LeastOutstanding, &[3]);
+        // depths: replica 12 is clearly loaded; 10 and 11 tie on depth
+        // but 11 drains twice as fast -> hedge picks 11 over the
+        // index-order tie-break plain LeastOutstanding would use
+        let depths = [2usize, 2, 9];
+        let drains = [80.0, 40.0, 10.0];
+        let picked = r.route_hedged(0, &[10, 11, 12], |p| depths[p - 10], |p| drains[p - 10]);
+        assert_eq!(picked, 11);
+        // exact drain ties fall back to the lower index
+        let flat = [50.0, 50.0, 50.0];
+        assert_eq!(
+            r.route_hedged(0, &[10, 11, 12], |p| depths[p - 10], |p| flat[p - 10]),
+            10
+        );
+        // single member short-circuits like the plain strategies
+        assert_eq!(r.route_hedged(0, &[7], |_| 3, |_| 1.0), 7);
+        // replay determinism: same inputs, same pick
+        let again = r.route_hedged(0, &[10, 11, 12], |p| depths[p - 10], |p| drains[p - 10]);
+        assert_eq!(again, 11);
     }
 
     #[test]

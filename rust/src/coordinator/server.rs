@@ -23,6 +23,16 @@
 //! gpulet (`arrivals == served + still_queued` holds through any number
 //! of migrations).
 //!
+//! **Fault lane** (see DESIGN.md §"Fault injection and failover"): an
+//! optional [`FaultPlan`] injects device deaths, transient stragglers,
+//! and replica hangs through the same calendar queue.  Every fault is
+//! pre-drawn at plan-generation time, so the sim itself consumes no
+//! extra randomness — an *empty* plan is a bitwise no-op.  Under faults
+//! the conservation law widens to `arrivals == served + still_queued +
+//! dropped`: every dropped request is counted explicitly (orphans with
+//! no surviving replica to requeue on, or deadline sheds under a
+//! [`monitor::Resilience`] policy).
+//!
 //! Hot-path layout (see DESIGN.md §"Sim-core memory layout"): replica
 //! state is a struct-of-arrays [`ReplicaSet`], request timestamps live
 //! in one shared [`RequestSlab`] arena, `Event` is a small `Copy`
@@ -33,13 +43,14 @@
 
 use super::batcher::{BatchDecision, BatchPolicy, BatchView, TritonAdaptive};
 use super::monitor::{
-    GsliceTuner, PolicyCtx, ServingPolicy, ShadowFailover, StaticPolicy, MIN_P99_SAMPLES,
-    MONITOR_PERIOD_MS,
+    GsliceTuner, PolicyCtx, Resilience, ServingPolicy, ShadowFailover, StaticPolicy,
+    MIN_P99_SAMPLES, MONITOR_PERIOD_MS,
 };
 use super::replicas::{ReplicaPhase, ReplicaSet};
 use super::router::{RouteStrategy, Router};
 use crate::gpu::{GpuDevice, GpuKind};
 use crate::provisioner::{Plan, PlanDelta, WorkloadSpec};
+use crate::sim::faults::{FaultKind, FaultPlan};
 use crate::sim::slab::RequestSlab;
 use crate::sim::EventQueue;
 use crate::util::stats::{mean, percentile_sorted, LatencyHistogram};
@@ -102,6 +113,9 @@ enum Event {
     /// batch of group `g` (parked in `WorkloadGroup::fresh_batches`) and
     /// start draining the replicas it replaces.
     SwitchOver { g: usize },
+    /// Injected fault number `f` of the sim's `FaultPlan` fires (the
+    /// payload indexes the plan so the variant stays `Copy`).
+    Fault { f: u32 },
 }
 
 /// Per-workload bookkeeping: the replica group, its shared arrival stream,
@@ -124,6 +138,21 @@ struct WorkloadGroup {
     /// as when each event carried its own `Vec`.
     fresh_batches: VecDeque<Vec<usize>>,
     arrivals_count: u64,
+    /// Requests explicitly given up on: orphans of a dead replica with no
+    /// surviving group member to take them, plus deadline sheds when the
+    /// group's `Resilience` policy enables shedding.
+    dropped_count: u64,
+    /// Instant of the group's unresolved device-death fault; cleared when
+    /// the first replica launched *after* it completes a batch (that span
+    /// is the recovery-time sample).
+    fault_at: Option<f64>,
+    /// Per-workload resilience policy, cached from the serving policy so
+    /// the arrival hot path reads a struct instead of a virtual call.
+    resilience: Resilience,
+    /// True while any fault state is live on this group (open breaker,
+    /// undetected hang, unresolved death): arrivals take the cold path
+    /// with shed/hedge hooks instead of the plain router.
+    degraded: bool,
     timeline: Vec<TimelinePoint>,
     served_since_sample: u64,
     last_sample_ms: f64,
@@ -161,6 +190,9 @@ pub struct WorkloadStats {
     pub arrivals: u64,
     /// Requests still waiting or in flight at the horizon.
     pub still_queued: u64,
+    /// Requests explicitly dropped (fault orphans with no survivor to
+    /// requeue on, deadline sheds).  Zero in fault-free serving.
+    pub dropped: u64,
     pub violation: bool,
     pub throughput_violation: bool,
     pub shadow_switches: u32,
@@ -172,10 +204,12 @@ pub struct WorkloadStats {
     pub replica_served: Vec<u64>,
 }
 
-/// Request-conservation residual over a stats set:
+///// Request-conservation residual over a stats set:
 /// `Σ (arrivals - served - still_queued)`.  Zero by the drain-before-
-/// switch invariant; every harness gates on it through this one
-/// definition (sweep runner, autoscale and calibration experiments).
+/// switch invariant in fault-free serving; under an injected `FaultPlan`
+/// it equals `Σ dropped` — every lost request is accounted for
+/// explicitly, never silently.  Every harness gates on it through this
+/// one definition (sweep runner, autoscale and calibration experiments).
 pub fn dropped_requests(stats: &[WorkloadStats]) -> i64 {
     stats
         .iter()
@@ -209,6 +243,19 @@ pub struct ClusterSim {
     last_occupancy_ms: f64,
     /// executed shadow migrations (plan-deltas with a placement change)
     migrations: u32,
+    /// Injected fault schedule (empty by default: zero extra events, the
+    /// fault-free event stream is bitwise unchanged).
+    fault_plan: FaultPlan,
+    /// Per-device straggler state: `(dilation factor, until_ms)` — every
+    /// batch dispatched on the device before `until_ms` runs `factor`x
+    /// slower.  `(1.0, 0.0)` = healthy.
+    straggler: Vec<(f64, f64)>,
+    /// Faults that actually landed on a live target (a death drawn for an
+    /// already-empty fleet is not counted).
+    faults_injected: u64,
+    /// Recovery-time samples: device-death instant -> first batch served
+    /// by a replica launched after it.
+    recovery_ms: Vec<f64>,
     /// pooled latency scratch reused by `sample_timeline` (one buffer for
     /// the whole sim instead of one allocation per group per tick)
     lat_scratch: Vec<f64>,
@@ -265,6 +312,10 @@ impl ClusterSim {
                 ))),
                 fresh_batches: VecDeque::new(),
                 arrivals_count: 0,
+                dropped_count: 0,
+                fault_at: None,
+                resilience: Resilience::OFF,
+                degraded: false,
                 timeline: Vec::new(),
                 served_since_sample: 0,
                 last_sample_ms: 0.0,
@@ -277,6 +328,7 @@ impl ClusterSim {
                 group_of[p] = g;
             }
         }
+        let num_devices = devices.len();
         ClusterSim {
             kind,
             seed,
@@ -295,6 +347,10 @@ impl ClusterSim {
             gpu_ms: 0.0,
             last_occupancy_ms: 0.0,
             migrations: 0,
+            fault_plan: FaultPlan::none(),
+            straggler: vec![(1.0, 0.0); num_devices],
+            faults_injected: 0,
+            recovery_ms: Vec::new(),
             lat_scratch: Vec::new(),
         }
     }
@@ -358,6 +414,24 @@ impl ClusterSim {
         self.migrations
     }
 
+    /// Install an injected-fault schedule (see `sim::faults`).  An empty
+    /// plan schedules nothing and the run is bitwise identical to one
+    /// where this was never called.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault_plan = plan;
+    }
+
+    /// Injected faults that landed on a live target.
+    pub fn faults_injected(&self) -> u64 {
+        self.faults_injected
+    }
+
+    /// Recovery-time samples (ms): device-death instant to the first
+    /// batch served by a replica launched after the fault.
+    pub fn recovery_ms(&self) -> &[f64] {
+        &self.recovery_ms
+    }
+
     fn try_dispatch(&mut self, p: usize) {
         let now = self.events.now();
         if self.replicas.busy[p] {
@@ -386,17 +460,30 @@ impl ClusterSim {
                     .expect("process vanished");
                 // Pipeline: the process is busy for t_gpu + t_feedback; the
                 // batch's own latency includes its data loading (Eq. 1).
-                let busy = q.t_gpu + q.t_feedback;
+                let mut busy = q.t_gpu + q.t_feedback;
+                let mut t_inf = q.t_inf;
+                let mut t_load = q.t_load;
+                // Straggler dilation is applied only inside this branch so
+                // the healthy path keeps its exact pre-fault float values
+                // (`x * 1.0` is not guaranteed bitwise-free of effect for
+                // every rounding mode; skipping the multiply is).
+                let (dil, until) = self.straggler[gpu];
+                if until > now && dil > 1.0 {
+                    busy *= dil;
+                    t_inf *= dil;
+                    t_load *= dil;
+                }
                 self.replicas.busy[p] = true;
+                self.replicas.busy_since[p] = now;
                 self.replicas.exec_estimate[p] =
-                    0.8 * self.replicas.exec_estimate[p] + 0.2 * q.t_inf;
+                    0.8 * self.replicas.exec_estimate[p] + 0.2 * t_inf;
                 self.events.schedule_in(
                     busy,
                     Event::Complete {
                         p,
                         n,
                         dispatched: now,
-                        t_load: q.t_load,
+                        t_load,
                     },
                 );
             }
@@ -420,6 +507,9 @@ impl ClusterSim {
             self.devices
                 .push(GpuDevice::new(self.kind, self.seed ^ (g as u64 + 1)));
         }
+        if self.straggler.len() < self.devices.len() {
+            self.straggler.resize(self.devices.len(), (1.0, 0.0));
+        }
     }
 
     /// A draining replica finished its last request: kill the process and
@@ -436,6 +526,289 @@ impl ClusterSim {
         self.devices[gpu].kill(tag);
         self.replicas.phase[p] = ReplicaPhase::Retired;
         self.replicas.resources[p] = 0.0;
+    }
+
+    /// Recompute group `g`'s routable set: `Active` members whose breaker
+    /// is closed.  If open breakers would empty a group that still has
+    /// `Active` members, every `Active` member is readmitted — degraded
+    /// service beats no service, and the breaker's job is to *shift*
+    /// traffic, never to black-hole a workload.
+    fn rebuild_routable(&mut self, g: usize) {
+        let phases = &self.replicas.phase;
+        let breaker = &self.replicas.breaker_open;
+        let WorkloadGroup {
+            members, routable, ..
+        } = &mut self.groups[g];
+        routable.clear();
+        routable.extend(
+            members
+                .iter()
+                .copied()
+                .filter(|&p| phases[p] == ReplicaPhase::Active && !breaker[p]),
+        );
+        if routable.is_empty() {
+            routable.extend(
+                members
+                    .iter()
+                    .copied()
+                    .filter(|&p| phases[p] == ReplicaPhase::Active),
+            );
+        }
+    }
+
+    /// Recompute the cached `degraded` flag (cold-path arrival switch).
+    fn refresh_degraded(&mut self, g: usize) {
+        let reps = &self.replicas;
+        let grp = &mut self.groups[g];
+        grp.degraded = grp.fault_at.is_some()
+            || grp
+                .members
+                .iter()
+                .any(|&p| reps.breaker_open[p] || (reps.hung[p] && !reps.lost[p]));
+    }
+
+    /// Drain replica `p`'s orphaned requests onto its surviving group
+    /// members (round-robin, arrival timestamps preserved), or count them
+    /// as explicitly dropped when nobody is left to take them.
+    fn requeue_orphans(&mut self, p: usize, g: usize) {
+        let survivors: Vec<usize> = {
+            let reps = &self.replicas;
+            self.groups[g]
+                .members
+                .iter()
+                .copied()
+                .filter(|&q| {
+                    q != p
+                        && reps.phase[q] == ReplicaPhase::Active
+                        && !reps.lost[q]
+                        && !reps.hung[q]
+                })
+                .collect()
+        };
+        let mut i = 0usize;
+        while let Some(arr) = self.req_slab.pop_front(&mut self.replicas.queue[p]) {
+            if survivors.is_empty() {
+                self.groups[g].dropped_count += 1;
+            } else {
+                let q = survivors[i % survivors.len()];
+                self.req_slab.push_back(&mut self.replicas.queue[q], arr);
+                i += 1;
+            }
+        }
+        for &q in &survivors {
+            self.try_dispatch(q);
+        }
+    }
+
+    /// Forced retirement outside the drain protocol (device death or a
+    /// condemned hang): the process is gone *now*, in-flight work and all
+    /// — any stale `Complete` still in the calendar is suppressed by the
+    /// `lost` flag, and the queue is re-homed or dropped explicitly.
+    fn force_retire(&mut self, p: usize, now: f64) {
+        self.accrue_gpu_time(now);
+        let tag = self.replicas.tag[p];
+        let gpu = self.replicas.gpu[p];
+        if !self.devices[gpu].is_dead() {
+            self.devices[gpu].kill(tag);
+        }
+        self.replicas.phase[p] = ReplicaPhase::Retired;
+        self.replicas.resources[p] = 0.0;
+        self.replicas.lost[p] = true;
+        self.replicas.busy[p] = true; // keep the batcher off the corpse
+        let g = self.group_of[p];
+        self.rebuild_routable(g);
+        self.requeue_orphans(p, g);
+        self.refresh_degraded(g);
+    }
+
+    /// Fire injected fault `f` of the plan.  Targets were drawn as raw
+    /// `u64`s at plan-generation time and resolve against the *live*
+    /// entity set here (modulo), so the sim never consumes RNG for
+    /// faults; a fault whose eligible set is empty dissipates un-counted.
+    fn apply_fault(&mut self, f: usize) {
+        let now = self.events.now();
+        match self.fault_plan.events[f].kind {
+            FaultKind::DeviceDeath { target } => self.apply_device_death(target, now),
+            FaultKind::Straggler {
+                target,
+                factor,
+                span_ms,
+            } => self.apply_straggler(target, factor, span_ms, now),
+            FaultKind::ReplicaHang { target } => self.apply_hang(target, now),
+        }
+    }
+
+    /// Kill an occupied device: every resident replica is lost with its
+    /// in-flight batch, orphaned queues re-home onto group survivors (or
+    /// drop, counted), and the affected groups start their recovery
+    /// clocks.  Replacement capacity arrives through the serving policy
+    /// (`Reprovisioner` failover respec) — the sim only breaks things.
+    fn apply_device_death(&mut self, target: u64, now: f64) {
+        let eligible: Vec<usize> = (0..self.devices.len())
+            .filter(|&g| !self.devices[g].is_dead() && self.devices[g].co_located() > 0)
+            .collect();
+        if eligible.is_empty() {
+            return;
+        }
+        let gpu = eligible[(target % eligible.len() as u64) as usize];
+        self.faults_injected += 1;
+        // the device was occupied right up to the failure instant
+        self.accrue_gpu_time(now);
+        self.devices[gpu].fail();
+        let mut hit: Vec<usize> = Vec::new();
+        for p in 0..self.replicas.len() {
+            if self.replicas.gpu[p] != gpu || self.replicas.phase[p] == ReplicaPhase::Retired {
+                continue;
+            }
+            self.replicas.phase[p] = ReplicaPhase::Retired;
+            self.replicas.resources[p] = 0.0;
+            self.replicas.lost[p] = true;
+            self.replicas.busy[p] = true;
+            let g = self.group_of[p];
+            if !hit.contains(&g) {
+                hit.push(g);
+            }
+        }
+        for &g in &hit {
+            self.groups[g].fault_at = Some(now);
+            self.rebuild_routable(g);
+        }
+        // re-home orphans only after every loss on the device is marked,
+        // so nothing lands on a doomed sibling replica
+        for p in 0..self.replicas.len() {
+            if self.replicas.lost[p]
+                && self.replicas.gpu[p] == gpu
+                && !self.replicas.queue[p].is_empty()
+            {
+                let g = self.group_of[p];
+                self.requeue_orphans(p, g);
+            }
+        }
+        for &g in &hit {
+            self.refresh_degraded(g);
+        }
+    }
+
+    /// Transient slowdown of one occupied device: batches dispatched on
+    /// it run `factor`x slower until the span elapses (thermal throttle /
+    /// noisy PCIe neighbour).  Self-healing — no recovery clock.
+    fn apply_straggler(&mut self, target: u64, factor: f64, span_ms: f64, now: f64) {
+        let eligible: Vec<usize> = (0..self.devices.len())
+            .filter(|&g| !self.devices[g].is_dead() && self.devices[g].co_located() > 0)
+            .collect();
+        if eligible.is_empty() {
+            return;
+        }
+        let gpu = eligible[(target % eligible.len() as u64) as usize];
+        self.faults_injected += 1;
+        self.straggler[gpu] = (factor, now + span_ms);
+    }
+
+    /// Wedge one Active replica: it keeps its queue and in-flight batch
+    /// but never completes again.  Detection (busy far past any plausible
+    /// exec span) and condemnation are the breaker's job — until then the
+    /// router keeps feeding it, which is exactly the failure mode the
+    /// detector exists to bound.
+    fn apply_hang(&mut self, target: u64, now: f64) {
+        let eligible: Vec<usize> = (0..self.replicas.len())
+            .filter(|&p| {
+                self.replicas.phase[p] == ReplicaPhase::Active
+                    && !self.replicas.lost[p]
+                    && !self.replicas.hung[p]
+            })
+            .collect();
+        if eligible.is_empty() {
+            return;
+        }
+        let p = eligible[(target % eligible.len() as u64) as usize];
+        self.faults_injected += 1;
+        self.replicas.hung[p] = true;
+        if !self.replicas.busy[p] {
+            self.replicas.busy[p] = true;
+            self.replicas.busy_since[p] = now;
+        }
+        let g = self.group_of[p];
+        self.refresh_degraded(g);
+    }
+
+    /// Realize the policy's breaker verdicts (runs every monitor tick,
+    /// after `reprovision`): condemned replicas are force-retired with
+    /// their queues re-homed, and every group's routable set and degraded
+    /// flag are rebuilt against the current breaker state.  Early-outs to
+    /// a flag scan when no fault state exists anywhere.
+    fn enforce_breakers(&mut self, now: f64) {
+        let reps = &self.replicas;
+        let any = (0..reps.len())
+            .any(|p| reps.condemned[p] || reps.breaker_open[p] || reps.hung[p] || reps.lost[p]);
+        if !any && self.fault_plan.is_empty() {
+            return;
+        }
+        for p in 0..self.replicas.len() {
+            if self.replicas.condemned[p]
+                && !self.replicas.lost[p]
+                && self.replicas.phase[p] != ReplicaPhase::Retired
+            {
+                self.force_retire(p, now);
+            }
+        }
+        for g in 0..self.groups.len() {
+            self.rebuild_routable(g);
+            self.refresh_degraded(g);
+        }
+    }
+
+    /// Cold-path arrival for a degraded group: per-workload `Resilience`
+    /// hooks apply — deadline shed (the best replica's expected drain
+    /// already blows twice the SLO budget: drop at admission, counted)
+    /// and hedged dispatch (deterministic two-choice on expected drain
+    /// time instead of raw queue depth).  All decisions are pure
+    /// functions of observed state — no RNG, replay-identical.
+    fn degraded_arrival(&mut self, g: usize, now: f64) {
+        let bookkeep = |sim: &mut ClusterSim, g: usize| {
+            sim.groups[g].arrivals_count += 1;
+            let w = sim.groups[g].spec.id;
+            sim.policy.on_arrival(now, w);
+            let next = sim.groups[g].arrivals.next();
+            sim.events.schedule_at(next, Event::Arrival { g });
+        };
+        if self.groups[g].routable.is_empty() {
+            // the whole group is gone (death took every replica and the
+            // replacement is still warming): nowhere to even queue
+            bookkeep(self, g);
+            self.groups[g].dropped_count += 1;
+            return;
+        }
+        let res = self.groups[g].resilience;
+        let p = {
+            let grp = &self.groups[g];
+            let queues = &self.replicas.queue;
+            let resources = &self.replicas.resources;
+            let est = &self.replicas.exec_estimate;
+            let batches = &self.replicas.batch;
+            let drain = |p: usize| {
+                est[p] * (queues[p].len() as f64 / batches[p].max(1) as f64 + 1.0)
+            };
+            if res.hedge {
+                self.router
+                    .route_hedged(g, &grp.routable, |p| queues[p].len(), drain)
+            } else {
+                self.router
+                    .route(g, &grp.routable, |p| queues[p].len(), |p| resources[p])
+            }
+        };
+        if res.shed {
+            let est_wait = self.replicas.exec_estimate[p]
+                * (self.replicas.queue[p].len() as f64 / self.replicas.batch[p].max(1) as f64
+                    + 1.0);
+            if est_wait > self.groups[g].spec.slo_ms * 2.0 {
+                bookkeep(self, g);
+                self.groups[g].dropped_count += 1;
+                return;
+            }
+        }
+        bookkeep(self, g);
+        self.req_slab.push_back(&mut self.replicas.queue[p], now);
+        self.try_dispatch(p);
     }
 
     /// Realize one plan-delta from the serving policy.
@@ -500,6 +873,7 @@ impl ClusterSim {
                         alloc.batch,
                         ReplicaPhase::Warming,
                     );
+                    self.replicas.launched_ms[p] = now;
                     self.group_of.push(g);
                     self.groups[g].members.push(p);
                     fresh.push(p);
@@ -566,6 +940,16 @@ impl ClusterSim {
         if let Some(period) = self.policy.tune_period_ms() {
             self.events.schedule_at(period, Event::Tune);
         }
+        // fault schedule + per-workload resilience cache: an empty plan
+        // adds zero events, so the fault-free stream is bitwise unchanged
+        for f in 0..self.fault_plan.events.len() {
+            let at = self.fault_plan.events[f].at_ms;
+            self.events.schedule_at(at, Event::Fault { f: f as u32 });
+        }
+        for g in 0..self.groups.len() {
+            let w = self.groups[g].spec.id;
+            self.groups[g].resilience = self.policy.resilience(w);
+        }
 
         while let Some(t) = self.events.peek_time() {
             if t > self.horizon_ms {
@@ -574,6 +958,11 @@ impl ClusterSim {
             let (now, ev) = self.events.pop().unwrap();
             match ev {
                 Event::Arrival { g } => {
+                    if self.groups[g].degraded {
+                        // cold path: resilience hooks (shed/hedge) apply
+                        self.degraded_arrival(g, now);
+                        continue;
+                    }
                     // route among the cached Active members only: warming
                     // shadows are not ready, draining ones are retiring
                     let grp = &self.groups[g];
@@ -597,6 +986,13 @@ impl ClusterSim {
                     dispatched,
                     t_load,
                 } => {
+                    if self.replicas.lost[p] || self.replicas.hung[p] {
+                        // the process died or wedged with this batch in
+                        // flight: the completion never happens (a lost
+                        // replica's queue was already re-homed; a hung
+                        // one keeps its requests until condemnation)
+                        continue;
+                    }
                     let record = now >= self.warmup_ms;
                     let reps = &mut self.replicas;
                     // queueing-vs-execution split: every request of the
@@ -626,6 +1022,15 @@ impl ClusterSim {
                     reps.busy[p] = false;
                     let g = self.group_of[p];
                     self.groups[g].served_since_sample += n as u64;
+                    // recovery clock: the first batch served by a replica
+                    // launched after the group's fault closes the sample
+                    if let Some(t0) = self.groups[g].fault_at {
+                        if self.replicas.launched_ms[p] > t0 {
+                            self.recovery_ms.push(now - t0);
+                            self.groups[g].fault_at = None;
+                            self.refresh_degraded(g);
+                        }
+                    }
                     self.try_dispatch(p);
                     // a draining replica with nothing left retires now
                     if self.replicas.phase[p] == ReplicaPhase::Draining
@@ -646,6 +1051,10 @@ impl ClusterSim {
                         self.policy.on_monitor(now, &mut ctx);
                         self.policy.reprovision(now, &mut ctx)
                     };
+                    // realize any breaker verdicts the policy just made
+                    // (condemnations retire + re-home before the deltas
+                    // launch replacements)
+                    self.enforce_breakers(now);
                     for d in deltas {
                         self.apply_delta(d);
                     }
@@ -662,10 +1071,18 @@ impl ClusterSim {
                     }
                 }
                 Event::SwitchOver { g } => {
-                    let fresh = self.groups[g]
+                    let mut fresh = self.groups[g]
                         .fresh_batches
                         .pop_front()
                         .expect("switch-over without a pending fresh batch");
+                    // a device death may have taken fresh replicas while
+                    // they warmed (phase forced to Retired): they never
+                    // open.  If the whole batch died, skip the switch —
+                    // the old replicas keep serving.
+                    fresh.retain(|&p| self.replicas.phase[p] == ReplicaPhase::Warming);
+                    if fresh.is_empty() {
+                        continue;
+                    }
                     // drain everything the fresh replicas replace...
                     for i in 0..self.groups[g].members.len() {
                         let p = self.groups[g].members[i];
@@ -681,27 +1098,16 @@ impl ClusterSim {
                     }
                     // ...then open the fresh ones for traffic
                     for &p in &fresh {
-                        debug_assert_eq!(self.replicas.phase[p], ReplicaPhase::Warming);
                         self.replicas.phase[p] = ReplicaPhase::Active;
                         self.replicas.busy[p] = false;
                     }
                     // rebuild the routing cache for the new Active set
-                    // (in place — no member-list clone)
-                    let phases = &self.replicas.phase;
-                    let WorkloadGroup {
-                        members, routable, ..
-                    } = &mut self.groups[g];
-                    routable.clear();
-                    routable.extend(
-                        members
-                            .iter()
-                            .copied()
-                            .filter(|&p| phases[p] == ReplicaPhase::Active),
-                    );
+                    self.rebuild_routable(g);
                     for p in fresh {
                         self.try_dispatch(p);
                     }
                 }
+                Event::Fault { f } => self.apply_fault(f as usize),
             }
         }
         // charge the tail interval (last monitor tick -> horizon)
@@ -773,6 +1179,7 @@ impl ClusterSim {
                     served,
                     arrivals: grp.arrivals_count,
                     still_queued,
+                    dropped: grp.dropped_count,
                     violation: p99 > grp.spec.slo_ms,
                     throughput_violation: achieved < offered.min(grp.spec.rate_rps) * 0.95,
                     shadow_switches: switches,
@@ -790,8 +1197,10 @@ impl ClusterSim {
 mod tests {
     use super::*;
     use crate::coordinator::batcher::EagerBatcher;
+    use crate::coordinator::monitor::Reprovisioner;
     use crate::gpu::{GpuKind, Model};
     use crate::provisioner::{self, Alloc, Migration, ProfiledSystem};
+    use crate::sim::faults::FaultEvent;
     use crate::workload::trace::TraceKind;
     use crate::workload::{app_workloads, table1_workloads};
 
@@ -1236,6 +1645,178 @@ mod tests {
             stats[0].arrivals
         );
         assert_eq!(stats[0].arrivals, stats[0].served + stats[0].still_queued);
+    }
+
+    /// Conservation under faults: every arrival is served, still queued,
+    /// or explicitly dropped — nothing vanishes.
+    fn assert_conservation(stats: &[WorkloadStats]) {
+        for st in stats {
+            assert_eq!(
+                st.arrivals,
+                st.served + st.still_queued + st.dropped,
+                "{}: {} arrivals != {} served + {} queued + {} dropped",
+                st.name,
+                st.arrivals,
+                st.served,
+                st.still_queued,
+                st.dropped
+            );
+        }
+    }
+
+    #[test]
+    fn device_death_fails_over_and_recovers() {
+        // Kill an occupied device mid-run under the closed-loop
+        // reprovisioner: victims are re-placed on survivors (or a fresh
+        // instance), the recovery clock closes, and every request is
+        // accounted for.
+        let s = sys();
+        let specs = app_workloads();
+        let plan = provisioner::provision(&s, &specs);
+        let rp = Reprovisioner::new(sys(), specs.clone(), plan.clone())
+            .with_resilience(Resilience::ALL);
+        let mut sim = ClusterSim::new(
+            GpuKind::V100,
+            &plan,
+            &specs,
+            Policy::Static,
+            ArrivalKind::Constant,
+            43,
+            &[],
+        );
+        sim.set_serving_policy(Box::new(rp));
+        let mut fp = FaultPlan::none();
+        fp.events.push(FaultEvent {
+            at_ms: 3_000.0,
+            kind: FaultKind::DeviceDeath { target: 0 },
+        });
+        sim.set_fault_plan(fp);
+        sim.set_horizon(20_000.0, 1_000.0);
+        let stats = sim.run();
+        assert_eq!(sim.faults_injected(), 1);
+        assert_conservation(&stats);
+        // the failover migration executed and replacement capacity served
+        assert!(sim.migrations() >= 1, "no failover migration ran");
+        assert!(
+            !sim.recovery_ms().is_empty(),
+            "no recovery sample: replacement never served"
+        );
+        for &r in sim.recovery_ms() {
+            assert!(
+                r > 0.0 && r < 10_000.0,
+                "implausible recovery span {r:.0} ms"
+            );
+        }
+        // losses are bounded: the outage window, not the whole run
+        let arrivals: u64 = stats.iter().map(|s| s.arrivals).sum();
+        let dropped: u64 = stats.iter().map(|s| s.dropped).sum();
+        assert!(
+            (dropped as f64) < arrivals as f64 * 0.10,
+            "dropped {dropped} of {arrivals} arrivals"
+        );
+        // the residual definition now equals the explicit drop count
+        assert_eq!(dropped_requests(&stats), dropped as i64);
+    }
+
+    #[test]
+    fn straggler_dilates_latency_then_heals() {
+        let run = |with_fault: bool| {
+            let (mut sim, _) = one_workload_sim(0.4, 4);
+            if with_fault {
+                let mut fp = FaultPlan::none();
+                fp.events.push(FaultEvent {
+                    at_ms: 2_000.0,
+                    kind: FaultKind::Straggler {
+                        target: 0,
+                        factor: 4.0,
+                        span_ms: 2_000.0,
+                    },
+                });
+                sim.set_fault_plan(fp);
+            }
+            sim.set_horizon(8_000.0, 0.0);
+            let stats = sim.run();
+            (sim.faults_injected(), stats)
+        };
+        let (healthy_faults, healthy) = run(false);
+        let (faults, dilated) = run(true);
+        assert_eq!(healthy_faults, 0);
+        assert_eq!(faults, 1);
+        assert_conservation(&healthy);
+        assert_conservation(&dilated);
+        assert_eq!(healthy[0].dropped, 0);
+        assert_eq!(dilated[0].dropped, 0, "a straggler drops nothing");
+        assert!(
+            dilated[0].p99_ms > healthy[0].p99_ms * 1.5,
+            "dilation invisible: {:.2} vs {:.2}",
+            dilated[0].p99_ms,
+            healthy[0].p99_ms
+        );
+        // the span is transient: the run still serves the full load
+        assert_eq!(dilated[0].arrivals, healthy[0].arrivals);
+        assert!(dilated[0].served > 0);
+    }
+
+    #[test]
+    fn hang_is_condemned_requeued_and_replaced() {
+        // Wedge one of two replicas: the breaker condemns it, its queue
+        // re-homes onto the survivor, and a replacement group is warmed
+        // and switched in — with every request accounted for.
+        let s = sys();
+        let specs = vec![crate::provisioner::WorkloadSpec::new(
+            0,
+            Model::ResNet50,
+            40.0,
+            600.0,
+        )];
+        let (batch, r_lower) = crate::perfmodel::lower_bound_resources(
+            &s.hw,
+            s.coeffs_for(Model::ResNet50),
+            40.0,
+            300.0,
+        )
+        .unwrap();
+        let mut plan = provisioner::Plan::new("test-hang", &s.hw);
+        for _ in 0..2 {
+            plan.gpus.push(vec![Alloc {
+                workload: 0,
+                resources: r_lower,
+                batch,
+            }]);
+        }
+        let rp = Reprovisioner::new(sys(), specs.clone(), plan.clone())
+            .with_resilience(Resilience::ALL);
+        let mut sim = ClusterSim::new(
+            GpuKind::V100,
+            &plan,
+            &specs,
+            Policy::Static,
+            ArrivalKind::Constant,
+            47,
+            &[],
+        );
+        sim.set_serving_policy(Box::new(rp));
+        let mut fp = FaultPlan::none();
+        fp.events.push(FaultEvent {
+            at_ms: 3_000.0,
+            kind: FaultKind::ReplicaHang { target: 0 },
+        });
+        sim.set_fault_plan(fp);
+        sim.set_horizon(15_000.0, 1_000.0);
+        let stats = sim.run();
+        assert_eq!(sim.faults_injected(), 1);
+        assert_conservation(&stats);
+        assert!(
+            stats[0].replica_served.len() > 2,
+            "no replacement replica was ever launched: {:?}",
+            stats[0].replica_served
+        );
+        let replacement_served: u64 = stats[0].replica_served[2..].iter().sum();
+        assert!(
+            replacement_served > 0,
+            "replacements never served: {:?}",
+            stats[0].replica_served
+        );
     }
 
     #[test]

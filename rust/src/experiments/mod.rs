@@ -5,6 +5,7 @@
 pub mod ablation;
 pub mod autoscale;
 pub mod calibration;
+pub mod chaos;
 pub mod common;
 pub mod dynamic;
 pub mod pareto;
@@ -46,6 +47,7 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
         "ablation" => ablation::ablation(kind),
         "autoscale" => autoscale::autoscale(kind),
         "calibration" => calibration::calibration(kind),
+        "chaos" => chaos::chaos(kind),
         "dynamic" => dynamic::dynamic(kind),
         "pareto" => pareto::pareto(kind),
         "fig21" => overhead::fig21(kind),
@@ -64,9 +66,10 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
             run("dynamic", kind)?;
             run("autoscale", kind)?;
             run("calibration", kind)?;
+            run("chaos", kind)?;
             run("sweep", kind)?;
             run("pareto", kind)
         }
-        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, autoscale, calibration, sweep, pareto, all"),
+        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, autoscale, calibration, chaos, sweep, pareto, all"),
     }
 }

@@ -64,6 +64,9 @@ pub struct GpuDevice {
     rng: Rng,
     /// Per-query noise sigma (multiplicative on active time).
     pub noise_sigma: f64,
+    /// Hard failure (fault injection): a dead device holds no processes
+    /// and rejects launches until the end of the run.
+    dead: bool,
 }
 
 impl GpuDevice {
@@ -73,7 +76,21 @@ impl GpuDevice {
             slots: Vec::new(),
             rng: Rng::new(seed),
             noise_sigma: 0.015,
+            dead: false,
         }
+    }
+
+    /// Kill the whole device: every resident process vanishes (their
+    /// queued requests are the *caller's* failover problem) and future
+    /// launches are refused.  Irreversible within a run — cloud failover
+    /// replaces the instance rather than resurrecting it.
+    pub fn fail(&mut self) {
+        self.dead = true;
+        self.slots.clear();
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead
     }
 
     /// Deterministic device (for fitting / analytical comparisons).
@@ -87,7 +104,8 @@ impl GpuDevice {
 
     /// Launch a process; fails if the partition would exceed r_max.
     pub fn launch(&mut self, tag: u64, model: Model, resources: f64, batch: u32) -> bool {
-        if resources <= 0.0 || self.allocated() + resources > self.spec.r_max + 1e-9 {
+        if self.dead || resources <= 0.0 || self.allocated() + resources > self.spec.r_max + 1e-9
+        {
             return false;
         }
         self.slots.push(ProcessSlot {
@@ -109,6 +127,7 @@ impl GpuDevice {
     /// controller like GSLICE force-growing past 100 %; the device then
     /// time-slices SMs, shrinking everyone's *effective* partition).
     pub fn launch_unchecked(&mut self, tag: u64, model: Model, resources: f64, batch: u32) {
+        debug_assert!(!self.dead, "launch on a dead device (tag {tag})");
         self.slots.push(ProcessSlot {
             tag,
             model,
@@ -513,5 +532,20 @@ mod tests {
         let mut d = dev();
         assert!(d.query_latency(42, 1).is_none());
         assert!(d.process_throughput_rps(42).is_none());
+    }
+
+    #[test]
+    fn failed_device_drops_processes_and_refuses_launches() {
+        let mut d = dev();
+        assert!(d.launch(1, Model::AlexNet, 0.4, 4));
+        assert!(d.launch(2, Model::ResNet50, 0.3, 8));
+        d.fail();
+        assert!(d.is_dead());
+        assert_eq!(d.co_located(), 0, "resident processes vanish");
+        assert_eq!(d.allocated(), 0.0);
+        // resident queries now resolve to None, like any unknown tag
+        assert!(d.query_latency(1, 4).is_none());
+        assert!(!d.launch(3, Model::Ssd, 0.1, 1), "dead device accepted a launch");
+        assert!(d.is_dead(), "death is permanent within a run");
     }
 }

@@ -16,7 +16,8 @@
 //!   igniter verify
 
 use igniter::util::error::{anyhow, bail, Result};
-use igniter::coordinator::{self, ClusterSim, Policy, Reprovisioner};
+use igniter::coordinator::{self, ClusterSim, Policy, Reprovisioner, Resilience};
+use igniter::sim::faults::{FaultPlan, FaultSpace};
 use igniter::gpu::GpuKind;
 use igniter::provisioner::{ffd, gpulets, gslice, igniter as ig, Plan, ProfiledSystem};
 use igniter::runtime::{Engine, Manifest};
@@ -131,9 +132,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20 provision   [--strategy igniter|ffd|ffd++|gslice|gpulets] [--workloads app|table1|synthetic:N]\n\
                  \x20 serve       [--policy shadow|static|gslice|autoscale] [--calibrate] [--trace diurnal|spiky|ramp]\n\
                  \x20             [--epochs N] [--epoch-s S] [--horizon-s S] [--poisson] [--real-batches N]\n\
+                 \x20             [--faults [deaths=N,stragglers=N,hangs=N,factor=F,span_ms=S]]\n\
                  \x20 sweep       [--scenarios N] [--seeds K] [--parallel M] [--master-seed S]\n\
-                 \x20             [--out BENCH_sweep.json] [--full] [--mismatch] [--calibrate]\n\
-                 \x20             — fleet-scale scenario sweep (mismatch = model-error lane)\n\
+                 \x20             [--out BENCH_sweep.json] [--full] [--mismatch] [--calibrate] [--faults [spec]]\n\
+                 \x20             — fleet-scale scenario sweep (mismatch = model-error lane, faults = chaos lane)\n\
                  \x20 deploy      [--strategy ...] [--script] — emit the launcher manifest\n\
                  \x20 verify\n\
                  \x20 experiment  [fig3..fig21|table1|overhead|all]"
@@ -246,6 +248,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.opt_u64("seed", 42),
         &[],
     );
+    // --faults [spec]: deterministic chaos — a FaultPlan seeded from
+    // --seed (bare flag = the default chaos envelope, a value is parsed
+    // as key=value overrides, e.g. --faults deaths=1,hangs=0)
+    let fault_spec: Option<FaultSpace> = match (args.opt("faults"), args.flag("faults")) {
+        (Some(spec), _) => Some(FaultSpace::parse_spec(spec).map_err(|e| anyhow!("{e}"))?),
+        (None, true) => Some(FaultSpace::chaos()),
+        (None, false) => None,
+    };
     if policy_s == "autoscale" {
         // estimator -> online re-plan -> shadow-instance migration, with
         // the submitted rates as the planned design points; --calibrate
@@ -255,7 +265,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if args.flag("calibrate") {
             rp = rp.with_calibration();
         }
+        if fault_spec.is_some() {
+            // breakers + shed + hedge: serve *through* the injected
+            // faults instead of merely counting them
+            rp = rp.with_resilience(Resilience::ALL);
+        }
         sim.set_serving_policy(Box::new(rp));
+    }
+    if let Some(fspace) = &fault_spec {
+        let fplan = FaultPlan::generate(fspace, args.opt_u64("seed", 42), 0, horizon);
+        println!(
+            "fault plan: {} event(s) from seed {}{}",
+            fplan.len(),
+            args.opt_u64("seed", 42),
+            if policy_s == "autoscale" {
+                ""
+            } else {
+                "  (note: only --policy autoscale replaces lost capacity)"
+            }
+        );
+        sim.set_fault_plan(fplan);
     }
     if let Some(trace_s) = args.opt("trace") {
         let epochs = args.opt_usize("epochs", 24).max(1);
@@ -296,6 +325,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    if fault_spec.is_some() {
+        let recovery = sim.recovery_ms();
+        let dropped: u64 = stats.iter().map(|s| s.dropped).sum();
+        println!(
+            "faults injected {}  recovery p95 {:.0} ms ({} episode(s))  dropped {}",
+            sim.faults_injected(),
+            if recovery.is_empty() {
+                0.0
+            } else {
+                igniter::util::stats::percentile(recovery, 0.95)
+            },
+            recovery.len(),
+            dropped
+        );
+    }
     if policy_s == "autoscale" || args.opt("trace").is_some() {
         println!(
             "gpu-seconds {:.1}  migrations {}",
@@ -365,6 +409,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // with online calibration so the sweep measures the closed loop's
     // answer to exactly that error
     space.mismatch = args.flag("mismatch");
+    // --faults [spec]: the chaos lane — every task draws a FaultPlan
+    // (deaths/stragglers/hangs) and serves with full resilience; a bare
+    // flag uses the default chaos envelope, a value overrides it
+    if let Some(spec) = args.opt("faults") {
+        space.faults = FaultSpace::parse_spec(spec).map_err(|e| anyhow!("{e}"))?;
+    } else if args.flag("faults") {
+        space.faults = FaultSpace::chaos();
+    }
     let cfg = SweepConfig {
         scenarios: args.opt_usize("scenarios", 200).max(1),
         seeds: args.opt_usize("seeds", 2).max(1),
@@ -399,6 +451,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     t.row(&["total GPU-seconds".into(), f(agg.total_gpu_seconds, 1)]);
     t.row(&["mean pred error".into(), f(agg.mean_pred_error, 3)]);
     t.row(&["p95 pred error".into(), f(agg.p95_pred_error, 3)]);
+    if !cfg.space.faults.is_off() {
+        t.row(&["faults injected".into(), agg.faults_injected.to_string()]);
+        t.row(&[
+            "recovery p95 (ms)".into(),
+            format!("{} ({} episodes)", f(agg.recovery_ms_p95, 0), agg.recovery_samples),
+        ]);
+    }
     t.row(&["wall (s)".into(), f(report.wall_s, 2)]);
     t.row(&[
         "scenarios/s (wall)".into(),
@@ -426,8 +485,25 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.opt_or("out", "BENCH_sweep.json"));
     report.write(&out)?;
     println!("wrote {}", out.display());
-    if agg.total_dropped != 0 {
-        bail!("sweep dropped {} requests — conservation violated", agg.total_dropped);
+    if cfg.space.faults.is_off() {
+        if agg.total_dropped != 0 {
+            bail!("sweep dropped {} requests — conservation violated", agg.total_dropped);
+        }
+    } else {
+        // chaos lane: drops are explicit and bounded, never silent.  A
+        // negative residual means double-counted serving; a large one
+        // means the failover path stopped absorbing faults.  The fine-
+        // grained run-over-run bound lives in check_bench_regression.py.
+        if agg.total_dropped < 0 {
+            bail!("chaos sweep residual {} < 0 — requests double-counted", agg.total_dropped);
+        }
+        if agg.total_dropped as u64 > agg.total_arrivals / 10 {
+            bail!(
+                "chaos sweep dropped {} of {} arrivals — failover not absorbing faults",
+                agg.total_dropped,
+                agg.total_arrivals
+            );
+        }
     }
     Ok(())
 }

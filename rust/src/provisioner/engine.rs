@@ -207,6 +207,11 @@ impl HeadroomIndex {
 pub struct PlacementEngine {
     devices: Vec<DeviceState>,
     index: HeadroomIndex,
+    /// Failed devices (fault injection): excluded from every candidate
+    /// scan, so replacements land on survivors or fresh capacity.  Kept
+    /// positionally aligned with `devices` and preserved across
+    /// `rebuild` — device ids are stable for the life of a plan.
+    dead: Vec<bool>,
     // Probe scratch, reused across all (item, device) probes.
     cand_ids: Vec<u32>,
     cand_alloc: Vec<Alloc>,
@@ -219,10 +224,25 @@ impl PlacementEngine {
         PlacementEngine {
             devices: Vec::new(),
             index: HeadroomIndex::new(hw),
+            dead: Vec::new(),
             cand_ids: Vec::new(),
             cand_alloc: Vec::new(),
             best_alloc: Vec::new(),
         }
+    }
+
+    /// Exclude device `g` from all future placements (its freed capacity
+    /// must never look attractive to the failover re-plan).
+    pub fn mark_dead(&mut self, g: usize) {
+        self.dead[g] = true;
+    }
+
+    pub fn is_dead(&self, g: usize) -> bool {
+        self.dead.get(g).copied().unwrap_or(false)
+    }
+
+    pub fn any_dead(&self) -> bool {
+        self.dead.iter().any(|&d| d)
     }
 
     /// An engine mirroring an existing plan.
@@ -243,6 +263,9 @@ impl PlacementEngine {
     pub fn rebuild(&mut self, sys: &ProfiledSystem, specs: &[WorkloadSpec], plan: &Plan) {
         self.devices.truncate(plan.gpus.len());
         self.index.clear();
+        // device ids are stable, so existing dead flags stay positional;
+        // grown (or shrunk) fleets default the delta to alive
+        self.dead.resize(plan.gpus.len(), false);
         for (g, allocs) in plan.gpus.iter().enumerate() {
             if g < self.devices.len() {
                 Self::refresh(&mut self.devices[g], sys, specs, allocs);
@@ -259,6 +282,7 @@ impl PlacementEngine {
         Self::refresh(&mut dev, sys, specs, allocs);
         self.index.push(dev.used);
         self.devices.push(dev);
+        self.dead.resize(self.devices.len(), false);
     }
 
     /// Re-mirror device `g` after its allocation list changed.
@@ -331,6 +355,10 @@ impl PlacementEngine {
         let mut best: Option<(usize, f64)> = None;
         for &gu in &cand_ids {
             let g = gu as usize;
+            // A dead device's emptied capacity is not capacity.
+            if self.dead[g] {
+                continue;
+            }
             let dev = &self.devices[g];
             // Exact headroom check — bitwise the reject alloc_gpus hits.
             if dev.used + d.r_lower > hw.r_max + 1e-9 {
@@ -666,6 +694,33 @@ mod tests {
         idx.update(1, 0.1);
         idx.candidates(0.5, &mut out);
         assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn dead_devices_are_never_placement_candidates() {
+        let s = sys(GpuKind::V100);
+        let specs = crate::workload::app_workloads();
+        let derived = igniter::derive_all(&s, &specs);
+        let model = AnalyticModel::ALL;
+        let mut plan = Plan::new("dead", &s.hw);
+        plan.gpus.push(Vec::new());
+        let mut engine = PlacementEngine::new(&s.hw);
+        engine.push_device(&s, &specs, &[]);
+        // kill the (empty, maximally attractive) device 0
+        engine.mark_dead(0);
+        assert!(engine.any_dead());
+        let d = derived[0].expect("workload 0 derives");
+        let (g, fresh) = engine.place(&model, &s, &specs, &mut plan, 0, d);
+        assert_ne!(g, 0, "placed onto the dead device");
+        assert!(fresh, "no live device existed — must provision fresh");
+        // subsequent placements keep avoiding the dead device too
+        let d1 = derived[1].expect("workload 1 derives");
+        let (g1, _) = engine.place(&model, &s, &specs, &mut plan, 1, d1);
+        assert_ne!(g1, 0);
+        // a rebuild over the same plan preserves the dead flag
+        engine.rebuild(&s, &specs, &plan);
+        assert!(engine.is_dead(0) && !engine.is_dead(g));
+        engine.assert_mirrors(&s, &specs, &plan);
     }
 
     #[test]

@@ -223,10 +223,45 @@ impl OnlinePlanner {
         res
     }
 
+    /// Realize a device failure: drop the dead device's allocations from
+    /// the plan, exclude it from every future candidate scan, and return
+    /// the ids of the active workloads that lost replicas there.  The
+    /// caller (the serving policy's failover path) drives `respec` for
+    /// each returned id to place replacement capacity on survivors — or
+    /// on fresh devices when the survivors are full, the cloud's answer
+    /// to instance loss.
+    pub fn fail_device(&mut self, g: usize) -> Vec<usize> {
+        if g >= self.plan.gpus.len() {
+            return Vec::new();
+        }
+        let mut hit: Vec<usize> = Vec::new();
+        for a in &self.plan.gpus[g] {
+            if self.active[a.workload] && !hit.contains(&a.workload) {
+                hit.push(a.workload);
+            }
+        }
+        self.plan.gpus[g].clear();
+        self.engine
+            .sync_device(g, &self.sys, &self.specs, &self.plan.gpus[g]);
+        self.engine.mark_dead(g);
+        hit
+    }
+
+    /// True once any device has been failed via `fail_device`.
+    pub fn any_device_dead(&self) -> bool {
+        self.engine.any_dead()
+    }
+
     /// Periodic re-pack: run Alg. 1 from scratch on the active set and
     /// adopt the new plan if it occupies fewer devices.  Returns the new
     /// occupied-GPU count if adopted.
     pub fn rebalance(&mut self) -> Option<usize> {
+        // A from-scratch re-pack lays allocations onto devices 0..n in
+        // order — it cannot express "skip the dead ones" — so once any
+        // device has failed, compaction is off for the rest of the run.
+        if self.engine.any_dead() {
+            return None;
+        }
         let live: Vec<WorkloadSpec> = self
             .specs
             .iter()
@@ -514,6 +549,46 @@ mod tests {
         );
         let (_, c) = op.predict_full(id2).unwrap();
         assert!(c.t_inf <= 30.0 / 2.0 + 1e-6, "corrected t_inf {}", c.t_inf);
+    }
+
+    #[test]
+    fn fail_device_replans_victims_onto_survivors() {
+        let mut op = OnlinePlanner::new(sys());
+        let mut ids = Vec::new();
+        for spec in app_workloads() {
+            ids.push(
+                op.add(WorkloadSpec::new(0, spec.model, spec.slo_ms, spec.rate_rps))
+                    .unwrap()
+                    .0,
+            );
+        }
+        let gpus_before = op.plan().gpus.len();
+        assert!(gpus_before >= 2, "need a multi-device plan to kill from");
+        // kill device 0 and respec every victim, as the failover path does
+        let victims = op.fail_device(0);
+        assert!(!victims.is_empty(), "device 0 hosted nothing");
+        assert!(op.any_device_dead());
+        assert!(op.plan().gpus[0].is_empty(), "dead device still holds allocs");
+        for &w in &victims {
+            let rate = op.specs()[w].rate_rps;
+            let (nw, _) = op.respec(w, rate).expect("failover respec");
+            // the replacement never lands on the dead device
+            let (g, _) = op.plan().find(nw).expect("replacement placed");
+            assert_ne!(g, 0, "replacement placed on the dead device");
+            let (t_inf, thpt) = op.predict(nw).unwrap();
+            assert!(t_inf <= op.specs()[nw].slo_ms / 2.0 + 1e-6);
+            assert!(thpt >= rate * 0.999);
+        }
+        assert!(op.plan().gpus[0].is_empty(), "something crept back onto gpu 0");
+        // untouched workloads keep their placements through the failover
+        for (&id, spec) in ids.iter().zip(app_workloads().iter()) {
+            if !victims.contains(&id) {
+                assert!(op.predict(id).is_some(), "{} lost its allocation", spec.name);
+            }
+        }
+        // compaction stays off for the rest of the run: a from-scratch
+        // re-pack would happily reuse device 0
+        assert_eq!(op.rebalance(), None, "rebalance ran with a dead device");
     }
 
     #[test]

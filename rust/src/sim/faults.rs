@@ -1,0 +1,309 @@
+//! Seeded fault injection: deterministic chaos plans for the serving sim.
+//!
+//! A [`FaultPlan`] is a pure function of `(space, master_seed, id)` under
+//! the same SplitMix64 lane discipline as `sweep/scenario.rs`: scenario
+//! generation owns lane `(1, id+1)`, the sim/arrival seed lane `(2,
+//! task+1)`, and fault plans lane `(3, task+1)` — so enabling faults
+//! never perturbs the scenario mix or the arrival realizations, and the
+//! chaos sweep stays bit-identical across `--parallel` widths.
+//!
+//! All randomness is baked at plan-generation time.  Events carry *raw*
+//! `u64` targets that the sim resolves modulo the live entity count at
+//! fire time (device count for deaths/stragglers, routable replica count
+//! for hangs); the sim itself draws no RNG for faults, so the arrival
+//! streams are byte-identical with and without a plan installed.  An
+//! empty plan schedules nothing — zero extra events, zero extra sequence
+//! numbers — making the disabled lane a bitwise no-op (the committed
+//! sweep-fingerprint golden is the proof obligation; see
+//! `tests/sweep_determinism.rs`).
+
+use crate::util::rng::Rng;
+
+/// Envelope the chaos lane samples fault plans from.  `OFF` (all maxima
+/// zero) generates the empty plan without consuming any RNG.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpace {
+    /// Maximum GPU devices killed per task (actual count is uniform in
+    /// `0..=max`, so some chaos tasks stay fault-free on purpose).
+    pub max_device_deaths: u32,
+    /// Maximum transient straggler episodes per task.
+    pub max_stragglers: u32,
+    /// Maximum replica hangs per task.
+    pub max_hangs: u32,
+    /// Straggler latency dilation factor, uniform in `[lo, hi)`.  Kept
+    /// well above the detector's trip ratio so episodes are observable.
+    pub straggler_factor: (f64, f64),
+    /// Straggler episode length (ms), uniform in `[lo, hi)`.
+    pub straggler_span_ms: (f64, f64),
+    /// Fraction of the horizon faults may fire in.  The default leaves
+    /// the tail free so recovery (respec -> warm -> switch -> first
+    /// served batch) completes inside the measured run.
+    pub window: (f64, f64),
+}
+
+impl FaultSpace {
+    /// The disabled lane: generates the empty plan, injects nothing.
+    pub const OFF: FaultSpace = FaultSpace {
+        max_device_deaths: 0,
+        max_stragglers: 0,
+        max_hangs: 0,
+        straggler_factor: (0.0, 0.0),
+        straggler_span_ms: (0.0, 0.0),
+        window: (0.0, 0.0),
+    };
+
+    /// The `--faults` chaos envelope: up to one device death plus a
+    /// couple of latency pathologies per task, inside the mid-run window.
+    pub fn chaos() -> FaultSpace {
+        FaultSpace {
+            max_device_deaths: 1,
+            max_stragglers: 2,
+            max_hangs: 1,
+            straggler_factor: (2.0, 5.0),
+            straggler_span_ms: (300.0, 900.0),
+            window: (0.25, 0.60),
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.max_device_deaths == 0 && self.max_stragglers == 0 && self.max_hangs == 0
+    }
+
+    /// Parse a `serve --faults` spec: comma-separated `key=value` pairs
+    /// over the `chaos()` defaults (`deaths`, `stragglers`, `hangs`,
+    /// `factor` = straggler dilation upper bound, `span_ms` = episode
+    /// upper bound).  An empty spec is the plain chaos envelope.
+    pub fn parse_spec(spec: &str) -> Result<FaultSpace, String> {
+        let mut space = FaultSpace::chaos();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec '{part}' is not key=value"))?;
+            let num = || {
+                value
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("fault spec '{key}' value '{value}' is not a number"))
+            };
+            match key.trim() {
+                "deaths" => space.max_device_deaths = num()? as u32,
+                "stragglers" => space.max_stragglers = num()? as u32,
+                "hangs" => space.max_hangs = num()? as u32,
+                "factor" => {
+                    let hi = num()?;
+                    if hi <= 1.0 {
+                        return Err(format!("straggler factor {hi} must exceed 1.0"));
+                    }
+                    space.straggler_factor = (space.straggler_factor.0.min(hi), hi);
+                }
+                "span_ms" => {
+                    let hi = num()?;
+                    if hi <= 0.0 {
+                        return Err(format!("straggler span {hi} must be positive"));
+                    }
+                    space.straggler_span_ms = (space.straggler_span_ms.0.min(hi), hi);
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault spec key '{other}' (deaths, stragglers, hangs, \
+                         factor, span_ms)"
+                    ))
+                }
+            }
+        }
+        Ok(space)
+    }
+}
+
+/// What a scheduled fault does when it fires.  Targets are raw draws;
+/// the sim resolves them modulo the live entity count at fire time so
+/// the plan never needs to know fleet shapes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Kill device `target % num_devices`: resident replicas retire,
+    /// queued requests fail over, the planner replaces capacity.
+    DeviceDeath { target: u64 },
+    /// Dilate exec latency on device `target % num_devices` by `factor`
+    /// for `span_ms` — transient, clears on its own.
+    Straggler {
+        target: u64,
+        factor: f64,
+        span_ms: f64,
+    },
+    /// Freeze replica `target % live_replicas`: it keeps accepting work
+    /// but never completes until the monitor's breaker condemns it.
+    ReplicaHang { target: u64 },
+}
+
+/// One timed fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_ms: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults for one serving task.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan (what `FaultSpace::OFF` generates).
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Sample a plan: pure in `(space, master, id, horizon_ms)`.  Lane
+    /// `(3, id+1)` of the master seed — disjoint from scenario
+    /// generation `(1, id+1)` and sim seeds `(2, task+1)` by the split
+    /// tag.  Draw order is fixed (counts, then per-event fields in kind
+    /// order) so extending the space later cannot silently reshuffle
+    /// existing draws.
+    pub fn generate(space: &FaultSpace, master: u64, id: usize, horizon_ms: f64) -> FaultPlan {
+        if space.is_off() {
+            return FaultPlan::none();
+        }
+        let mut rng = Rng::new(master).split(3).split(id as u64 + 1);
+        let (wlo, whi) = space.window;
+        let mut at = |rng: &mut Rng| horizon_ms * (wlo + (whi - wlo) * rng.f64());
+        let n_deaths = rng.below(space.max_device_deaths as u64 + 1);
+        let n_stragglers = rng.below(space.max_stragglers as u64 + 1);
+        let n_hangs = rng.below(space.max_hangs as u64 + 1);
+        let mut events = Vec::with_capacity((n_deaths + n_stragglers + n_hangs) as usize);
+        for _ in 0..n_deaths {
+            events.push(FaultEvent {
+                at_ms: at(&mut rng),
+                kind: FaultKind::DeviceDeath {
+                    target: rng.next_u64(),
+                },
+            });
+        }
+        for _ in 0..n_stragglers {
+            events.push(FaultEvent {
+                at_ms: at(&mut rng),
+                kind: FaultKind::Straggler {
+                    target: rng.next_u64(),
+                    factor: rng.range_f64(space.straggler_factor.0, space.straggler_factor.1),
+                    span_ms: rng
+                        .range_f64(space.straggler_span_ms.0, space.straggler_span_ms.1),
+                },
+            });
+        }
+        for _ in 0..n_hangs {
+            events.push(FaultEvent {
+                at_ms: at(&mut rng),
+                kind: FaultKind::ReplicaHang {
+                    target: rng.next_u64(),
+                },
+            });
+        }
+        // Stable sort by fire time: equal times keep kind order, so the
+        // plan (and thus the event-queue schedule order) is deterministic.
+        events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+        FaultPlan { events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_space_generates_the_empty_plan() {
+        assert!(FaultSpace::OFF.is_off());
+        let plan = FaultPlan::generate(&FaultSpace::OFF, 42, 7, 6000.0);
+        assert!(plan.is_empty());
+        assert_eq!(plan, FaultPlan::none());
+    }
+
+    #[test]
+    fn property_generation_is_pure_and_seed_sensitive() {
+        let space = FaultSpace::chaos();
+        crate::util::quick::forall(
+            811,
+            24,
+            |r| (r.next_u64(), r.below(64) as usize),
+            |&(master, id)| {
+                let a = FaultPlan::generate(&space, master, id, 6000.0);
+                let b = FaultPlan::generate(&space, master, id, 6000.0);
+                if a != b {
+                    return Err(format!("plan not pure for ({master}, {id})"));
+                }
+                let other = FaultPlan::generate(&space, master ^ 0x5A5A, id, 6000.0);
+                // a different master *may* coincide on the empty plan;
+                // only flag identical non-trivial plans
+                if !a.is_empty() && a == other {
+                    return Err(format!("master seed ignored for ({master}, {id})"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn events_fire_inside_the_window_in_time_order() {
+        let space = FaultSpace::chaos();
+        let horizon = 8000.0;
+        let mut any = false;
+        for id in 0..48 {
+            let plan = FaultPlan::generate(&space, 99, id, horizon);
+            any |= !plan.is_empty();
+            for w in plan.events.windows(2) {
+                assert!(w[0].at_ms <= w[1].at_ms, "plan not sorted: {plan:?}");
+            }
+            for ev in &plan.events {
+                assert!(
+                    ev.at_ms >= horizon * space.window.0 - 1e-9
+                        && ev.at_ms <= horizon * space.window.1 + 1e-9,
+                    "event outside window: {ev:?}"
+                );
+            }
+        }
+        assert!(any, "chaos space never produced a fault across 48 ids");
+    }
+
+    #[test]
+    fn chaos_space_draws_every_fault_kind_somewhere() {
+        let space = FaultSpace::chaos();
+        let (mut deaths, mut strag, mut hangs) = (0, 0, 0);
+        for id in 0..64 {
+            for ev in &FaultPlan::generate(&space, 7, id, 5000.0).events {
+                match ev.kind {
+                    FaultKind::DeviceDeath { .. } => deaths += 1,
+                    FaultKind::Straggler { factor, span_ms, .. } => {
+                        assert!((2.0..5.0).contains(&factor), "factor {factor}");
+                        assert!((300.0..900.0).contains(&span_ms), "span {span_ms}");
+                        strag += 1;
+                    }
+                    FaultKind::ReplicaHang { .. } => hangs += 1,
+                }
+            }
+        }
+        assert!(
+            deaths > 0 && strag > 0 && hangs > 0,
+            "kinds not all drawn: deaths={deaths} stragglers={strag} hangs={hangs}"
+        );
+    }
+
+    #[test]
+    fn spec_parsing_overrides_and_rejects() {
+        let s = FaultSpace::parse_spec("deaths=2,hangs=0,factor=3.5,span_ms=500").unwrap();
+        assert_eq!(s.max_device_deaths, 2);
+        assert_eq!(s.max_hangs, 0);
+        assert_eq!(s.straggler_factor.1, 3.5);
+        assert_eq!(s.straggler_span_ms.1, 500.0);
+        assert_eq!(FaultSpace::parse_spec("").unwrap(), FaultSpace::chaos());
+        assert!(FaultSpace::parse_spec("bogus=1").is_err());
+        assert!(FaultSpace::parse_spec("deaths").is_err());
+        assert!(FaultSpace::parse_spec("factor=0.5").is_err());
+    }
+}

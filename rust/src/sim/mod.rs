@@ -12,6 +12,7 @@
 //! oracle for the differential property test below.  See DESIGN.md
 //! §"Sim-core memory layout" for the pop-order proof sketch.
 
+pub mod faults;
 pub mod slab;
 
 use std::cmp::Ordering;

@@ -180,6 +180,101 @@ mod tests {
     }
 
     #[test]
+    fn property_interleaved_ops_match_a_vecdeque_oracle() {
+        // Random interleavings of push/pop/front across several queues
+        // sharing one slab must match independent `VecDeque`s exactly —
+        // FIFO order, lengths, and the live count.  Failover re-queueing
+        // (coordinator/server.rs) leans on exactly this behavior when it
+        // drains a dead replica's queue into survivors.
+        use std::collections::VecDeque;
+        crate::util::quick::forall(
+            812,
+            40,
+            |r| {
+                let n = 50 + r.below(250) as usize;
+                (0..n)
+                    .map(|_| (r.below(100), r.below(4) as usize, r.f64()))
+                    .collect::<Vec<(u64, usize, f64)>>()
+            },
+            |ops| {
+                let mut slab = RequestSlab::new();
+                let mut qs = [ReqQueue::new(); 4];
+                let mut oracle: [VecDeque<f64>; 4] = Default::default();
+                for &(sel, qi, val) in ops {
+                    if sel < 55 {
+                        slab.push_back(&mut qs[qi], val);
+                        oracle[qi].push_back(val);
+                    } else if sel < 90 {
+                        let got = slab.pop_front(&mut qs[qi]);
+                        let want = oracle[qi].pop_front();
+                        crate::prop_assert!(
+                            got.map(f64::to_bits) == want.map(f64::to_bits),
+                            "pop diverged on queue {qi}: {got:?} vs {want:?}"
+                        );
+                    } else {
+                        let got = slab.front(&qs[qi]);
+                        let want = oracle[qi].front().copied();
+                        crate::prop_assert!(
+                            got.map(f64::to_bits) == want.map(f64::to_bits),
+                            "front diverged on queue {qi}"
+                        );
+                    }
+                    crate::prop_assert!(
+                        qs[qi].len() == oracle[qi].len(),
+                        "len diverged on queue {qi}: {} vs {}",
+                        qs[qi].len(),
+                        oracle[qi].len()
+                    );
+                }
+                let live: usize = oracle.iter().map(|q| q.len()).sum();
+                crate::prop_assert!(slab.live() == live, "live count diverged");
+                // drain everything; each queue must replay its oracle
+                for (qi, q) in qs.iter_mut().enumerate() {
+                    while let Some(want) = oracle[qi].pop_front() {
+                        let got = slab.pop_front(q);
+                        crate::prop_assert!(
+                            got.map(f64::to_bits) == Some(want.to_bits()),
+                            "drain diverged on queue {qi}"
+                        );
+                    }
+                    crate::prop_assert!(slab.pop_front(q).is_none(), "queue {qi} not empty");
+                }
+                crate::prop_assert!(slab.live() == 0, "slab live after full drain");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn free_list_recycles_nodes_in_lifo_order() {
+        // The free list is intrusive and LIFO: after popping nodes 0..3,
+        // fresh pushes must reuse index 3, 2, 1, 0 — no growth.  Pinning
+        // the reuse order catches accidental rewrites that would still
+        // pass the capacity bound but change allocation locality.
+        let mut slab = RequestSlab::new();
+        let mut q = ReqQueue::new();
+        for i in 0..4 {
+            slab.push_back(&mut q, i as f64);
+        }
+        for _ in 0..4 {
+            slab.pop_front(&mut q);
+        }
+        assert_eq!(slab.capacity(), 4);
+        assert_eq!(slab.live(), 0);
+        for i in 0..4 {
+            slab.push_back(&mut q, 10.0 + i as f64);
+            assert_eq!(slab.capacity(), 4, "push {i} allocated a fresh node");
+        }
+        // a fifth push must grow the arena exactly once
+        slab.push_back(&mut q, 99.0);
+        assert_eq!(slab.capacity(), 5);
+        assert_eq!(q.len(), 5);
+        for want in [10.0, 11.0, 12.0, 13.0, 99.0] {
+            assert_eq!(slab.pop_front(&mut q), Some(want));
+        }
+    }
+
+    #[test]
     fn emptied_queue_handle_is_reusable() {
         let mut slab = RequestSlab::new();
         let mut q = ReqQueue::new();

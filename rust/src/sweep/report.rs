@@ -40,6 +40,16 @@ pub struct Aggregate {
     pub p95_pred_error: f64,
     /// Total prediction-error samples across all tasks.
     pub pred_err_samples: u64,
+    /// Chaos lane: faults that actually fired across all tasks (0 with
+    /// faults off — the fault keys below are then omitted from the JSON
+    /// so fault-free reports stay byte-identical to pre-chaos ones).
+    pub faults_injected: u64,
+    /// Recovery episodes closed across all tasks.
+    pub recovery_samples: u64,
+    /// Worst per-task recovery p95 (ms) — the chaos gate metric.  Max,
+    /// not mean: one task recovering slowly is exactly the regression
+    /// the lane exists to catch.
+    pub recovery_ms_p95: f64,
 }
 
 /// Mean of `f` over the tasks that actually recorded prediction-error
@@ -78,11 +88,17 @@ impl Aggregate {
             mean_pred_error: sampled_mean(&feasible, |r| r.pred_err_mean),
             p95_pred_error: sampled_mean(&feasible, |r| r.pred_err_p95),
             pred_err_samples: results.iter().map(|r| r.pred_err_samples).sum(),
+            faults_injected: results.iter().map(|r| r.faults_injected).sum(),
+            recovery_samples: results.iter().map(|r| r.recovery_samples).sum(),
+            recovery_ms_p95: results
+                .iter()
+                .map(|r| r.recovery_ms_p95)
+                .fold(0.0, f64::max),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("tasks", self.tasks)
             .set("feasible", self.feasible)
             .set("mean_cost_per_hour", self.mean_cost_per_hour)
@@ -95,7 +111,16 @@ impl Aggregate {
             .set("mean_gpus", self.mean_gpus)
             .set("mean_pred_error", self.mean_pred_error)
             .set("p95_pred_error", self.p95_pred_error)
-            .set("pred_err_samples", self.pred_err_samples)
+            .set("pred_err_samples", self.pred_err_samples);
+        // fault keys only when a fault actually fired: fault-free reports
+        // (and the committed fingerprint golden) stay byte-identical
+        if self.faults_injected > 0 {
+            j = j
+                .set("faults_injected", self.faults_injected)
+                .set("recovery_samples", self.recovery_samples)
+                .set("recovery_ms_p95", self.recovery_ms_p95);
+        }
+        j
     }
 }
 
@@ -129,6 +154,14 @@ fn result_json(r: &ScenarioResult, with_wall: bool) -> Json {
         .set("pred_err_mean", r.pred_err_mean)
         .set("pred_err_p95", r.pred_err_p95)
         .set("pred_err_samples", r.pred_err_samples);
+    if r.faults_injected > 0 {
+        // same conditional-key discipline as the aggregate: a task that
+        // saw no fault serializes exactly as it did pre-chaos
+        j = j
+            .set("faults_injected", r.faults_injected)
+            .set("recovery_samples", r.recovery_samples)
+            .set("recovery_ms_p95", r.recovery_ms_p95);
+    }
     if with_wall {
         // `placements` is deterministic, but it is a work count feeding
         // `plan_throughput_pps`, not a scenario outcome — it stays in the
@@ -156,7 +189,7 @@ impl SweepReport {
     }
 
     fn config_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("scenarios", self.config.scenarios)
             .set("seeds", self.config.seeds)
             .set("master_seed", self.config.master_seed)
@@ -165,7 +198,13 @@ impl SweepReport {
             .set("epochs", self.config.space.epochs)
             .set("epoch_ms", self.config.space.epoch_ms)
             .set("mismatch", self.config.space.mismatch)
-            .set("calibrate", self.config.calibrate)
+            .set("calibrate", self.config.calibrate);
+        // written only in the chaos lane; the bench gate treats a missing
+        // key as `false` so pre-chaos baselines still shape-match
+        if !self.config.space.faults.is_off() {
+            j = j.set("faults", true);
+        }
+        j
     }
 
     /// The deterministic subset: identical across `--parallel` widths.
@@ -263,6 +302,9 @@ mod tests {
             served: 1000,
             arrivals: 1010,
             dropped: 0,
+            faults_injected: 0,
+            recovery_samples: 0,
+            recovery_ms_p95: 0.0,
             gpu_seconds: 33.0,
             mismatch_pct: 0.0,
             pred_err_mean: 0.2,
@@ -339,6 +381,45 @@ mod tests {
         let mut different = a.clone();
         different.results[0].cost_per_hour = 11.0;
         assert_ne!(a.fingerprint(), different.fingerprint());
+    }
+
+    #[test]
+    fn fault_keys_appear_only_when_faults_fired() {
+        // fault-free: no fault keys anywhere (byte-compat with the
+        // pre-chaos report shape and the committed fingerprint golden)
+        let clean = SweepReport::new(config(), vec![result(0, 10.0, 1.0)], 1.0);
+        let text = clean.fingerprint();
+        for key in ["faults_injected", "recovery_ms_p95", "\"faults\""] {
+            assert!(!text.contains(key), "fault-free report leaked {key}: {text}");
+        }
+        // chaos: per-task + aggregate fault keys and the config marker
+        let mut chaotic = clean.clone();
+        chaotic.config.space = crate::sweep::ScenarioSpace::chaos();
+        chaotic.results[0].faults_injected = 2;
+        chaotic.results[0].recovery_samples = 1;
+        chaotic.results[0].recovery_ms_p95 = 812.5;
+        let parsed = Json::parse(&chaotic.fingerprint()).unwrap();
+        assert_eq!(parsed.path("config.faults").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            parsed.path("scenarios.0.faults_injected").unwrap().as_u64(),
+            Some(2)
+        );
+        assert_eq!(
+            parsed.path("aggregate.recovery_ms_p95").unwrap().as_f64(),
+            Some(812.5)
+        );
+        // aggregate recovery p95 is the max over tasks (worst recovery)
+        let b = {
+            let mut r = result(1, 10.0, 1.0);
+            r.faults_injected = 1;
+            r.recovery_samples = 1;
+            r.recovery_ms_p95 = 300.0;
+            r
+        };
+        let agg = Aggregate::of(&[chaotic.results[0].clone(), b]);
+        assert_eq!(agg.faults_injected, 3);
+        assert_eq!(agg.recovery_samples, 2);
+        assert_eq!(agg.recovery_ms_p95, 812.5);
     }
 
     #[test]

@@ -14,9 +14,10 @@
 
 use super::report::SweepReport;
 use super::scenario::{stream, Scenario, ScenarioSpace};
-use crate::coordinator::{dropped_requests, ClusterSim, Policy, Reprovisioner};
+use crate::coordinator::{dropped_requests, ClusterSim, Policy, Reprovisioner, Resilience};
 use crate::gpu::GpuKind;
 use crate::provisioner::{heterogeneous, ProfiledSystem};
+use crate::sim::faults::FaultPlan;
 use crate::util::stats::{mean, percentile};
 use crate::workload::trace::RateTrace;
 use crate::workload::ArrivalKind;
@@ -69,8 +70,19 @@ pub struct ScenarioResult {
     pub migrations: u32,
     pub served: u64,
     pub arrivals: u64,
-    /// `arrivals - served - still_queued`; must be 0 (conservation).
+    /// Conservation residual `arrivals - served - still_queued`.  Must be
+    /// 0 fault-free; under an injected `FaultPlan` it equals the explicit
+    /// per-workload `dropped` counts (shed + orphaned requests), which the
+    /// chaos lane bounds and gates rather than forbids.
     pub dropped: i64,
+    /// Faults that actually fired (resolved to a live target).  0 outside
+    /// the chaos lane; fault keys are serialized only when nonzero so the
+    /// fault-free report (and its fingerprint golden) is byte-identical.
+    pub faults_injected: u64,
+    /// Recovery episodes closed (fault instant -> first batch served by a
+    /// replacement replica) and their p95 in ms (0 when no samples).
+    pub recovery_samples: u64,
+    pub recovery_ms_p95: f64,
     /// Integrated occupied-device time over the run.
     pub gpu_seconds: f64,
     /// Worst believed-coefficient error injected by the mismatch lane
@@ -156,6 +168,9 @@ fn serve_task(
         served: 0,
         arrivals: 0,
         dropped: 0,
+        faults_injected: 0,
+        recovery_samples: 0,
+        recovery_ms_p95: 0.0,
         gpu_seconds: 0.0,
         mismatch_pct: scenario.mismatch_pct(),
         pred_err_mean: 0.0,
@@ -190,6 +205,19 @@ fn serve_task(
     if cfg.calibrate {
         policy = policy.with_calibration();
     }
+    if !cfg.space.faults.is_off() {
+        // chaos lane: full resilience (breakers + shed + hedge) and a
+        // fault plan from its own RNG lane (3, task+1) — disjoint from
+        // scenario generation and sim seeds, so the arrival streams are
+        // byte-identical with faults on or off
+        policy = policy.with_resilience(Resilience::ALL);
+        sim.set_fault_plan(FaultPlan::generate(
+            &cfg.space.faults,
+            cfg.master_seed,
+            task,
+            scenario.horizon_ms(),
+        ));
+    }
     sim.set_serving_policy(Box::new(policy));
     sim.set_rate_trace(&trace, scenario.epoch_ms);
     sim.set_horizon(scenario.horizon_ms(), scenario.warmup_ms);
@@ -205,6 +233,12 @@ fn serve_task(
     result.served = stats.iter().map(|s| s.served).sum();
     result.arrivals = stats.iter().map(|s| s.arrivals).sum();
     result.dropped = dropped_requests(&stats);
+    result.faults_injected = sim.faults_injected();
+    let recovery = sim.recovery_ms();
+    if !recovery.is_empty() {
+        result.recovery_samples = recovery.len() as u64;
+        result.recovery_ms_p95 = percentile(recovery, 0.95);
+    }
     result.gpu_seconds = sim.gpu_seconds();
     let errs = sim.serving_policy().prediction_errors();
     if !errs.is_empty() {
@@ -302,6 +336,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::faults::FaultSpace;
     use crate::sweep::scenario::Fleet;
 
     fn tiny() -> SweepConfig {
@@ -318,6 +353,7 @@ mod tests {
                 warmup_ms: 200.0,
                 fleets: vec![Fleet::V100Only, Fleet::Heterogeneous],
                 mismatch: false,
+                faults: FaultSpace::OFF,
             },
             calibrate: false,
         }
@@ -368,6 +404,34 @@ mod tests {
                     r.mismatch_pct
                 );
                 assert!(r.served > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_lane_injects_faults_and_serves_through_them() {
+        let mut cfg = tiny();
+        cfg.scenarios = 6;
+        cfg.space.faults = FaultSpace::chaos();
+        let report = run_sweep(&cfg);
+        let injected: u64 = report.results.iter().map(|r| r.faults_injected).sum();
+        assert!(injected > 0, "chaos space never landed a fault in 6 tasks");
+        for r in &report.results {
+            assert!(r.feasible && r.served > 0);
+            // explicit accounting: the residual IS the dropped count, and
+            // it stays a small fraction of the offered load
+            assert!(r.dropped >= 0, "negative residual (double count): {r:?}");
+            assert!(
+                (r.dropped as u64) <= r.arrivals / 10,
+                "chaos lane dropped {} of {} arrivals: {r:?}",
+                r.dropped,
+                r.arrivals
+            );
+            if r.recovery_samples > 0 {
+                assert!(r.recovery_ms_p95 > 0.0 && r.recovery_ms_p95.is_finite());
+            }
+            if r.faults_injected == 0 {
+                assert_eq!(r.dropped, 0, "dropped without a fired fault: {r:?}");
             }
         }
     }

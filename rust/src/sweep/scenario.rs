@@ -12,6 +12,7 @@
 
 use crate::gpu::{GpuKind, ALL_MODELS};
 use crate::provisioner::{ProfiledSystem, WorkloadSpec};
+use crate::sim::faults::FaultSpace;
 use crate::util::rng::Rng;
 use crate::workload::envelope;
 use crate::workload::trace::TraceKind;
@@ -97,6 +98,12 @@ pub struct ScenarioSpace {
     /// the ground truth — the planner's model is now 10-30% wrong, the
     /// regime the calibration layer exists for.
     pub mismatch: bool,
+    /// Chaos lane: the fault space each scenario's `FaultPlan` is drawn
+    /// from (its own RNG lane `(3, id+1)`, independent of scenario
+    /// generation and sim seeds).  `FaultSpace::OFF` — the default for
+    /// every non-chaos space — generates empty plans, which the serving
+    /// loop treats as a bitwise no-op.
+    pub faults: FaultSpace,
 }
 
 impl ScenarioSpace {
@@ -111,6 +118,7 @@ impl ScenarioSpace {
             warmup_ms: 500.0,
             fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
             mismatch: false,
+            faults: FaultSpace::OFF,
         }
     }
 
@@ -125,6 +133,7 @@ impl ScenarioSpace {
             warmup_ms: 1_000.0,
             fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
             mismatch: false,
+            faults: FaultSpace::OFF,
         }
     }
 
@@ -133,6 +142,17 @@ impl ScenarioSpace {
     pub fn mismatch() -> ScenarioSpace {
         ScenarioSpace {
             mismatch: true,
+            ..ScenarioSpace::quick()
+        }
+    }
+
+    /// The chaos lane (`igniter sweep --faults`): the quick space with
+    /// fault injection enabled — every scenario draws a `FaultPlan`
+    /// (device deaths, stragglers, hangs) from its own RNG lane and the
+    /// serving policy gets full resilience (`Resilience::ALL`).
+    pub fn chaos() -> ScenarioSpace {
+        ScenarioSpace {
+            faults: FaultSpace::chaos(),
             ..ScenarioSpace::quick()
         }
     }

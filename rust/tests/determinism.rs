@@ -222,6 +222,74 @@ fn calibrated_closed_loop_bit_identical_per_seed_and_inert_at_zero_observations(
 }
 
 #[test]
+fn empty_fault_plan_is_a_bitwise_no_op() {
+    // The chaos layer's disabled lane: installing `FaultPlan::none()`
+    // (exactly what `FaultSpace::OFF` generates) must leave the closed
+    // loop bit-identical to a sim that never heard of faults — zero
+    // extra events, zero extra sequence numbers, identical float paths.
+    // Full resilience flags with no fault state must be equally inert:
+    // breakers only *observe* until something actually degrades.
+    use igniter::coordinator::{ClusterSim, Policy, Reprovisioner, Resilience};
+    use igniter::provisioner;
+    use igniter::sim::faults::FaultPlan;
+    use igniter::workload::{table1_workloads, ArrivalKind};
+
+    let sys = igniter::profiler::profile_system(GpuKind::V100, 42);
+    let specs = table1_workloads();
+    let plan = provisioner::provision(&sys, &specs);
+    let run = |with_plan: bool, resilience: bool| {
+        let mut sim = ClusterSim::new(
+            GpuKind::V100,
+            &plan,
+            &specs,
+            Policy::Static,
+            ArrivalKind::Poisson,
+            17,
+            &[],
+        );
+        let mut rp = Reprovisioner::new(sys.clone(), specs.clone(), plan.clone());
+        if resilience {
+            rp = rp.with_resilience(Resilience::ALL);
+        }
+        sim.set_serving_policy(Box::new(rp));
+        if with_plan {
+            sim.set_fault_plan(FaultPlan::none());
+        }
+        sim.set_horizon(10_000.0, 1_000.0);
+        let stats = sim.run();
+        let fp: Vec<_> = stats
+            .iter()
+            .map(|s| {
+                (
+                    s.served,
+                    s.arrivals,
+                    s.still_queued,
+                    s.dropped,
+                    s.p99_ms.to_bits(),
+                    s.mean_ms.to_bits(),
+                    s.final_resources.to_bits(),
+                    s.replica_served.clone(),
+                )
+            })
+            .collect();
+        (
+            fp,
+            sim.migrations(),
+            sim.gpu_seconds().to_bits(),
+            sim.faults_injected(),
+        )
+    };
+    let base = run(false, false);
+    assert_eq!(base.3, 0);
+    assert_eq!(base, run(true, false), "empty fault plan perturbed serving");
+    assert_eq!(
+        base,
+        run(true, true),
+        "resilience flags perturbed fault-free serving"
+    );
+}
+
+#[test]
 fn profiler_is_bit_identical_per_seed() {
     // Two independent profiling passes with the same seed must agree on
     // every fitted coefficient exactly (PartialEq on f64 = bitwise here,

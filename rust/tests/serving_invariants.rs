@@ -371,6 +371,76 @@ fn migration_conserves_requests_under_spiky_replans() {
 }
 
 #[test]
+fn request_conservation_holds_under_random_fault_plans() {
+    // The chaos-layer ledger: for any sampled `FaultPlan` (device deaths,
+    // stragglers, hangs) served with full resilience,
+    //   arrivals == served + still_queued + dropped
+    // per workload — every request lost to a fault is counted explicitly,
+    // never silently — and the residual `dropped_requests` equals the
+    // explicit per-workload counts exactly.  Fault-free tasks must not
+    // drop anything.
+    use igniter::coordinator::{dropped_requests, Resilience};
+    use igniter::sim::faults::{FaultPlan, FaultSpace};
+
+    let specs = table1_workloads();
+    let plan = ig::provision(&SYS, &specs);
+    let space = FaultSpace::chaos();
+    forall(
+        44,
+        8,
+        |r| (r.next_u64(), r.below(64) as usize),
+        |&(master, id)| {
+            let fplan = FaultPlan::generate(&space, master, id, 12_000.0);
+            let scheduled = fplan.len() as u64;
+            let mut sim = ClusterSim::new(
+                GpuKind::V100,
+                &plan,
+                &specs,
+                Policy::Static,
+                ArrivalKind::Poisson,
+                master ^ 0xD1CE,
+                &[],
+            );
+            sim.set_serving_policy(Box::new(
+                Reprovisioner::new((*SYS).clone(), specs.clone(), plan.clone())
+                    .with_resilience(Resilience::ALL),
+            ));
+            sim.set_fault_plan(fplan);
+            sim.set_horizon(12_000.0, 1_000.0);
+            let stats = sim.run();
+            for st in &stats {
+                if st.arrivals != st.served + st.still_queued + st.dropped {
+                    return Err(format!(
+                        "{}: arrivals {} != served {} + queued {} + dropped {} \
+                         (master {master}, id {id})",
+                        st.name, st.arrivals, st.served, st.still_queued, st.dropped
+                    ));
+                }
+            }
+            let injected = sim.faults_injected();
+            if injected > scheduled {
+                return Err(format!(
+                    "injected {injected} > scheduled {scheduled} (master {master}, id {id})"
+                ));
+            }
+            let explicit: u64 = stats.iter().map(|s| s.dropped).sum();
+            let residual = dropped_requests(&stats);
+            if residual != explicit as i64 {
+                return Err(format!(
+                    "residual {residual} != explicit dropped {explicit} (master {master}, id {id})"
+                ));
+            }
+            if injected == 0 && explicit != 0 {
+                return Err(format!(
+                    "dropped {explicit} with no fault fired (master {master}, id {id})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn zero_rate_edge_is_handled() {
     // A workload with a tiny rate must not wedge the batcher (timeout
     // dispatch path) nor divide by zero anywhere.

@@ -20,6 +20,7 @@ fn tiny_space() -> ScenarioSpace {
         warmup_ms: 200.0,
         fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
         mismatch: false,
+        faults: igniter::sim::faults::FaultSpace::OFF,
     }
 }
 
@@ -39,6 +40,13 @@ fn mismatch_cfg(master_seed: u64, parallel: usize) -> SweepConfig {
     let mut c = cfg(master_seed, parallel);
     c.space.mismatch = true;
     c.calibrate = true;
+    c
+}
+
+/// The chaos lane (`--faults`) under the same determinism contract.
+fn chaos_cfg(master_seed: u64, parallel: usize) -> SweepConfig {
+    let mut c = cfg(master_seed, parallel);
+    c.space.faults = igniter::sim::faults::FaultSpace::chaos();
     c
 }
 
@@ -97,6 +105,63 @@ fn mismatch_and_calibration_lane_is_deterministic_too() {
     for r in &seq.results {
         assert_eq!(r.dropped, 0, "{r:?}");
     }
+}
+
+#[test]
+fn chaos_lane_is_deterministic_and_distinct() {
+    // The `--faults` lane carries the most extra state of any lane —
+    // fault plans, breaker trips, failover respecs, hedged routing —
+    // and every bit of it must still collapse to one fingerprint across
+    // worker counts.  The lane must also actually inject (otherwise the
+    // chaos gate gates nothing) and must differ from the plain sweep.
+    let seq = run_sweep(&chaos_cfg(7, 1));
+    let par = run_sweep(&chaos_cfg(7, 8));
+    assert_eq!(seq.fingerprint(), par.fingerprint(), "chaos lane diverged");
+    let agg = seq.aggregate();
+    assert!(agg.faults_injected > 0, "chaos lane injected nothing");
+    assert_ne!(
+        seq.fingerprint(),
+        run_sweep(&cfg(7, 1)).fingerprint(),
+        "chaos lane produced the plain sweep"
+    );
+    // drops are explicit and bounded, never a silent leak
+    assert!(agg.total_dropped >= 0, "negative residual: {agg:?}");
+    assert!(
+        (agg.total_dropped as u64) <= agg.total_arrivals / 10,
+        "chaos lane dropped {} of {}",
+        agg.total_dropped,
+        agg.total_arrivals
+    );
+    for r in &seq.results {
+        if r.faults_injected == 0 {
+            assert_eq!(r.dropped, 0, "dropped without a fired fault: {r:?}");
+        }
+    }
+}
+
+#[test]
+fn fault_free_chaos_space_leaves_the_plain_fingerprint_untouched() {
+    // Bitwise-inertness at sweep scale: a chaos-space config whose every
+    // task happens to draw the empty plan must serialize scenario rows
+    // identical to the plain sweep (the config section legitimately
+    // differs — it records the lane).  We force empty plans by zeroing
+    // the event maxima while keeping the space "on"-shaped.
+    let mut c = cfg(7, 1);
+    c.space.faults = igniter::sim::faults::FaultSpace {
+        max_device_deaths: 0,
+        max_stragglers: 0,
+        max_hangs: 0,
+        ..igniter::sim::faults::FaultSpace::chaos()
+    };
+    // all maxima zero => is_off() => identical to the plain lane even in
+    // the config section
+    let zeroed = run_sweep(&c);
+    let plain = run_sweep(&cfg(7, 1));
+    assert_eq!(
+        zeroed.fingerprint(),
+        plain.fingerprint(),
+        "an empty fault plan perturbed the sweep"
+    );
 }
 
 #[test]

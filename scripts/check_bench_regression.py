@@ -33,6 +33,23 @@ Compares three headline metrics of ``igniter sweep`` output:
   ``bench-sweep`` artifact of a green run and commit it), never from a
   faster dev machine.
 
+Chaos-lane runs (``igniter sweep --faults``; ``config.faults: true`` in
+the report) are gated on two extra metrics:
+
+* ``aggregate.recovery_ms_p95`` — worst per-task recovery p95 (fault
+  instant to first replacement batch served); lower is better, gated
+  like cost.  Skipped with a notice when the baseline predates it.
+* dropped fraction — ``total_dropped / total_arrivals``; the chaos lane
+  legitimately drops a bounded fraction (deadline shed + orphaned
+  in-flight requests), so instead of the fault-free ``== 0`` rule it is
+  gated against the baseline's fraction (with a 1% absolute floor).
+  Structurally a chaos run must have injected faults, closed at least
+  one recovery episode, and kept drops under 10% of arrivals.
+
+Fault-free runs keep the strict zero-drop structural rule, and a
+baseline blessed before the chaos lane existed shape-matches a
+fault-free candidate via the ``faults: false`` default.
+
 ``tol`` defaults to 0.20 (the 20% CI gate) and can be overridden with
 ``BENCH_TOLERANCE``; ``wall_tol`` defaults to 0.50 and can be
 overridden with ``BENCH_WALL_TOLERANCE``.  A baseline marked ``"provisional": true`` (one that
@@ -94,9 +111,30 @@ def main() -> None:
     feasible = metric(cand, "aggregate.feasible")
     dropped = metric(cand, "aggregate.total_dropped")
     served = metric(cand, "aggregate.total_served")
+    faults_on = bool(cand.get("config", {}).get("faults", False))
     if tasks <= 0 or feasible <= 0:
         die(f"sweep ran no feasible tasks (tasks={tasks}, feasible={feasible})")
-    if dropped != 0:
+    if faults_on:
+        # chaos lane: drops are explicit and bounded, never silent — and
+        # the lane must actually have exercised the failover machinery,
+        # else it gates nothing
+        if dropped < 0:
+            die(f"chaos sweep residual {dropped} < 0 — requests double-counted")
+        arrivals = metric(cand, "aggregate.total_arrivals")
+        if dropped > arrivals * 0.10:
+            die(
+                f"chaos sweep dropped {dropped:.0f} of {arrivals:.0f} arrivals "
+                "— failover not absorbing faults"
+            )
+        injected = metric_opt(cand, "aggregate.faults_injected")
+        if injected is None or injected <= 0:
+            die("chaos sweep injected no faults (the chaos lane gates nothing)")
+        if metric_opt(cand, "aggregate.recovery_ms_p95") is None:
+            die("chaos sweep lacks 'aggregate.recovery_ms_p95' (recovery metric broken)")
+        episodes = metric_opt(cand, "aggregate.recovery_samples")
+        if episodes is None or episodes <= 0:
+            die("chaos sweep closed no recovery episodes (failover never replaced capacity)")
+    elif dropped != 0:
         die(f"sweep dropped {dropped} requests — conservation violated")
     if served <= 0:
         die("sweep served no requests")
@@ -132,6 +170,7 @@ def main() -> None:
     for cfg in (base_cfg, cand_cfg):
         cfg.setdefault("mismatch", False)
         cfg.setdefault("calibrate", False)
+        cfg.setdefault("faults", False)
     mismatched = sorted(
         k for k in set(base_cfg) | set(cand_cfg) if base_cfg.get(k) != cand_cfg.get(k)
     )
@@ -191,6 +230,36 @@ def main() -> None:
                 )
             else:
                 gate(name, path, True, wall_tol)
+
+    if faults_on:
+        # chaos-lane metrics: recovery time (lower is better) and the
+        # dropped fraction (bounded against the baseline's fraction with
+        # a 1% absolute floor — tiny integer drop counts are too noisy
+        # for a bare ratio)
+        path = "aggregate.recovery_ms_p95"
+        if metric_opt(base, path) is None:
+            print(f"  {'recovery_ms_p95':<22} skipped (baseline lacks '{path}' — re-bless to gate it)")
+        else:
+            gate("recovery_ms_p95", path, False, det_tol)
+        b_arrivals = metric_opt(base, "aggregate.total_arrivals")
+        b_dropped = metric_opt(base, "aggregate.total_dropped")
+        if b_arrivals is None or b_arrivals <= 0 or b_dropped is None:
+            print(
+                f"  {'dropped_fraction':<22} skipped (baseline lacks chaos drop "
+                "counts — re-bless to gate it)"
+            )
+        else:
+            b_frac = b_dropped / b_arrivals
+            c_frac = dropped / max(metric(cand, "aggregate.total_arrivals"), 1.0)
+            allowed = max(b_frac * (1.0 + det_tol), 0.01)
+            ok = c_frac <= allowed
+            status = "ok" if ok else "REGRESSED"
+            print(
+                f"  {'dropped_fraction':<22} baseline {b_frac:12.4f}  candidate "
+                f"{c_frac:12.4f}  (<= {allowed:.4f}) {status}"
+            )
+            if not ok:
+                failures.append("dropped_fraction")
 
     if provisional:
         print(
