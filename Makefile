@@ -11,6 +11,10 @@
 #                     (deaths/stragglers/hangs) served through the
 #                     resilience stack, gated once a chaos baseline exists
 #   make bless-bench-chaos  bless BENCH_baseline_chaos.json from a local run
+#   make sweep-mig    the CI MIG lane: discrete-slice A100/H100 fleets
+#                     through the fragmentation-aware packer, gated once
+#                     a MIG baseline exists
+#   make bless-bench-mig  bless BENCH_baseline_mig.json from a local run
 #   make bless-golden regenerate + overwrite the dynamic-summary golden
 #   make bless-bench  re-bless BENCH_baseline.json from a fresh local run
 #   make artifacts    AOT-lower the model zoo to artifacts/ (needs jax)
@@ -20,15 +24,15 @@ CARGO ?= cargo
 PYTHON ?= python
 
 .PHONY: verify build test test-invariants bench-build fmt-check clippy pytest \
-        sweep-quick sweep-full-smoke sweep-chaos bless-golden bless-bench \
-        bless-bench-chaos artifacts clean
+        sweep-quick sweep-full-smoke sweep-chaos sweep-mig bless-golden \
+        bless-bench bless-bench-chaos bless-bench-mig artifacts clean
 
 # `test` already runs every integration target (serving invariants,
 # determinism, sweep determinism, provisioner properties); `bench-build`
 # compiles every bench target (`cargo bench --no-run`), including the
 # sim-core throughput bench in benches/simulator.rs; `sweep-quick` runs
 # the same sweep + regression gate as the CI bench-sweep job.
-verify: build test bench-build fmt-check clippy pytest sweep-quick sweep-chaos
+verify: build test bench-build fmt-check clippy pytest sweep-quick sweep-chaos sweep-mig
 	@echo "verify: OK"
 
 # Standalone pass over just the serving/provisioning invariant +
@@ -83,6 +87,22 @@ sweep-chaos: build
 		echo "chaos lane ungated — run 'make bless-bench-chaos' and commit BENCH_baseline_chaos.json"; \
 	fi
 
+# The CI MIG lane: the quick-scale sweep over discrete-slice MIG fleets
+# (A100/H100; legal 1g/2g/3g/4g/7g profiles of the 7-GPC envelope) with
+# the fragmentation-aware packer head-to-head against FFD++ and the
+# iGniter scorer.  The binary enforces the structural bar (packer never
+# loses to FFD); the run-over-run stranded-capacity / cost-ratio gates
+# engage once a MIG baseline is blessed (bless-bench-mig, or commit a
+# green CI run's artifact).
+sweep-mig: build
+	$(CARGO) run --release -- sweep --fleet mig --scenarios 100 --seeds 2 --parallel 8 \
+		--out BENCH_mig.json
+	@if [ -f BENCH_baseline_mig.json ]; then \
+		$(PYTHON) scripts/check_bench_regression.py BENCH_baseline_mig.json BENCH_mig.json; \
+	else \
+		echo "MIG lane ungated — run 'make bless-bench-mig' and commit BENCH_baseline_mig.json"; \
+	fi
+
 # Regenerate the dynamic-summary golden and the pinned sweep-fingerprint
 # digest from this machine's run, overwriting the checked-in files
 # (commit the result; see rust/tests/golden/README.md for when
@@ -106,6 +126,13 @@ bless-bench-chaos: build
 		--out BENCH_baseline_chaos.json
 	@echo "BENCH_baseline_chaos.json blessed from this run — review and commit it"
 
+# Promote a fresh MIG sweep to the MIG baseline (same shape as the
+# sweep-mig lane so the gate's config check matches).
+bless-bench-mig: build
+	$(CARGO) run --release -- sweep --fleet mig --scenarios 100 --seeds 2 --parallel 8 \
+		--out BENCH_baseline_mig.json
+	@echo "BENCH_baseline_mig.json blessed from this run — review and commit it"
+
 pytest:
 	$(PYTHON) -m pytest python/tests -q
 
@@ -114,4 +141,4 @@ artifacts:
 
 clean:
 	$(CARGO) clean
-	rm -rf results BENCH_sweep.json BENCH_full_smoke.json BENCH_chaos.json
+	rm -rf results BENCH_sweep.json BENCH_full_smoke.json BENCH_chaos.json BENCH_mig.json

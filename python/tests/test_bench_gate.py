@@ -7,6 +7,12 @@ drops are bounded, and ``recovery_ms_p95`` / the dropped fraction gate
 against the baseline — with skip notices when the baseline predates the
 chaos lane.  These tests drive the script as a subprocess on synthetic
 reports, exactly how CI invokes it.
+
+The MIG lane (``config.mig: true``) follows the same shape: a MIG run
+must have feasible MIG tasks and a packer-vs-FFD cost ratio at or below
+1 (structural — the packer carries an FFD portfolio fallback), and
+``mean_stranded_pct`` / ``packer_vs_ffd_cost_ratio`` gate against the
+baseline with skip notices when the baseline predates the metrics.
 """
 
 import json
@@ -27,6 +33,10 @@ def report(
     faults_injected=None,
     recovery_samples=None,
     recovery_ms_p95=None,
+    mig=None,
+    mig_tasks=None,
+    mean_stranded_pct=None,
+    packer_vs_ffd_cost_ratio=None,
 ):
     """A minimal structurally-valid sweep report."""
     agg = {
@@ -49,6 +59,10 @@ def report(
         ("faults_injected", faults_injected),
         ("recovery_samples", recovery_samples),
         ("recovery_ms_p95", recovery_ms_p95),
+        # MIG keys are likewise conditionally serialized by the Rust side
+        ("mig_tasks", mig_tasks),
+        ("mean_stranded_pct", mean_stranded_pct),
+        ("packer_vs_ffd_cost_ratio", packer_vs_ffd_cost_ratio),
     ):
         if val is not None:
             agg[key] = val
@@ -65,6 +79,8 @@ def report(
     }
     if faults is not None:
         config["faults"] = faults
+    if mig is not None:
+        config["mig"] = mig
     return {
         "config": config,
         "scenarios": [{"scenario": 0, "feasible": True}],
@@ -86,6 +102,17 @@ def chaos_report(**overrides):
         faults_injected=12,
         recovery_samples=6,
         recovery_ms_p95=900.0,
+    )
+    kwargs.update(overrides)
+    return report(**kwargs)
+
+
+def mig_report(**overrides):
+    kwargs = dict(
+        mig=True,
+        mig_tasks=8,
+        mean_stranded_pct=12.0,
+        packer_vs_ffd_cost_ratio=0.93,
     )
     kwargs.update(overrides)
     return report(**kwargs)
@@ -194,3 +221,61 @@ def test_pre_chaos_fault_free_baseline_still_shape_matches(tmp_path):
     # both sides keeps them comparable
     r = run_gate(tmp_path, report(), report())
     assert r.returncode == 0, r.stderr
+
+
+def test_mig_candidate_passes_and_gates_fragmentation(tmp_path):
+    r = run_gate(tmp_path, mig_report(), mig_report())
+    assert r.returncode == 0, r.stderr
+    assert "mig_stranded_pct" in r.stdout
+    assert "packer_vs_ffd" in r.stdout
+    assert "bench gate: PASS" in r.stdout
+
+
+def test_non_mig_run_prints_no_mig_rows(tmp_path):
+    r = run_gate(tmp_path, report(), report())
+    assert r.returncode == 0, r.stderr
+    assert "mig" not in r.stdout.lower()
+
+
+def test_mig_stranded_capacity_regression_fails(tmp_path):
+    # baseline 12% -> candidate 20% stranded: ratio 1.67, beyond the 20% gate
+    r = run_gate(tmp_path, mig_report(), mig_report(mean_stranded_pct=20.0))
+    assert r.returncode != 0
+    assert "mig_stranded_pct" in r.stderr
+
+
+def test_mig_packer_losing_to_ffd_fails_structurally(tmp_path):
+    # a ratio above 1 means the FFD portfolio fallback broke — this fails
+    # even against a matching baseline, before any ratio-gating
+    r = run_gate(
+        tmp_path,
+        mig_report(packer_vs_ffd_cost_ratio=1.05),
+        mig_report(packer_vs_ffd_cost_ratio=1.05),
+    )
+    assert r.returncode != 0
+    assert "portfolio fallback is broken" in r.stderr
+
+
+def test_mig_run_without_feasible_mig_tasks_fails(tmp_path):
+    r = run_gate(tmp_path, mig_report(), mig_report(mig_tasks=0))
+    assert r.returncode != 0
+    assert "no feasible MIG task" in r.stderr
+
+
+def test_pre_mig_baseline_skips_mig_gates_with_notice(tmp_path):
+    # a MIG baseline blessed before the fragmentation metrics existed:
+    # shape-matches (config.mig on both sides) but skips the metric gates
+    base = mig_report(mig_tasks=None, mean_stranded_pct=None, packer_vs_ffd_cost_ratio=None)
+    r = run_gate(tmp_path, base, mig_report())
+    assert r.returncode == 0, r.stderr
+    assert "skipped (baseline lacks 'aggregate.mean_stranded_pct'" in r.stdout
+    assert "skipped (baseline lacks 'aggregate.packer_vs_ffd_cost_ratio'" in r.stdout
+    assert "bench gate: PASS" in r.stdout
+
+
+def test_mig_config_shape_mismatch_fails(tmp_path):
+    # MIG candidate vs non-MIG baseline: different fleets, different cost
+    # distribution — the shape check must refuse to ratio-gate them
+    r = run_gate(tmp_path, report(), mig_report())
+    assert r.returncode != 0
+    assert "does not match the baseline" in r.stderr

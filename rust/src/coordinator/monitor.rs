@@ -111,6 +111,12 @@ pub trait ServingPolicy {
     fn resilience(&self, _workload: usize) -> Resilience {
         Resilience::OFF
     }
+    /// MIG slice reconfigurations the policy's embedded planner performed
+    /// on live devices over the run — the sweep's fragmentation-churn
+    /// metric.  Default: 0 (continuous systems and planner-less policies).
+    fn reconfigurations(&self) -> u64 {
+        0
+    }
 }
 
 /// Static plan: no runtime adjustment.
@@ -733,6 +739,10 @@ impl ServingPolicy for Reprovisioner {
 
     fn resilience(&self, _workload: usize) -> Resilience {
         self.resilience
+    }
+
+    fn reconfigurations(&self) -> u64 {
+        self.planner.reconfigurations()
     }
 }
 

@@ -1,0 +1,108 @@
+//! MIG experiment harness: a small CI-quick sweep over the discrete-slice
+//! A100/H100 fleets, summarizing fragmentation (stranded GPCs) and the
+//! packer-vs-FFD/iGniter head-to-head per fleet.  The heavyweight entry
+//! point is `igniter sweep --fleet mig ...` (see `main.rs`), which also
+//! writes the machine-readable `BENCH_mig.json` the CI bench gate
+//! compares against `BENCH_baseline_mig.json`.
+
+use super::common::{emit, SEED};
+use crate::gpu::GpuKind;
+use crate::sweep::{run_sweep, ScenarioSpace, SweepConfig};
+use crate::util::error::{bail, Result};
+use crate::util::table::{f, Table};
+
+/// Run a reduced MIG sweep and summarize per MIG fleet.
+pub fn mig(_kind: GpuKind) -> Result<()> {
+    let cfg = SweepConfig {
+        scenarios: 12,
+        seeds: 2,
+        parallel: 4,
+        master_seed: SEED,
+        space: ScenarioSpace::mig(),
+        calibrate: false,
+    };
+    let report = run_sweep(&cfg);
+    let agg = report.aggregate();
+
+    let mut t = Table::new(
+        "MIG fleets (discrete 1g/2g/3g/4g/7g slices, zero cross-slice \
+         interference): fragmentation-aware packer vs FFD vs iGniter on \
+         identical slice-quantized demands",
+        &[
+            "fleet",
+            "tasks",
+            "packed_$per_h",
+            "ffd_$per_h",
+            "igniter_$per_h",
+            "stranded_pct",
+            "reconfigs",
+            "slo_attain",
+        ],
+    );
+    for fleet in ["mig-a100", "mig-h100"] {
+        let rs: Vec<_> = report
+            .results
+            .iter()
+            .filter(|r| r.fleet == fleet && r.feasible)
+            .collect();
+        if rs.is_empty() {
+            continue;
+        }
+        let n = rs.len() as f64;
+        t.row(&[
+            fleet.to_string(),
+            rs.len().to_string(),
+            f(rs.iter().map(|r| r.mig_cost_packed).sum::<f64>() / n, 2),
+            f(rs.iter().map(|r| r.mig_cost_ffd).sum::<f64>() / n, 2),
+            f(rs.iter().map(|r| r.mig_cost_igniter).sum::<f64>() / n, 2),
+            format!(
+                "{:.1}%",
+                rs.iter().map(|r| r.stranded_capacity_pct).sum::<f64>() / n
+            ),
+            rs.iter().map(|r| r.reconfigurations).sum::<u64>().to_string(),
+            format!(
+                "{:.1}%",
+                rs.iter().map(|r| r.slo_attainment).sum::<f64>() / n * 100.0
+            ),
+        ]);
+    }
+    t.row(&[
+        "ALL".to_string(),
+        format!("{}/{}", agg.mig_tasks, agg.tasks),
+        f(agg.mean_mig_cost_packed, 2),
+        f(agg.mean_mig_cost_ffd, 2),
+        f(agg.mean_mig_cost_igniter, 2),
+        format!("{:.1}%", agg.mean_stranded_pct),
+        agg.total_reconfigurations.to_string(),
+        format!("{:.1}%", agg.mean_slo_attainment * 100.0),
+    ]);
+    emit(&t, "mig");
+    println!(
+        "packer vs FFD cost ratio {:.4}  (wall {:.2}s)",
+        agg.packer_vs_ffd_cost_ratio, report.wall_s
+    );
+    if agg.mig_tasks == 0 {
+        bail!("MIG sweep produced no feasible MIG task");
+    }
+    if agg.packer_vs_ffd_cost_ratio > 1.0 + 1e-9 {
+        bail!(
+            "packer_vs_ffd_cost_ratio {} > 1 — portfolio fallback broken",
+            agg.packer_vs_ffd_cost_ratio
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mig_harness_runs_and_the_packer_never_loses() {
+        mig(GpuKind::V100).unwrap();
+        let csv =
+            std::fs::read_to_string(super::super::common::results_dir().join("mig.csv")).unwrap();
+        let all_line = csv.lines().last().unwrap();
+        assert!(all_line.starts_with("ALL"), "{all_line}");
+    }
+}

@@ -8,6 +8,7 @@ pub mod calibration;
 pub mod chaos;
 pub mod common;
 pub mod dynamic;
+pub mod mig;
 pub mod pareto;
 pub mod motivation;
 pub mod overhead;
@@ -49,6 +50,7 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
         "calibration" => calibration::calibration(kind),
         "chaos" => chaos::chaos(kind),
         "dynamic" => dynamic::dynamic(kind),
+        "mig" => mig::mig(kind),
         "pareto" => pareto::pareto(kind),
         "fig21" => overhead::fig21(kind),
         "overhead" => overhead::overhead(),
@@ -68,8 +70,9 @@ pub fn run(id: &str, kind: GpuKind) -> Result<()> {
             run("calibration", kind)?;
             run("chaos", kind)?;
             run("sweep", kind)?;
+            run("mig", kind)?;
             run("pareto", kind)
         }
-        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, autoscale, calibration, chaos, sweep, pareto, all"),
+        other => bail!("unknown experiment '{other}'; known: {ALL:?} + fig21, overhead, replicas, ablation, dynamic, autoscale, calibration, chaos, sweep, mig, pareto, all"),
     }
 }

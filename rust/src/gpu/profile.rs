@@ -125,6 +125,11 @@ impl WorkloadProfile {
 
 /// Ground-truth catalog.  V100 laws are primary; T4 derives from them with
 /// the paper's "2x compute / 3x memory-bandwidth" ratio (Sec. 5.3).
+/// A100/H100 derive the other way — faster parts — and, because MIG slices
+/// are hardware-isolated (dedicated SMs + partitioned L2), their
+/// cross-tenant dilation coefficient `alpha_cache` is zero: a neighbor's
+/// cache pressure cannot reach a slice's own L2 partition.  PCIe stays
+/// shared (MIG does not partition the host link).
 pub fn profile(model: Model, gpu: GpuKind) -> WorkloadProfile {
     let v100 = v100_profile(model);
     match gpu {
@@ -146,6 +151,43 @@ pub fn profile(model: Model, gpu: GpuKind) -> WorkloadProfile {
             alpha_cacheutil: v100.alpha_cacheutil * 1.5,
             beta_cacheutil: v100.beta_cacheutil * 1.5,
             alpha_cache: v100.alpha_cache * 1.5,
+            ..v100
+        },
+        GpuKind::A100 => WorkloadProfile {
+            gpu: GpuKind::A100,
+            // ~2x V100 inference throughput (Ampere tensor cores).
+            k1: v100.k1 * 0.5,
+            k2: v100.k2 * 0.5,
+            k3: v100.k3 * 0.5,
+            k4: v100.k4,
+            k5: v100.k5 * 0.8,
+            k_sch: v100.k_sch * 0.9,
+            // More efficient per query, and per-slice static draw is
+            // small — the 400 W envelope is never the binding constraint
+            // for any legal slice mix (even 7x 1g tenants).
+            alpha_power: v100.alpha_power * 0.9,
+            beta_power: v100.beta_power * 0.3,
+            // 40 MB L2, partitioned per slice: own-footprint telemetry
+            // shrinks and cross-tenant dilation is physically impossible.
+            alpha_cacheutil: v100.alpha_cacheutil * 0.3,
+            beta_cacheutil: v100.beta_cacheutil * 0.3,
+            alpha_cache: 0.0,
+            ..v100
+        },
+        GpuKind::H100 => WorkloadProfile {
+            gpu: GpuKind::H100,
+            // ~3x V100 throughput (Hopper), same MIG isolation story.
+            k1: v100.k1 / 3.0,
+            k2: v100.k2 / 3.0,
+            k3: v100.k3 / 3.0,
+            k4: v100.k4,
+            k5: v100.k5 * 0.7,
+            k_sch: v100.k_sch * 0.8,
+            alpha_power: v100.alpha_power,
+            beta_power: v100.beta_power * 0.35,
+            alpha_cacheutil: v100.alpha_cacheutil * 0.25,
+            beta_cacheutil: v100.beta_cacheutil * 0.25,
+            alpha_cache: 0.0,
             ..v100
         },
     }
@@ -313,6 +355,43 @@ mod tests {
             let v = profile(m, GpuKind::V100);
             let t = profile(m, GpuKind::T4);
             assert!(t.k_act(8.0, 0.5) > 1.5 * v.k_act(8.0, 0.5));
+        }
+    }
+
+    #[test]
+    fn mig_parts_are_faster_and_isolated() {
+        for m in ALL_MODELS {
+            let v = profile(m, GpuKind::V100);
+            let a = profile(m, GpuKind::A100);
+            let h = profile(m, GpuKind::H100);
+            // strictly faster than V100, H100 faster still
+            assert!(a.k_act(8.0, 0.5) < v.k_act(8.0, 0.5));
+            assert!(h.k_act(8.0, 0.5) < a.k_act(8.0, 0.5));
+            // the isolation statement: zero cross-tenant dilation
+            assert_eq!(a.alpha_cache, 0.0);
+            assert_eq!(h.alpha_cache, 0.0);
+        }
+    }
+
+    #[test]
+    fn mig_power_fits_the_envelope_with_full_tenancy() {
+        // Seven 1g tenants plus one full-device tenant's worth of power
+        // must stay far from the cap: MIG fleets never throttle, so the
+        // solo-collapsed planner predictions stay honest.
+        for (spec, kind) in [
+            (GpuSpec::a100(), GpuKind::A100),
+            (GpuSpec::h100(), GpuKind::H100),
+        ] {
+            for m in ALL_MODELS {
+                let p = profile(m, kind);
+                let one_gpc = 1.0 / 7.0;
+                let demand = spec.idle_power_w + 7.0 * p.power_w(4.0, one_gpc);
+                assert!(
+                    demand < spec.max_power_w,
+                    "{m:?} on {kind:?}: {demand:.0} W >= cap"
+                );
+                assert_eq!(spec.frequency(demand), spec.max_freq_mhz);
+            }
         }
     }
 

@@ -9,10 +9,17 @@
 //! bandwidth (Sec. 5.3).
 
 /// Identifier of a GPU hardware generation.
+///
+/// A100/H100 are the MIG generations: their `r_unit` is one GPC (1/7 of
+/// the device) and their contention coefficients are zero, because MIG
+/// slices are hardware-isolated (dedicated SMs, partitioned L2, per-slice
+/// schedulers).  See `provisioner::partition` for the planning-side view.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum GpuKind {
     V100,
     T4,
+    A100,
+    H100,
 }
 
 impl GpuKind {
@@ -20,6 +27,8 @@ impl GpuKind {
         match self {
             GpuKind::V100 => "V100",
             GpuKind::T4 => "T4",
+            GpuKind::A100 => "A100",
+            GpuKind::H100 => "H100",
         }
     }
 
@@ -27,8 +36,16 @@ impl GpuKind {
         match s.to_ascii_lowercase().as_str() {
             "v100" => Some(GpuKind::V100),
             "t4" => Some(GpuKind::T4),
+            "a100" => Some(GpuKind::A100),
+            "h100" => Some(GpuKind::H100),
             _ => None,
         }
+    }
+
+    /// MIG-capable generations partition into discrete GPC slices instead
+    /// of continuous MPS percentages.
+    pub fn is_mig(&self) -> bool {
+        matches!(self, GpuKind::A100 | GpuKind::H100)
     }
 }
 
@@ -103,10 +120,56 @@ impl GpuSpec {
         }
     }
 
+    /// A100 (p4d): a MIG device.  One GPC = 1/7 of the part is the
+    /// allocation unit, and the contention coefficients are zero — MIG
+    /// slices own their SMs, their L2 partition, and their scheduler, so
+    /// co-located slices neither delay each other's kernel dispatch nor
+    /// dilate each other's active time.  PCIe is the one resource MIG
+    /// does NOT partition; the shared-link coefficient stays live.
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            kind: GpuKind::A100,
+            sm_count: 108,
+            max_power_w: 400.0,
+            idle_power_w: 52.0,
+            max_freq_mhz: 1410.0,
+            min_freq_mhz: 900.0,
+            alpha_f: -1.0,
+            alpha_sch: 0.0,
+            beta_sch: 0.0,
+            pcie_gbps: 25.0,
+            l2_cache_mb: 40.0,
+            r_unit: 1.0 / 7.0,
+            r_max: 1.0,
+        }
+    }
+
+    /// H100 (p5): same MIG geometry as the A100 with ~1.5x the compute
+    /// and a 700 W envelope that co-located slices never approach.
+    pub fn h100() -> GpuSpec {
+        GpuSpec {
+            kind: GpuKind::H100,
+            sm_count: 132,
+            max_power_w: 700.0,
+            idle_power_w: 70.0,
+            max_freq_mhz: 1980.0,
+            min_freq_mhz: 1000.0,
+            alpha_f: -1.0,
+            alpha_sch: 0.0,
+            beta_sch: 0.0,
+            pcie_gbps: 50.0,
+            l2_cache_mb: 50.0,
+            r_unit: 1.0 / 7.0,
+            r_max: 1.0,
+        }
+    }
+
     pub fn get(kind: GpuKind) -> GpuSpec {
         match kind {
             GpuKind::V100 => GpuSpec::v100(),
             GpuKind::T4 => GpuSpec::t4(),
+            GpuKind::A100 => GpuSpec::a100(),
+            GpuKind::H100 => GpuSpec::h100(),
         }
     }
 
@@ -202,6 +265,36 @@ mod tests {
         assert!(t.l2_cache_mb < v.l2_cache_mb);
         assert_eq!(GpuKind::parse("t4"), Some(GpuKind::T4));
         assert_eq!(GpuKind::parse("V100"), Some(GpuKind::V100));
-        assert_eq!(GpuKind::parse("a100"), None);
+        assert_eq!(GpuKind::parse("a100"), Some(GpuKind::A100));
+        assert_eq!(GpuKind::parse("H100"), Some(GpuKind::H100));
+        assert_eq!(GpuKind::parse("b200"), None);
+    }
+
+    #[test]
+    fn mig_specs_are_hardware_isolated() {
+        for spec in [GpuSpec::a100(), GpuSpec::h100()] {
+            assert!(spec.kind.is_mig());
+            // slice granularity: exactly seven GPCs per device
+            assert!((spec.r_unit * 7.0 - 1.0).abs() < 1e-12, "{:?}", spec.kind);
+            // no cross-slice scheduling delay, at any co-location level
+            assert_eq!(spec.alpha_sch, 0.0);
+            assert_eq!(spec.beta_sch, 0.0);
+            for m in 0..8 {
+                assert_eq!(spec.delta_sch(m), 0.0);
+            }
+        }
+        assert!(!GpuKind::V100.is_mig());
+        assert!(!GpuKind::T4.is_mig());
+    }
+
+    #[test]
+    fn mig_quantize_lands_on_gpc_grid() {
+        let a = GpuSpec::a100();
+        for i in 1..=7u32 {
+            let r = i as f64 / 7.0;
+            // anything in the notch below rounds up to exactly this GPC count
+            assert!((a.quantize_up(r - 1e-9) - r).abs() < 1e-9);
+            assert!((a.quantize_up(r - 0.01) - r).abs() < 1e-9);
+        }
     }
 }

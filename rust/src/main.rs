@@ -48,7 +48,7 @@ fn gpu_kind(args: &Args) -> Result<GpuKind> {
         return Ok(cfg.gpu);
     }
     let s = args.opt_or("gpu", "v100");
-    GpuKind::parse(s).ok_or_else(|| anyhow!("unknown GPU type '{s}' (v100|t4)"))
+    GpuKind::parse(s).ok_or_else(|| anyhow!("unknown GPU type '{s}' (v100|t4|a100|h100)"))
 }
 
 /// `--config file.json` overrides gpu/strategy/workloads/serving options.
@@ -135,7 +135,8 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20             [--faults [deaths=N,stragglers=N,hangs=N,factor=F,span_ms=S]]\n\
                  \x20 sweep       [--scenarios N] [--seeds K] [--parallel M] [--master-seed S]\n\
                  \x20             [--out BENCH_sweep.json] [--full] [--mismatch] [--calibrate] [--faults [spec]]\n\
-                 \x20             — fleet-scale scenario sweep (mismatch = model-error lane, faults = chaos lane)\n\
+                 \x20             [--fleet mig] — fleet-scale scenario sweep (mismatch = model-error lane,\n\
+                 \x20             faults = chaos lane, fleet mig = A100/H100 discrete-slice lane)\n\
                  \x20 deploy      [--strategy ...] [--script] — emit the launcher manifest\n\
                  \x20 verify\n\
                  \x20 experiment  [fig3..fig21|table1|overhead|all]"
@@ -398,12 +399,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// the CI bench gate.  Deterministic per master seed: the report's
 /// non-wall sections are bit-identical for any `--parallel` width.
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use igniter::sweep::{run_sweep, ScenarioSpace, SweepConfig};
+    use igniter::sweep::{run_sweep, Fleet, ScenarioSpace, SweepConfig};
     let mut space = if args.flag("full") {
         ScenarioSpace::full()
     } else {
         ScenarioSpace::quick()
     };
+    // --fleet mig: the MIG lane — scenarios sample homogeneous A100/H100
+    // MIG fleets; demands are slice-quantized, packing is fragmentation-
+    // aware, and each plan is scored head-to-head vs FFD and iGniter.
+    // Composes with --full/--mismatch/--calibrate/--faults.
+    if let Some(fleet) = args.opt("fleet") {
+        match fleet {
+            "mig" => space.fleets = vec![Fleet::MigA100, Fleet::MigH100],
+            other => bail!("unknown fleet '{other}' (mig)"),
+        }
+    }
     // --mismatch: perturb the planner's believed coefficients per
     // scenario (the model-error lane); --calibrate serves every task
     // with online calibration so the sweep measures the closed loop's
@@ -458,6 +469,28 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             format!("{} ({} episodes)", f(agg.recovery_ms_p95, 0), agg.recovery_samples),
         ]);
     }
+    if agg.mig_tasks > 0 {
+        t.row(&["MIG tasks".into(), agg.mig_tasks.to_string()]);
+        t.row(&[
+            "mean stranded capacity".into(),
+            format!("{:.2}%", agg.mean_stranded_pct),
+        ]);
+        t.row(&[
+            "slice reconfigurations".into(),
+            agg.total_reconfigurations.to_string(),
+        ]);
+        t.row(&[
+            "mean MIG cost packed/ffd/igniter ($/h)".into(),
+            format!(
+                "{:.2} / {:.2} / {:.2}",
+                agg.mean_mig_cost_packed, agg.mean_mig_cost_ffd, agg.mean_mig_cost_igniter
+            ),
+        ]);
+        t.row(&[
+            "packer vs FFD cost ratio".into(),
+            f(agg.packer_vs_ffd_cost_ratio, 4),
+        ]);
+    }
     t.row(&["wall (s)".into(), f(report.wall_s, 2)]);
     t.row(&[
         "scenarios/s (wall)".into(),
@@ -504,6 +537,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 agg.total_arrivals
             );
         }
+    }
+    // MIG lane structural bar: the portfolio packer adopts the FFD
+    // packing whenever FFD lands on fewer devices, so losing to FFD on
+    // any task means the fallback is broken, not that the heuristic had
+    // an off day.
+    let packer_losses = report
+        .results
+        .iter()
+        .filter(|r| r.feasible && r.is_mig && r.mig_cost_packed > r.mig_cost_ffd + 1e-9)
+        .count();
+    if packer_losses > 0 {
+        bail!("MIG packer lost to FFD on {packer_losses} task(s) — portfolio fallback broken");
     }
     Ok(())
 }

@@ -39,11 +39,15 @@ pub const PROFILE_CONFIGS: [(u32, f64); 11] = [
 /// we average a short burst per config).
 pub const QUERIES_PER_CONFIG: usize = 9;
 
-/// Instance price per GPU type ($/h): p3.2xlarge / g4dn.xlarge (Sec. 5).
+/// Instance price per GPU type ($/h): p3.2xlarge / g4dn.xlarge (Sec. 5);
+/// MIG generations priced per device from p4d.24xlarge / p5.48xlarge
+/// (8-GPU instances, so 1/8 of the on-demand instance price).
 pub fn unit_price(kind: GpuKind) -> f64 {
     match kind {
         GpuKind::V100 => 3.06,
         GpuKind::T4 => 0.526,
+        GpuKind::A100 => 4.10,
+        GpuKind::H100 => 12.29,
     }
 }
 

@@ -511,6 +511,71 @@ impl PlacementEngine {
         }
     }
 
+    /// Discrete-partition placement (MIG): place `(w, d)` — whose
+    /// `r_lower` is already slice-quantized — without any growth loop,
+    /// since MIG slices are hardware-isolated and residents never grow
+    /// when a neighbor arrives.  Candidate devices come from the same
+    /// headroom index Alg. 1 uses: a free-GPC count is exactly a
+    /// quantized-headroom bucket when `r_unit` is one GPC.
+    ///
+    /// `best_fit = true` is the fragmentation-aware rule (ParvaGPU's
+    /// objective): among fitting devices, minimize the residual free
+    /// capacity after placement, ties to the lowest device id.
+    /// `best_fit = false` is plain first-fit (candidates are scanned in
+    /// ascending device order).  Returns `(device, provisioned_fresh)`.
+    pub fn place_discrete(
+        &mut self,
+        sys: &ProfiledSystem,
+        specs: &[WorkloadSpec],
+        plan: &mut Plan,
+        w: usize,
+        d: Derived,
+        best_fit: bool,
+    ) -> (usize, bool) {
+        let hw = &sys.hw;
+        let mut cand_ids = std::mem::take(&mut self.cand_ids);
+        self.index.candidates(d.r_lower, &mut cand_ids);
+        let mut best: Option<(usize, f64)> = None;
+        for &gu in &cand_ids {
+            let g = gu as usize;
+            if self.dead[g] {
+                continue;
+            }
+            let dev = &self.devices[g];
+            // Exact re-check behind the conservative bucket filter.
+            if dev.used + d.r_lower > hw.r_max + 1e-9 {
+                continue;
+            }
+            if !best_fit {
+                best = Some((g, 0.0));
+                break;
+            }
+            let residual = hw.r_max - dev.used - d.r_lower;
+            if best.map_or(true, |(_, b)| residual < b - 1e-12) {
+                best = Some((g, residual));
+            }
+        }
+        self.cand_ids = cand_ids;
+        let alloc = Alloc {
+            workload: w,
+            resources: d.r_lower,
+            batch: d.batch,
+        };
+        match best {
+            Some((g, _)) => {
+                plan.gpus[g].push(alloc);
+                self.sync_device(g, sys, specs, &plan.gpus[g]);
+                (g, false)
+            }
+            None => {
+                plan.gpus.push(vec![alloc]);
+                let g = plan.gpus.len() - 1;
+                self.push_device(sys, specs, &plan.gpus[g]);
+                (g, true)
+            }
+        }
+    }
+
     /// Engine-state consistency check for tests: the mirror must match a
     /// from-scratch rebuild of `plan` bit for bit.
     #[cfg(test)]

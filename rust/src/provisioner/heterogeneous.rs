@@ -8,6 +8,8 @@
 //! and W12" behaviour and its future-work item (2).
 
 use super::igniter;
+use super::mig;
+use super::partition::PartitionModel;
 use super::types::{Plan, ProfiledSystem, WorkloadSpec};
 use crate::perfmodel::{self, AnalyticModel, PerfModel};
 
@@ -75,6 +77,11 @@ pub fn provision_on(sys: &ProfiledSystem, specs: &[WorkloadSpec]) -> Option<Type
 }
 
 /// `provision_on` scored by an arbitrary [`PerfModel`].
+///
+/// Routes by the system's [`PartitionModel`]: continuous gpulets take the
+/// Alg.-1 path unchanged; MIG parts take the fragmentation-aware packer
+/// (`provisioner::mig`), where the caller's model is irrelevant because
+/// hardware isolation collapses scoring to solo predictions.
 pub fn provision_on_with(
     model: &dyn PerfModel,
     sys: &ProfiledSystem,
@@ -85,8 +92,31 @@ pub fn provision_on_with(
     if derived.iter().any(|d| d.is_none()) {
         return None;
     }
-    let plan = igniter::provision_with_derived(model, sys, &replicated.specs, &derived);
+    let plan = match PartitionModel::for_gpu_name(&sys.hw.gpu) {
+        PartitionModel::Continuous => {
+            igniter::provision_with_derived(model, sys, &replicated.specs, &derived)
+        }
+        PartitionModel::Mig => mig::provision_mig(sys, &replicated.specs, &derived),
+    };
     Some(TypedPlan { plan, replicated })
+}
+
+/// MIG head-to-head for the sweep runner: replicate + derive once, then
+/// run the fragmentation-aware packer against MIG-FFD and MIG-iGniter on
+/// identical demands.  `None` when the workload set is infeasible on this
+/// part even with replication.
+pub fn provision_mig_head_to_head(
+    sys: &ProfiledSystem,
+    specs: &[WorkloadSpec],
+) -> Option<(TypedPlan, mig::MigHeadToHead)> {
+    let replicated = replicate_for(sys, specs)?;
+    let derived = igniter::derive_all(sys, &replicated.specs);
+    if derived.iter().any(|d| d.is_none()) {
+        return None;
+    }
+    let h2h = mig::head_to_head(sys, &replicated.specs, &derived);
+    let plan = h2h.packed.clone();
+    Some((TypedPlan { plan, replicated }, h2h))
 }
 
 /// Heterogeneous selection: provision on every profiled system and return
@@ -164,6 +194,66 @@ mod tests {
         // paper scale: T4 count in the low tens, V100 around 6
         let t4 = plans[0].plan.num_gpus();
         assert!((10..=22).contains(&t4), "T4 count {t4}");
+    }
+
+    #[test]
+    fn continuous_partition_path_is_a_bitwise_noop() {
+        // Satellite contract: routing through PartitionModel must leave
+        // V100/T4 plans byte-identical to the direct Alg.-1 call.
+        for kind in [GpuKind::V100, GpuKind::T4] {
+            let s = sys(kind);
+            let specs = app_workloads();
+            let routed = provision_on(&s, &specs).unwrap();
+            let replicated = replicate_for(&s, &specs).unwrap();
+            let derived = igniter::derive_all(&s, &replicated.specs);
+            let direct =
+                igniter::provision_with_derived(&AnalyticModel::ALL, &s, &replicated.specs, &derived);
+            assert_eq!(routed.plan, direct, "{kind:?} plan diverged");
+            for (a, b) in routed
+                .plan
+                .gpus
+                .iter()
+                .flatten()
+                .zip(direct.gpus.iter().flatten())
+            {
+                assert_eq!(a.resources.to_bits(), b.resources.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn mig_systems_route_to_the_slice_packer() {
+        for kind in [GpuKind::A100, GpuKind::H100] {
+            let s = sys(kind);
+            let tp = provision_on(&s, &app_workloads()).unwrap();
+            assert!(tp.plan.strategy.starts_with("MIG-packed"), "{}", tp.plan.strategy);
+            crate::provisioner::partition::plan_is_legal(&tp.plan).unwrap();
+            tp.plan
+                .validate(tp.replicated.specs.len(), s.hw.r_max)
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn mig_head_to_head_is_consistent_with_routing() {
+        let s = sys(GpuKind::A100);
+        let specs = app_workloads();
+        let (tp, h2h) = provision_mig_head_to_head(&s, &specs).unwrap();
+        let routed = provision_on(&s, &specs).unwrap();
+        assert_eq!(tp.plan, routed.plan, "head-to-head packed plan diverged");
+        assert!(h2h.cost_packed <= h2h.cost_ffd + 1e-9);
+        assert!(h2h.cost_packed <= h2h.cost_igniter + 1e-9);
+        assert!(h2h.stranded_pct >= 0.0 && h2h.stranded_pct < 100.0);
+    }
+
+    #[test]
+    fn mig_parts_join_heterogeneous_selection() {
+        let systems = [sys(GpuKind::V100), sys(GpuKind::T4), sys(GpuKind::A100)];
+        let plans = select_cheapest(&systems, &app_workloads());
+        assert_eq!(plans.len(), 3);
+        for w in plans.windows(2) {
+            assert!(w[0].plan.cost_per_hour() <= w[1].plan.cost_per_hour());
+        }
     }
 
     #[test]

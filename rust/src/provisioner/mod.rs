@@ -8,10 +8,13 @@ pub mod gpulets;
 pub mod gslice;
 pub mod heterogeneous;
 pub mod igniter;
+pub mod mig;
 pub mod online;
+pub mod partition;
 pub mod types;
 
 pub use engine::PlacementEngine;
+pub use partition::PartitionModel;
 pub use igniter::{
     alloc_gpus, alloc_gpus_into, derive_all, find_best_linear, predict_plan, provision,
     provision_with, provision_with_linear, replica_split, validate_replica_shares, Derived,

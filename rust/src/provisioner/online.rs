@@ -9,6 +9,7 @@
 
 use super::engine::PlacementEngine;
 use super::igniter::{derive_all, provision_with, provision_with_derived, replica_split, Derived};
+use super::partition::PartitionModel;
 use super::types::{Alloc, Plan, ProfiledSystem, WorkloadSpec};
 use crate::perfmodel::{model, AnalyticModel, PerfModel, Prediction};
 use crate::util::error::{anyhow, Result};
@@ -40,6 +41,18 @@ pub struct OnlinePlanner {
     /// arrival/respec replica) — the numerator of
     /// `wall.plan_throughput_pps`.
     placements: u64,
+    /// How this system's devices partition compute (resolved once from
+    /// the GPU label).  MIG systems quantize every demand to the slice
+    /// grid, place best-fit-decreasing through the discrete engine path,
+    /// and score with the interference-free model.
+    partition: PartitionModel,
+    /// MIG slice reconfigurations performed on devices that were hosting
+    /// other live tenants at the time (carving a slice for an arrival, or
+    /// destroying one on departure).  Fresh/empty devices don't count —
+    /// their partition layout is written before anyone is running — and
+    /// neither does `rebalance`, which models a drained re-pack rather
+    /// than live surgery.  Always 0 on continuous systems.
+    reconfigurations: u64,
 }
 
 /// Outcome of an arrival.
@@ -52,19 +65,33 @@ pub enum Placed {
 }
 
 impl OnlinePlanner {
+    /// The scoring model matching the partition model: interference-free
+    /// on MIG (slices are hardware-isolated), the full analytic model on
+    /// continuous gpulets.
+    fn default_model(partition: PartitionModel) -> Box<dyn PerfModel> {
+        if partition.is_mig() {
+            Box::new(super::mig::mig_model())
+        } else {
+            Box::new(AnalyticModel::ALL)
+        }
+    }
+
     /// Start with an empty cluster (static analytic model).
     pub fn new(sys: ProfiledSystem) -> OnlinePlanner {
         let plan = Plan::new("iGniter-online", &sys.hw);
         let engine = PlacementEngine::new(&sys.hw);
+        let partition = PartitionModel::for_gpu_name(&sys.hw.gpu);
         OnlinePlanner {
             sys,
             specs: Vec::new(),
             rollback: plan.clone(),
             plan,
             active: Vec::new(),
-            model: Box::new(AnalyticModel::ALL),
+            model: Self::default_model(partition),
             engine,
             placements: 0,
+            partition,
+            reconfigurations: 0,
         }
     }
 
@@ -72,15 +99,18 @@ impl OnlinePlanner {
     pub fn from_plan(sys: ProfiledSystem, specs: Vec<WorkloadSpec>, plan: Plan) -> OnlinePlanner {
         let active = vec![true; specs.len()];
         let engine = PlacementEngine::from_plan(&sys, &specs, &plan);
+        let partition = PartitionModel::for_gpu_name(&sys.hw.gpu);
         OnlinePlanner {
             sys,
             specs,
             rollback: plan.clone(),
             plan,
             active,
-            model: Box::new(AnalyticModel::ALL),
+            model: Self::default_model(partition),
             engine,
             placements: 0,
+            partition,
+            reconfigurations: 0,
         }
     }
 
@@ -134,6 +164,12 @@ impl OnlinePlanner {
             None => replica_split(&self.sys, &spec)
                 .ok_or_else(|| anyhow!("{} infeasible on {}", spec.name, self.sys.hw.gpu))?,
         };
+        // MIG: round the demand up to the smallest covering slice profile
+        // (identity on continuous systems).
+        let derived = Derived {
+            r_lower: self.partition.quantize_demand(derived.r_lower),
+            ..derived
+        };
         self.specs.push(spec);
         self.active.push(true);
         let mut placed = Placed::NewGpu(self.plan.gpus.len());
@@ -151,14 +187,32 @@ impl OnlinePlanner {
     /// reject `alloc_gpus_into` would hit on those devices anyway.
     fn place(&mut self, id: usize, derived: Derived) -> Placed {
         self.placements += 1;
-        let (g, fresh) = self.engine.place(
-            self.model.as_ref(),
-            &self.sys,
-            &self.specs,
-            &mut self.plan,
-            id,
-            derived,
-        );
+        let (g, fresh) = if self.partition.is_mig() {
+            // Discrete path: best-fit over free slice capacity — there is
+            // no interference to score and no resident growth to probe.
+            let (g, fresh) =
+                self.engine
+                    .place_discrete(&self.sys, &self.specs, &mut self.plan, id, derived, true);
+            if !fresh && self.plan.gpus[g].len() > 1 {
+                // carved a slice on a device already hosting live tenants
+                self.reconfigurations += 1;
+            }
+            debug_assert!(
+                super::partition::device_is_legal(&self.plan.gpus[g]).is_ok(),
+                "illegal MIG device after place: {:?}",
+                self.plan.gpus[g]
+            );
+            (g, fresh)
+        } else {
+            self.engine.place(
+                self.model.as_ref(),
+                &self.sys,
+                &self.specs,
+                &mut self.plan,
+                id,
+                derived,
+            )
+        };
         if fresh {
             Placed::NewGpu(g)
         } else {
@@ -173,6 +227,17 @@ impl OnlinePlanner {
         self.placements
     }
 
+    /// MIG slice reconfigurations on live devices so far (0 on continuous
+    /// systems) — see the field doc for exactly what counts.
+    pub fn reconfigurations(&self) -> u64 {
+        self.reconfigurations
+    }
+
+    /// The partition model this planner routes through.
+    pub fn partition(&self) -> PartitionModel {
+        self.partition
+    }
+
     /// Handle a departed workload: free its partition.  Co-residents keep
     /// their (now generous) allocations until the next `rebalance`.
     pub fn remove(&mut self, id: usize) -> Result<()> {
@@ -184,6 +249,10 @@ impl OnlinePlanner {
             let before = self.plan.gpus[g].len();
             self.plan.gpus[g].retain(|a| a.workload != id);
             if self.plan.gpus[g].len() != before {
+                if self.partition.is_mig() && !self.plan.gpus[g].is_empty() {
+                    // destroyed a slice while co-tenants keep running
+                    self.reconfigurations += 1;
+                }
                 self.engine
                     .sync_device(g, &self.sys, &self.specs, &self.plan.gpus[g]);
             }
@@ -278,15 +347,30 @@ impl OnlinePlanner {
         for (i, s) in dense.iter_mut().enumerate() {
             s.id = i;
         }
-        let derived = derive_all(&self.sys, &dense);
-        let fresh = if derived.iter().any(|d| d.is_none()) {
-            // some active workload needs replicas: use the full Alg.-1
-            // front-end, which splits.  Feasibility is guaranteed —
-            // every active workload was placed by add/respec, so its
-            // replica_split succeeds.
-            provision_with(self.model.as_ref(), &self.sys, &dense)
+        let fresh = if self.partition.is_mig() {
+            // Drained re-pack through the fragmentation-aware slice
+            // packer; replica indices map back to dense ones via origin.
+            let replicated = super::heterogeneous::replicate_for(&self.sys, &dense)?;
+            let derived = derive_all(&self.sys, &replicated.specs);
+            if derived.iter().any(|d| d.is_none()) {
+                return None;
+            }
+            let mut plan = super::mig::provision_mig(&self.sys, &replicated.specs, &derived);
+            for a in plan.gpus.iter_mut().flatten() {
+                a.workload = replicated.origin[a.workload];
+            }
+            plan
         } else {
-            provision_with_derived(self.model.as_ref(), &self.sys, &dense, &derived)
+            let derived = derive_all(&self.sys, &dense);
+            if derived.iter().any(|d| d.is_none()) {
+                // some active workload needs replicas: use the full Alg.-1
+                // front-end, which splits.  Feasibility is guaranteed —
+                // every active workload was placed by add/respec, so its
+                // replica_split succeeds.
+                provision_with(self.model.as_ref(), &self.sys, &dense)
+            } else {
+                provision_with_derived(self.model.as_ref(), &self.sys, &dense, &derived)
+            }
         };
         // the from-scratch pass executed one placement item per allocation
         self.placements += fresh.total_allocs() as u64;
@@ -589,6 +673,127 @@ mod tests {
         // compaction stays off for the rest of the run: a from-scratch
         // re-pack would happily reuse device 0
         assert_eq!(op.rebalance(), None, "rebalance ran with a dead device");
+    }
+
+    fn mig_sys() -> ProfiledSystem {
+        let (hw, wls) = crate::profiler::profile_all(GpuKind::A100, 42);
+        ProfiledSystem {
+            hw,
+            coeffs: crate::gpu::ALL_MODELS.iter().cloned().zip(wls).collect(),
+        }
+    }
+
+    /// Every allocation in the plan as (workload, resources-bits, batch),
+    /// sorted — for exact "nobody else moved" comparisons.
+    fn alloc_set(plan: &Plan) -> Vec<(usize, usize, u64, u32)> {
+        let mut v: Vec<_> = plan
+            .gpus
+            .iter()
+            .enumerate()
+            .flat_map(|(g, allocs)| {
+                allocs
+                    .iter()
+                    .map(move |a| (g, a.workload, a.resources.to_bits(), a.batch))
+            })
+            .collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn mig_arrivals_are_slice_legal_and_never_touch_live_residents() {
+        let mut op = OnlinePlanner::new(mig_sys());
+        assert!(op.partition().is_mig());
+        for spec in app_workloads() {
+            let before = alloc_set(op.plan());
+            op.add(WorkloadSpec::new(0, spec.model, spec.slo_ms, spec.rate_rps))
+                .unwrap();
+            // reconfig never evicts or resizes a live replica: every
+            // pre-arrival allocation survives byte-identically in place
+            let after = alloc_set(op.plan());
+            for item in &before {
+                assert!(after.contains(item), "arrival moved a live replica: {item:?}");
+            }
+            crate::provisioner::partition::plan_is_legal(op.plan()).unwrap();
+            // isolation: every active workload still meets its half-SLO
+            for w in 0..op.specs().len() {
+                let (t_inf, thpt) = op.predict(w).unwrap();
+                assert!(t_inf <= op.specs()[w].slo_ms / 2.0 + 1e-6);
+                assert!(thpt >= op.specs()[w].rate_rps * 0.999);
+            }
+        }
+    }
+
+    #[test]
+    fn mig_reconfigurations_count_live_device_surgery_only() {
+        let mut op = OnlinePlanner::new(mig_sys());
+        // first arrival carves a fresh device: no live tenants, no reconfig
+        let (a, _) = op.add(WorkloadSpec::new(0, Model::AlexNet, 15.0, 100.0)).unwrap();
+        assert_eq!(op.reconfigurations(), 0);
+        // second small arrival lands next to it: live-device carve
+        let (b, placed) = op.add(WorkloadSpec::new(0, Model::AlexNet, 15.0, 100.0)).unwrap();
+        assert_eq!(placed, Placed::Existing(0));
+        assert_eq!(op.reconfigurations(), 1);
+        // removing one while the other keeps running: live-device destroy
+        op.remove(a).unwrap();
+        assert_eq!(op.reconfigurations(), 2);
+        // removing the last tenant empties the device: not counted
+        op.remove(b).unwrap();
+        assert_eq!(op.reconfigurations(), 2);
+        // continuous systems never count
+        let mut cont = OnlinePlanner::new(sys());
+        let (x, _) = cont.add(WorkloadSpec::new(0, Model::AlexNet, 15.0, 100.0)).unwrap();
+        cont.add(WorkloadSpec::new(0, Model::AlexNet, 15.0, 100.0)).unwrap();
+        cont.remove(x).unwrap();
+        assert_eq!(cont.reconfigurations(), 0);
+    }
+
+    #[test]
+    fn mig_rebalance_repacks_on_the_slice_grid() {
+        let mut op = OnlinePlanner::new(mig_sys());
+        let mut ids = Vec::new();
+        for spec in app_workloads() {
+            ids.push(
+                op.add(WorkloadSpec::new(0, spec.model, spec.slo_ms, spec.rate_rps))
+                    .unwrap()
+                    .0,
+            );
+        }
+        let before = op.occupied_gpus();
+        for (i, spec) in app_workloads().iter().enumerate() {
+            if spec.model != Model::AlexNet {
+                op.remove(ids[i]).unwrap();
+            }
+        }
+        let adopted = op.rebalance();
+        // Post-rebalance invariant: never worse than before, and never
+        // worse than what a from-scratch slice pack of the live set needs
+        // (rebalance adopts the fresh pack exactly when it's tighter).
+        assert!(op.occupied_gpus() <= before);
+        let live: Vec<WorkloadSpec> = op
+            .specs()
+            .iter()
+            .filter(|s| s.model == Model::AlexNet)
+            .cloned()
+            .collect();
+        let scratch = crate::provisioner::heterogeneous::provision_on(&op.sys, &live)
+            .unwrap()
+            .plan
+            .num_gpus();
+        assert!(
+            op.occupied_gpus() <= scratch,
+            "rebalance left {} devices, fresh pack needs {scratch}",
+            op.occupied_gpus()
+        );
+        if let Some(n) = adopted {
+            assert_eq!(n, op.occupied_gpus());
+            assert!(n < before);
+        }
+        crate::provisioner::partition::plan_is_legal(op.plan()).unwrap();
+        for s in op.specs().iter().filter(|s| s.model == Model::AlexNet) {
+            let (t_inf, _) = op.predict(s.id).unwrap();
+            assert!(t_inf <= s.slo_ms / 2.0 + 1e-6);
+        }
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Partition models: how one physical device's compute is divided among
+//! co-resident tenants.
+//!
+//! The paper's provisioner assumes **continuous** gpulets (MPS
+//! active-thread percentages on a 2.5 % grid).  MIG generations
+//! (A100/H100) instead expose **discrete** slices: a device has seven
+//! GPCs, tenants get one of the legal compute profiles 1g/2g/3g/4g/7g
+//! (5g and 6g are not manufacturable), and a slice can only be
+//! reconfigured while it is empty — a live replica is never resized in
+//! place.  Because every slice owns its SMs, L2 partition, and scheduler,
+//! co-tenants do not interfere: the planner's interference terms collapse
+//! to solo predictions (`AnalyticModel::with_terms(ModelTerms::NONE)`),
+//! and the provisioning objective shifts from minimizing interference
+//! growth to minimizing **stranded slice capacity** (fragmentation),
+//! following ParvaGPU (arXiv 2409.14447).
+//!
+//! This module is the abstraction boundary: `PartitionModel::Continuous`
+//! routes to today's Alg.-1 path bit-identically; `PartitionModel::Mig`
+//! routes to the slice-quantized packers in `provisioner::mig`.
+//!
+//! Simplification vs. real MIG: any multiset of legal profiles summing to
+//! at most 7 GPCs is accepted (the hardware's placement-tree constraints
+//! on slice *positions* are not modeled — they would only tighten the
+//! packing, never loosen it).
+
+use super::types::{Alloc, Plan};
+use crate::gpu::GpuKind;
+
+/// GPCs per MIG device (the 7g envelope).
+pub const MIG_GPC_PER_DEVICE: u32 = 7;
+
+/// Legal MIG compute profiles in GPCs, ascending.
+pub const MIG_PROFILES_GPC: [u32; 5] = [1, 2, 3, 4, 7];
+
+/// How a device partitions its compute among tenants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionModel {
+    /// Continuous MPS-style gpulets on the `r_unit` grid (V100/T4) —
+    /// today's behavior, byte for byte.
+    Continuous,
+    /// Discrete MIG slices (A100/H100): legal profiles only, reconfig
+    /// only of empty slices, zero cross-slice interference.
+    Mig,
+}
+
+impl PartitionModel {
+    pub fn for_kind(kind: GpuKind) -> PartitionModel {
+        if kind.is_mig() {
+            PartitionModel::Mig
+        } else {
+            PartitionModel::Continuous
+        }
+    }
+
+    /// Resolve from a profiled system's GPU label (`HardwareCoeffs::gpu`).
+    /// Unknown labels are continuous — the conservative default.
+    pub fn for_gpu_name(name: &str) -> PartitionModel {
+        GpuKind::parse(name).map_or(PartitionModel::Continuous, PartitionModel::for_kind)
+    }
+
+    pub fn is_mig(self) -> bool {
+        self == PartitionModel::Mig
+    }
+
+    /// Quantize a Theorem-1 lower bound to this partition grid.
+    /// Continuous demands pass through untouched (`lower_bound_resources`
+    /// already lands on the `r_unit` grid — re-quantizing here would
+    /// break the bit-identity contract); MIG demands round up to the
+    /// smallest legal profile that covers them.
+    pub fn quantize_demand(self, r: f64) -> f64 {
+        match self {
+            PartitionModel::Continuous => r,
+            PartitionModel::Mig => gpc_fraction(demand_gpc(r)),
+        }
+    }
+}
+
+/// Device fraction of a `g`-GPC slice.
+pub fn gpc_fraction(gpc: u32) -> f64 {
+    gpc as f64 / MIG_GPC_PER_DEVICE as f64
+}
+
+/// Smallest legal profile (in GPCs) covering the fraction `r`.  Demands
+/// just above 4g take the whole device: 5g/6g do not exist.
+pub fn demand_gpc(r: f64) -> u32 {
+    let need = (r * MIG_GPC_PER_DEVICE as f64 - 1e-9).ceil().max(1.0) as u32;
+    let need = need.min(MIG_GPC_PER_DEVICE);
+    *MIG_PROFILES_GPC
+        .iter()
+        .find(|&&p| p >= need)
+        .unwrap_or(&MIG_GPC_PER_DEVICE)
+}
+
+/// The GPC count of an allocation fraction, when it sits exactly on the
+/// slice grid (within float tolerance); `None` for off-grid fractions.
+pub fn slice_gpc(r: f64) -> Option<u32> {
+    let g = (r * MIG_GPC_PER_DEVICE as f64).round();
+    if g < 1.0 || g > MIG_GPC_PER_DEVICE as f64 {
+        return None;
+    }
+    if (r * MIG_GPC_PER_DEVICE as f64 - g).abs() < 1e-6 {
+        Some(g as u32)
+    } else {
+        None
+    }
+}
+
+/// MIG legality of one device's allocation list: every tenant holds a
+/// legal profile and the profiles sum within the 7-GPC envelope.
+pub fn device_is_legal(allocs: &[Alloc]) -> Result<(), String> {
+    let mut total = 0u32;
+    for a in allocs {
+        match slice_gpc(a.resources) {
+            Some(g) if MIG_PROFILES_GPC.contains(&g) => total += g,
+            Some(g) => return Err(format!("w{}: {g}g is not a legal MIG profile", a.workload)),
+            None => {
+                return Err(format!(
+                    "w{}: allocation {:.4} is off the slice grid",
+                    a.workload, a.resources
+                ))
+            }
+        }
+    }
+    if total > MIG_GPC_PER_DEVICE {
+        return Err(format!("slices sum to {total}g > {MIG_GPC_PER_DEVICE}g"));
+    }
+    Ok(())
+}
+
+/// MIG legality of a whole plan.
+pub fn plan_is_legal(plan: &Plan) -> Result<(), String> {
+    for (g, allocs) in plan.gpus.iter().enumerate() {
+        device_is_legal(allocs).map_err(|e| format!("gpu {g}: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Stranded capacity of a MIG plan: free GPCs on provisioned devices
+/// (paid for but unusable by the current packing), in whole GPCs.
+pub fn stranded_gpc(plan: &Plan) -> u32 {
+    plan.gpus
+        .iter()
+        .map(|allocs| {
+            let used: u32 = allocs.iter().filter_map(|a| slice_gpc(a.resources)).sum();
+            MIG_GPC_PER_DEVICE.saturating_sub(used)
+        })
+        .sum()
+}
+
+/// Stranded capacity as a percentage of all provisioned GPCs (0 for an
+/// empty plan).
+pub fn stranded_pct(plan: &Plan) -> f64 {
+    let devices = plan.num_gpus() as f64;
+    if devices == 0.0 {
+        return 0.0;
+    }
+    100.0 * stranded_gpc(plan) as f64 / (devices * MIG_GPC_PER_DEVICE as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::forall;
+    use crate::util::rng::Rng;
+
+    fn alloc(workload: usize, resources: f64) -> Alloc {
+        Alloc {
+            workload,
+            resources,
+            batch: 4,
+        }
+    }
+
+    #[test]
+    fn partition_model_resolution() {
+        assert_eq!(PartitionModel::for_kind(GpuKind::V100), PartitionModel::Continuous);
+        assert_eq!(PartitionModel::for_kind(GpuKind::T4), PartitionModel::Continuous);
+        assert_eq!(PartitionModel::for_kind(GpuKind::A100), PartitionModel::Mig);
+        assert_eq!(PartitionModel::for_kind(GpuKind::H100), PartitionModel::Mig);
+        assert_eq!(PartitionModel::for_gpu_name("A100"), PartitionModel::Mig);
+        assert_eq!(PartitionModel::for_gpu_name("V100"), PartitionModel::Continuous);
+        // unknown labels fall back to continuous
+        assert_eq!(PartitionModel::for_gpu_name("tpu-v4"), PartitionModel::Continuous);
+    }
+
+    #[test]
+    fn continuous_quantize_is_the_identity() {
+        // bitwise — the continuous path must not touch the demand
+        for r in [0.025, 0.3, 0.617, 1.0, 0.12345] {
+            assert_eq!(
+                PartitionModel::Continuous.quantize_demand(r).to_bits(),
+                r.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn demand_rounds_up_to_legal_profiles_only() {
+        // exact table: fraction -> GPCs
+        assert_eq!(demand_gpc(0.01), 1);
+        assert_eq!(demand_gpc(1.0 / 7.0), 1);
+        assert_eq!(demand_gpc(0.15), 2);
+        assert_eq!(demand_gpc(2.0 / 7.0), 2);
+        assert_eq!(demand_gpc(0.3), 3);
+        assert_eq!(demand_gpc(0.5), 4);
+        // 5g and 6g do not exist: anything past 4g takes the device
+        assert_eq!(demand_gpc(4.1 / 7.0), 7);
+        assert_eq!(demand_gpc(6.0 / 7.0), 7);
+        assert_eq!(demand_gpc(1.0), 7);
+    }
+
+    #[test]
+    fn property_quantized_demand_is_legal_and_covering() {
+        forall(
+            99,
+            300,
+            |r: &mut Rng| r.range_f64(1e-6, 1.0),
+            |&r| {
+                let g = demand_gpc(r);
+                if !MIG_PROFILES_GPC.contains(&g) {
+                    return Err(format!("{r} -> illegal profile {g}g"));
+                }
+                if gpc_fraction(g) + 1e-9 < r {
+                    return Err(format!("{r} -> {g}g does not cover the demand"));
+                }
+                // round-trips through the grid detector
+                if slice_gpc(PartitionModel::Mig.quantize_demand(r)) != Some(g) {
+                    return Err(format!("{r} -> {g}g does not round-trip"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn device_legality() {
+        // 4g + 3g fills the envelope
+        assert!(device_is_legal(&[alloc(0, 4.0 / 7.0), alloc(1, 3.0 / 7.0)]).is_ok());
+        // seven 1g tenants fill it too
+        let ones: Vec<Alloc> = (0..7).map(|w| alloc(w, 1.0 / 7.0)).collect();
+        assert!(device_is_legal(&ones).is_ok());
+        // 4g + 4g overflows
+        let e = device_is_legal(&[alloc(0, 4.0 / 7.0), alloc(1, 4.0 / 7.0)]).unwrap_err();
+        assert!(e.contains("8g"), "{e}");
+        // a 5g slice is not a thing
+        let e = device_is_legal(&[alloc(0, 5.0 / 7.0)]).unwrap_err();
+        assert!(e.contains("not a legal"), "{e}");
+        // off-grid continuous allocations are rejected
+        assert!(device_is_legal(&[alloc(0, 0.3)]).is_err());
+    }
+
+    #[test]
+    fn stranded_capacity_accounting() {
+        let mut plan = Plan {
+            strategy: "t".into(),
+            gpu: "A100".into(),
+            unit_price: 4.1,
+            gpus: vec![
+                vec![alloc(0, 4.0 / 7.0), alloc(1, 2.0 / 7.0)], // 1g stranded
+                vec![alloc(2, 7.0 / 7.0)],                      // full
+            ],
+        };
+        assert_eq!(stranded_gpc(&plan), 1);
+        assert!((stranded_pct(&plan) - 100.0 / 14.0).abs() < 1e-9);
+        plan.gpus.push(Vec::new()); // an empty provisioned device: all 7 stranded
+        assert_eq!(stranded_gpc(&plan), 8);
+        assert_eq!(stranded_gpc(&Plan::default()), 0);
+        assert_eq!(stranded_pct(&Plan::default()), 0.0);
+    }
+}

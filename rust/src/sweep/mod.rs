@@ -22,4 +22,4 @@ pub mod scenario;
 
 pub use report::{Aggregate, SweepReport};
 pub use runner::{run_sweep, run_task, ScenarioResult, SweepConfig};
-pub use scenario::{profiled_pair, Fleet, Scenario, ScenarioSpace, SloTier};
+pub use scenario::{profiled_fleet, profiled_pair, Fleet, Scenario, ScenarioSpace, SloTier};

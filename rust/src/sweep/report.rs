@@ -50,6 +50,23 @@ pub struct Aggregate {
     /// not mean: one task recovering slowly is exactly the regression
     /// the lane exists to catch.
     pub recovery_ms_p95: f64,
+    /// MIG lane: feasible tasks that ran on a MIG fleet (0 outside it —
+    /// the MIG keys below are then omitted from the JSON so non-MIG
+    /// reports stay byte-identical to pre-MIG ones).
+    pub mig_tasks: usize,
+    /// Mean stranded slice capacity (%) over feasible MIG tasks — the
+    /// fragmentation gate metric.
+    pub mean_stranded_pct: f64,
+    /// Live-device slice reconfigurations across all MIG tasks.
+    pub total_reconfigurations: u64,
+    /// Mean head-to-head hourly costs over feasible MIG tasks.
+    pub mean_mig_cost_packed: f64,
+    pub mean_mig_cost_ffd: f64,
+    pub mean_mig_cost_igniter: f64,
+    /// Total packed cost / total FFD cost over feasible MIG tasks — the
+    /// packer-quality gate metric (<= 1.0 by construction: the packer
+    /// adopts the FFD packing whenever FFD lands on fewer devices).
+    pub packer_vs_ffd_cost_ratio: f64,
 }
 
 /// Mean of `f` over the tasks that actually recorded prediction-error
@@ -74,6 +91,17 @@ impl Aggregate {
         // mean over feasible tasks only: infeasible scenarios report zero
         // cost/attainment and would silently dilute the gate metrics
         let mean_of = |sum: f64| if n == 0 { 0.0 } else { sum / n as f64 };
+        let mig: Vec<&&ScenarioResult> = feasible.iter().filter(|r| r.is_mig).collect();
+        let m = mig.len();
+        let mig_mean = |f: &dyn Fn(&ScenarioResult) -> f64| {
+            if m == 0 {
+                0.0
+            } else {
+                mig.iter().map(|r| f(r)).sum::<f64>() / m as f64
+            }
+        };
+        let packed_total: f64 = mig.iter().map(|r| r.mig_cost_packed).sum();
+        let ffd_total: f64 = mig.iter().map(|r| r.mig_cost_ffd).sum();
         Aggregate {
             tasks: results.len(),
             feasible: n,
@@ -94,6 +122,17 @@ impl Aggregate {
                 .iter()
                 .map(|r| r.recovery_ms_p95)
                 .fold(0.0, f64::max),
+            mig_tasks: m,
+            mean_stranded_pct: mig_mean(&|r| r.stranded_capacity_pct),
+            total_reconfigurations: mig.iter().map(|r| r.reconfigurations).sum(),
+            mean_mig_cost_packed: mig_mean(&|r| r.mig_cost_packed),
+            mean_mig_cost_ffd: mig_mean(&|r| r.mig_cost_ffd),
+            mean_mig_cost_igniter: mig_mean(&|r| r.mig_cost_igniter),
+            packer_vs_ffd_cost_ratio: if ffd_total > 0.0 {
+                packed_total / ffd_total
+            } else {
+                0.0
+            },
         }
     }
 
@@ -119,6 +158,18 @@ impl Aggregate {
                 .set("faults_injected", self.faults_injected)
                 .set("recovery_samples", self.recovery_samples)
                 .set("recovery_ms_p95", self.recovery_ms_p95);
+        }
+        // MIG keys only when a MIG task ran: non-MIG reports (and the
+        // committed fingerprint golden) stay byte-identical
+        if self.mig_tasks > 0 {
+            j = j
+                .set("mig_tasks", self.mig_tasks)
+                .set("mean_stranded_pct", self.mean_stranded_pct)
+                .set("total_reconfigurations", self.total_reconfigurations)
+                .set("mean_mig_cost_packed", self.mean_mig_cost_packed)
+                .set("mean_mig_cost_ffd", self.mean_mig_cost_ffd)
+                .set("mean_mig_cost_igniter", self.mean_mig_cost_igniter)
+                .set("packer_vs_ffd_cost_ratio", self.packer_vs_ffd_cost_ratio);
         }
         j
     }
@@ -162,6 +213,17 @@ fn result_json(r: &ScenarioResult, with_wall: bool) -> Json {
             .set("recovery_samples", r.recovery_samples)
             .set("recovery_ms_p95", r.recovery_ms_p95);
     }
+    if r.is_mig {
+        // MIG keys only on MIG tasks: non-MIG tasks serialize exactly as
+        // they did pre-MIG
+        j = j
+            .set("is_mig", true)
+            .set("stranded_capacity_pct", r.stranded_capacity_pct)
+            .set("reconfigurations", r.reconfigurations)
+            .set("mig_cost_packed", r.mig_cost_packed)
+            .set("mig_cost_ffd", r.mig_cost_ffd)
+            .set("mig_cost_igniter", r.mig_cost_igniter);
+    }
     if with_wall {
         // `placements` is deterministic, but it is a work count feeding
         // `plan_throughput_pps`, not a scenario outcome — it stays in the
@@ -203,6 +265,11 @@ impl SweepReport {
         // key as `false` so pre-chaos baselines still shape-match
         if !self.config.space.faults.is_off() {
             j = j.set("faults", true);
+        }
+        // written only when the space offers a MIG fleet; the bench gate
+        // treats a missing key as `false` so pre-MIG baselines shape-match
+        if self.config.space.needs_mig() {
+            j = j.set("mig", true);
         }
         j
     }
@@ -310,6 +377,12 @@ mod tests {
             pred_err_mean: 0.2,
             pred_err_p95: 0.5,
             pred_err_samples: 40,
+            is_mig: false,
+            stranded_capacity_pct: 0.0,
+            reconfigurations: 0,
+            mig_cost_packed: 0.0,
+            mig_cost_ffd: 0.0,
+            mig_cost_igniter: 0.0,
             placements: 50,
             plan_wall_ms: 2.5,
             wall_ms: 12.5,
@@ -420,6 +493,64 @@ mod tests {
         assert_eq!(agg.faults_injected, 3);
         assert_eq!(agg.recovery_samples, 2);
         assert_eq!(agg.recovery_ms_p95, 812.5);
+    }
+
+    /// A feasible MIG task result (mig-a100 fleet, head-to-head filled).
+    fn mig_result(scenario: usize, packed: f64, ffd: f64) -> ScenarioResult {
+        let mut r = result(scenario, packed, 0.97);
+        r.gpu = "A100".into();
+        r.fleet = "mig-a100";
+        r.is_mig = true;
+        r.stranded_capacity_pct = 10.0;
+        r.reconfigurations = 3;
+        r.mig_cost_packed = packed;
+        r.mig_cost_ffd = ffd;
+        r.mig_cost_igniter = ffd;
+        r
+    }
+
+    #[test]
+    fn mig_keys_appear_only_when_a_mig_task_ran() {
+        // non-MIG: no MIG keys anywhere (byte-compat with the pre-MIG
+        // report shape and the committed fingerprint golden)
+        let clean = SweepReport::new(config(), vec![result(0, 10.0, 1.0)], 1.0);
+        let text = clean.fingerprint();
+        for key in ["is_mig", "stranded", "mig_tasks", "\"mig\"", "reconfigurations"] {
+            assert!(!text.contains(key), "non-MIG report leaked {key}: {text}");
+        }
+        // MIG lane: per-task + aggregate keys and the config marker
+        let mut cfg = config();
+        cfg.space.fleets = vec![crate::sweep::scenario::Fleet::MigA100];
+        let mig = SweepReport::new(cfg, vec![mig_result(0, 8.2, 12.3), mig_result(1, 4.1, 4.1)], 1.0);
+        let parsed = Json::parse(&mig.fingerprint()).unwrap();
+        assert_eq!(parsed.path("config.mig").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.path("scenarios.0.is_mig").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            parsed.path("scenarios.0.stranded_capacity_pct").unwrap().as_f64(),
+            Some(10.0)
+        );
+        assert_eq!(parsed.path("aggregate.mig_tasks").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            parsed.path("aggregate.total_reconfigurations").unwrap().as_u64(),
+            Some(6)
+        );
+        assert_eq!(
+            parsed.path("aggregate.mean_stranded_pct").unwrap().as_f64(),
+            Some(10.0)
+        );
+        // ratio = total packed / total FFD, not the mean of ratios
+        let ratio = parsed
+            .path("aggregate.packer_vs_ffd_cost_ratio")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((ratio - (8.2 + 4.1) / (12.3 + 4.1)).abs() < 1e-12, "{ratio}");
+        assert!(ratio <= 1.0);
+        // a mixed sweep aggregates MIG metrics over MIG tasks only
+        let agg = Aggregate::of(&[result(0, 10.0, 1.0), mig_result(1, 4.1, 8.2)]);
+        assert_eq!(agg.mig_tasks, 1);
+        assert_eq!(agg.mean_mig_cost_packed, 4.1);
+        assert_eq!(agg.packer_vs_ffd_cost_ratio, 0.5);
     }
 
     #[test]

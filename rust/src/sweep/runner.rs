@@ -96,6 +96,21 @@ pub struct ScenarioResult {
     pub pred_err_mean: f64,
     pub pred_err_p95: f64,
     pub pred_err_samples: u64,
+    /// Whether this task ran on a MIG fleet (discrete slice partitioning).
+    /// The five fields below are meaningful — and serialized — only when
+    /// set, so non-MIG reports stay byte-identical.
+    pub is_mig: bool,
+    /// Stranded slice capacity of the adopted packing: free GPCs on
+    /// provisioned devices as a % of all provisioned GPCs.
+    pub stranded_capacity_pct: f64,
+    /// Live-device slice reconfigurations the serving policy's planner
+    /// performed over the closed-loop run.
+    pub reconfigurations: u64,
+    /// Head-to-head hourly costs on identical quantized demands:
+    /// the fragmentation-aware packer vs. FFD++ vs. iGniter's Alg. 1.
+    pub mig_cost_packed: f64,
+    pub mig_cost_ffd: f64,
+    pub mig_cost_igniter: f64,
     /// Placement items executed for this task: the initial provisioning
     /// pass over every candidate GPU type (charged to seed 0, where the
     /// shared work happens) plus every closed-loop respec/rebalance
@@ -119,11 +134,41 @@ struct Provisioned {
     /// Placement items Alg. 1 executed across ALL candidate GPU types
     /// (cheapest-selection provisions every type, not just the winner).
     placements: u64,
+    /// MIG head-to-head metrics (None on continuous fleets).
+    mig: Option<MigMetrics>,
+}
+
+/// The numbers the MIG head-to-head produced for one scenario's plan.
+struct MigMetrics {
+    stranded_pct: f64,
+    cost_packed: f64,
+    cost_ffd: f64,
+    cost_igniter: f64,
 }
 
 /// Provision the cheapest fleet shape for a scenario; `None` when no
-/// offered fleet can hold the mix.
+/// offered fleet can hold the mix.  MIG fleets (exactly one system) run
+/// the packer head-to-head against FFD and iGniter on identical
+/// quantized demands and adopt the packed plan.
 fn provision_scenario(scenario: &Scenario, systems: &[ProfiledSystem]) -> Option<Provisioned> {
+    if scenario.fleet.is_mig() {
+        let fleet = scenario.fleet.systems(systems);
+        debug_assert_eq!(fleet.len(), 1, "MIG fleets are homogeneous");
+        let (tp, h2h) = heterogeneous::provision_mig_head_to_head(&fleet[0], &scenario.specs)?;
+        let kind = GpuKind::parse(&tp.plan.gpu).expect("plan carries a known GPU type");
+        return Some(Provisioned {
+            kind,
+            plan: tp.plan,
+            rspecs: tp.replicated.specs,
+            placements: h2h.placements as u64,
+            mig: Some(MigMetrics {
+                stranded_pct: h2h.stranded_pct,
+                cost_packed: h2h.cost_packed,
+                cost_ffd: h2h.cost_ffd,
+                cost_igniter: h2h.cost_igniter,
+            }),
+        });
+    }
     let mut candidates =
         heterogeneous::select_cheapest(scenario.fleet.systems(systems), &scenario.specs);
     if candidates.is_empty() {
@@ -137,6 +182,7 @@ fn provision_scenario(scenario: &Scenario, systems: &[ProfiledSystem]) -> Option
         plan: tp.plan,
         rspecs: tp.replicated.specs,
         placements,
+        mig: None,
     })
 }
 
@@ -176,6 +222,12 @@ fn serve_task(
         pred_err_mean: 0.0,
         pred_err_p95: 0.0,
         pred_err_samples: 0,
+        is_mig: false,
+        stranded_capacity_pct: 0.0,
+        reconfigurations: 0,
+        mig_cost_packed: 0.0,
+        mig_cost_ffd: 0.0,
+        mig_cost_igniter: 0.0,
         placements: 0,
         plan_wall_ms: 0.0,
         wall_ms: 0.0,
@@ -246,6 +298,14 @@ fn serve_task(
         result.pred_err_p95 = percentile(errs, 0.95);
         result.pred_err_samples = errs.len() as u64;
     }
+    if let Some(m) = &p.mig {
+        result.is_mig = true;
+        result.stranded_capacity_pct = m.stranded_pct;
+        result.mig_cost_packed = m.cost_packed;
+        result.mig_cost_ffd = m.cost_ffd;
+        result.mig_cost_igniter = m.cost_igniter;
+        result.reconfigurations = sim.serving_policy().reconfigurations();
+    }
     let (placements, plan_wall_ms) = sim.serving_policy().planning_activity();
     result.placements = placements;
     result.plan_wall_ms = plan_wall_ms;
@@ -298,7 +358,8 @@ fn run_scenario(
 /// writes its seeds-block of the pre-sized result vector, so the merged
 /// order is always submission order regardless of worker interleaving.
 pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
-    let systems = super::scenario::profiled_pair(crate::experiments::common::SEED);
+    let systems =
+        super::scenario::profiled_fleet(crate::experiments::common::SEED, cfg.space.needs_mig());
     let seeds = cfg.seeds.max(1);
     let t0 = Instant::now();
     let results: Vec<ScenarioResult> = if cfg.parallel <= 1 {
@@ -433,6 +494,39 @@ mod tests {
             if r.faults_injected == 0 {
                 assert_eq!(r.dropped, 0, "dropped without a fired fault: {r:?}");
             }
+        }
+    }
+
+    #[test]
+    fn mig_lane_reports_fragmentation_and_the_packer_never_loses() {
+        let mut cfg = tiny();
+        cfg.scenarios = 4;
+        cfg.space.fleets = vec![Fleet::MigA100, Fleet::MigH100];
+        let report = run_sweep(&cfg);
+        assert_eq!(report.results.len(), 4);
+        for r in &report.results {
+            assert!(r.is_mig, "MIG lane produced a non-MIG result: {r:?}");
+            assert!(r.feasible && r.served > 0, "{r:?}");
+            assert!(r.gpu == "A100" || r.gpu == "H100", "{}", r.gpu);
+            assert!(
+                (0.0..100.0).contains(&r.stranded_capacity_pct),
+                "stranded {}",
+                r.stranded_capacity_pct
+            );
+            // the adopted plan IS the packed plan
+            assert_eq!(r.cost_per_hour, r.mig_cost_packed);
+            assert!(r.mig_cost_packed > 0.0);
+            // head-to-head on identical demands: packer beats or ties both
+            assert!(r.mig_cost_packed <= r.mig_cost_ffd + 1e-9, "{r:?}");
+            assert!(r.mig_cost_packed <= r.mig_cost_igniter + 1e-9, "{r:?}");
+            assert_eq!(r.dropped, 0);
+        }
+        // non-MIG lanes never carry MIG metrics
+        let base = run_sweep(&tiny());
+        for r in &base.results {
+            assert!(!r.is_mig);
+            assert_eq!(r.reconfigurations, 0);
+            assert_eq!(r.mig_cost_packed, 0.0);
         }
     }
 

@@ -56,6 +56,11 @@ pub enum Fleet {
     V100Only,
     T4Only,
     Heterogeneous,
+    /// Homogeneous MIG fleet of A100s: discrete slice partitioning, the
+    /// fragmentation-aware packer, zero cross-tenant interference.
+    MigA100,
+    /// Homogeneous MIG fleet of H100s.
+    MigH100,
 }
 
 impl Fleet {
@@ -64,17 +69,28 @@ impl Fleet {
             Fleet::V100Only => "v100",
             Fleet::T4Only => "t4",
             Fleet::Heterogeneous => "hetero",
+            Fleet::MigA100 => "mig-a100",
+            Fleet::MigH100 => "mig-h100",
         }
     }
 
+    /// Whether this fleet partitions devices into discrete MIG slices.
+    pub fn is_mig(self) -> bool {
+        matches!(self, Fleet::MigA100 | Fleet::MigH100)
+    }
+
     /// The candidate systems of this fleet, as a sub-slice of the
-    /// `[V100, T4]` profiled pair.
-    pub fn systems<'a>(self, pair: &'a [ProfiledSystem]) -> &'a [ProfiledSystem] {
-        debug_assert_eq!(pair.len(), 2);
+    /// profiled fleet: `[V100, T4]` for non-MIG sweeps (bit-identical to
+    /// the historical pair slicing), `[V100, T4, A100, H100]` when a MIG
+    /// lane asked `profiled_fleet` for the MIG parts too.
+    pub fn systems<'a>(self, fleet: &'a [ProfiledSystem]) -> &'a [ProfiledSystem] {
+        debug_assert!(fleet.len() == 2 || fleet.len() == 4, "{}", fleet.len());
         match self {
-            Fleet::V100Only => &pair[0..1],
-            Fleet::T4Only => &pair[1..2],
-            Fleet::Heterogeneous => pair,
+            Fleet::V100Only => &fleet[0..1],
+            Fleet::T4Only => &fleet[1..2],
+            Fleet::Heterogeneous => &fleet[0..2],
+            Fleet::MigA100 => &fleet[2..3],
+            Fleet::MigH100 => &fleet[3..4],
         }
     }
 }
@@ -155,6 +171,22 @@ impl ScenarioSpace {
             faults: FaultSpace::chaos(),
             ..ScenarioSpace::quick()
         }
+    }
+
+    /// The MIG lane (`igniter sweep --fleet mig`): the quick space over
+    /// homogeneous A100/H100 MIG fleets — discrete slice packing, where
+    /// fragmentation (stranded GPCs) replaces interference as the cost
+    /// driver.
+    pub fn mig() -> ScenarioSpace {
+        ScenarioSpace {
+            fleets: vec![Fleet::MigA100, Fleet::MigH100],
+            ..ScenarioSpace::quick()
+        }
+    }
+
+    /// Whether any fleet in this space needs the MIG parts profiled.
+    pub fn needs_mig(&self) -> bool {
+        self.fleets.iter().any(|f| f.is_mig())
     }
 
     /// Virtual serving horizon of one scenario (ms).
@@ -301,6 +333,22 @@ pub fn profiled_pair(seed: u64) -> Vec<ProfiledSystem> {
         .collect()
 }
 
+/// The profiled fleet for a sweep: the historical `[V100, T4]` pair, plus
+/// `[A100, H100]` appended only when a MIG lane needs them — non-MIG
+/// sweeps never pay the extra profiling wall and keep their fleet slices
+/// (and hence every downstream byte) identical.
+pub fn profiled_fleet(seed: u64, include_mig: bool) -> Vec<ProfiledSystem> {
+    let mut fleet = profiled_pair(seed);
+    if include_mig {
+        fleet.extend(
+            [GpuKind::A100, GpuKind::H100]
+                .into_iter()
+                .map(|kind| crate::experiments::common::profiled_system(kind, seed)),
+        );
+    }
+    fleet
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -353,6 +401,42 @@ mod tests {
         for tier in [SloTier::Tight, SloTier::Nominal, SloTier::Relaxed] {
             assert!(scenarios.iter().any(|s| s.tier == tier), "{tier:?} never drawn");
         }
+    }
+
+    #[test]
+    fn mig_space_samples_both_mig_fleets() {
+        let space = ScenarioSpace::mig();
+        assert!(space.needs_mig());
+        assert!(!ScenarioSpace::quick().needs_mig());
+        let scenarios: Vec<Scenario> =
+            (0..40).map(|id| Scenario::generate(&space, 5, id)).collect();
+        for fleet in [Fleet::MigA100, Fleet::MigH100] {
+            assert!(fleet.is_mig());
+            assert!(scenarios.iter().any(|s| s.fleet == fleet), "{fleet:?} never drawn");
+        }
+        assert!(!Fleet::Heterogeneous.is_mig());
+    }
+
+    #[test]
+    fn fleet_slicing_covers_pair_and_mig_fleet() {
+        let pair = profiled_pair(42);
+        // historical pair slicing is unchanged
+        assert_eq!(Fleet::V100Only.systems(&pair).len(), 1);
+        assert_eq!(Fleet::V100Only.systems(&pair)[0].hw.gpu, "V100");
+        assert_eq!(Fleet::T4Only.systems(&pair)[0].hw.gpu, "T4");
+        assert_eq!(Fleet::Heterogeneous.systems(&pair).len(), 2);
+        // the 4-system fleet adds the MIG parts at stable indices
+        let fleet = profiled_fleet(42, true);
+        assert_eq!(fleet.len(), 4);
+        // the shared prefix is bit-identical to the pair
+        for (a, b) in fleet.iter().take(2).zip(&pair) {
+            assert_eq!(a.hw, b.hw);
+        }
+        assert_eq!(Fleet::MigA100.systems(&fleet)[0].hw.gpu, "A100");
+        assert_eq!(Fleet::MigH100.systems(&fleet)[0].hw.gpu, "H100");
+        assert_eq!(Fleet::Heterogeneous.systems(&fleet).len(), 2);
+        // without MIG, profiled_fleet is exactly the pair
+        assert_eq!(profiled_fleet(42, false).len(), 2);
     }
 
     #[test]

@@ -50,6 +50,13 @@ fn chaos_cfg(master_seed: u64, parallel: usize) -> SweepConfig {
     c
 }
 
+/// The MIG lane (`--fleet mig`) under the same determinism contract.
+fn mig_cfg(master_seed: u64, parallel: usize) -> SweepConfig {
+    let mut c = cfg(master_seed, parallel);
+    c.space.fleets = vec![Fleet::MigA100, Fleet::MigH100];
+    c
+}
+
 #[test]
 fn property_parallel_sweep_bit_identical_to_sequential() {
     // For random master seeds, --parallel 8 must produce byte-for-byte
@@ -137,6 +144,37 @@ fn chaos_lane_is_deterministic_and_distinct() {
             assert_eq!(r.dropped, 0, "dropped without a fired fault: {r:?}");
         }
     }
+}
+
+#[test]
+fn mig_lane_is_deterministic_and_distinct() {
+    // The MIG lane adds a 4-system profiled fleet, slice quantization,
+    // the discrete packers, and the head-to-head metrics — all of it
+    // must still collapse to one fingerprint across worker counts, and
+    // the lane must differ from the plain sweep.
+    let seq = run_sweep(&mig_cfg(7, 1));
+    let par = run_sweep(&mig_cfg(7, 8));
+    assert_eq!(seq.fingerprint(), par.fingerprint(), "MIG lane diverged");
+    assert_ne!(
+        seq.fingerprint(),
+        run_sweep(&cfg(7, 1)).fingerprint(),
+        "MIG lane produced the plain sweep"
+    );
+    let agg = seq.aggregate();
+    assert!(agg.mig_tasks > 0, "MIG lane ran no MIG task");
+    assert!(
+        agg.packer_vs_ffd_cost_ratio > 0.0 && agg.packer_vs_ffd_cost_ratio <= 1.0 + 1e-9,
+        "ratio {}",
+        agg.packer_vs_ffd_cost_ratio
+    );
+    for r in &seq.results {
+        assert_eq!(r.dropped, 0, "{r:?}");
+    }
+    // ...and the MIG fleet extension never perturbs a non-MIG sweep: the
+    // plain config profiles only the historical pair, so its fingerprint
+    // (pinned below in `quick_sweep_fingerprint_pinned_across_refactors`)
+    // is the authoritative bit-identity check.
+    assert!(!run_sweep(&cfg(7, 1)).fingerprint().contains("mig"));
 }
 
 #[test]

@@ -50,6 +50,25 @@ Fault-free runs keep the strict zero-drop structural rule, and a
 baseline blessed before the chaos lane existed shape-matches a
 fault-free candidate via the ``faults: false`` default.
 
+MIG-lane runs (``igniter sweep --fleet mig``; ``config.mig: true`` in
+the report) are gated on two extra metrics:
+
+* ``aggregate.mean_stranded_pct`` — mean stranded slice capacity
+  (carved-but-idle GPCs as % of powered device capacity); lower is
+  better, gated like cost.  Skipped with a notice when the baseline
+  predates it.
+* ``aggregate.packer_vs_ffd_cost_ratio`` — fragmentation-aware packer
+  cost over FFD++ cost on identical slice-quantized demands; lower is
+  better, gated like cost, and additionally bounded structurally at
+  ``<= 1`` (the packer carries an FFD portfolio fallback, so losing to
+  FFD outright means the fallback broke — not that packing merely got
+  worse).
+
+Structurally a MIG run must have at least one feasible MIG task, else
+the lane gates nothing.  Baselines blessed before the MIG lane existed
+shape-match non-MIG candidates via the ``mig: false`` default and skip
+the MIG metric gates with a printed notice.
+
 ``tol`` defaults to 0.20 (the 20% CI gate) and can be overridden with
 ``BENCH_TOLERANCE``; ``wall_tol`` defaults to 0.50 and can be
 overridden with ``BENCH_WALL_TOLERANCE``.  A baseline marked ``"provisional": true`` (one that
@@ -154,6 +173,23 @@ def main() -> None:
     placements = metric_opt(cand, "wall.total_placements")
     if placements is not None and placements <= 0:
         die("sweep recorded no placements (placement-engine telemetry broken)")
+    # MIG lane: the run must actually have exercised discrete slice packing,
+    # and the packer must never lose to plain FFD — it carries an FFD
+    # portfolio fallback, so a ratio above 1 means the fallback broke
+    # (a correctness bug), not that fragmentation merely got worse.
+    mig_on = bool(cand.get("config", {}).get("mig", False))
+    if mig_on:
+        mig_tasks = metric_opt(cand, "aggregate.mig_tasks")
+        if mig_tasks is None or mig_tasks <= 0:
+            die("MIG sweep ran no feasible MIG task (the MIG lane gates nothing)")
+        ratio = metric_opt(cand, "aggregate.packer_vs_ffd_cost_ratio")
+        if ratio is None:
+            die("MIG sweep lacks 'aggregate.packer_vs_ffd_cost_ratio' (head-to-head broken)")
+        if ratio > 1.0 + 1e-6:
+            die(
+                f"packer_vs_ffd_cost_ratio {ratio:.4f} > 1 — the packer's FFD "
+                "portfolio fallback is broken"
+            )
 
     # -- comparability: the sweep shape must match the baseline's --------
     # (a different scenario count / seed count / master seed / space draws
@@ -171,6 +207,7 @@ def main() -> None:
         cfg.setdefault("mismatch", False)
         cfg.setdefault("calibrate", False)
         cfg.setdefault("faults", False)
+        cfg.setdefault("mig", False)
     mismatched = sorted(
         k for k in set(base_cfg) | set(cand_cfg) if base_cfg.get(k) != cand_cfg.get(k)
     )
@@ -260,6 +297,19 @@ def main() -> None:
             )
             if not ok:
                 failures.append("dropped_fraction")
+
+    if mig_on:
+        # MIG-lane metrics: stranded slice capacity and the packer-vs-FFD
+        # cost ratio, both lower is better (the <= 1 structural bar on the
+        # ratio already ran above; this gates run-over-run drift within it)
+        for name, path in [
+            ("mig_stranded_pct", "aggregate.mean_stranded_pct"),
+            ("packer_vs_ffd", "aggregate.packer_vs_ffd_cost_ratio"),
+        ]:
+            if metric_opt(base, path) is None:
+                print(f"  {name:<22} skipped (baseline lacks '{path}' — re-bless to gate it)")
+            else:
+                gate(name, path, False, det_tol)
 
     if provisional:
         print(
