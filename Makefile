@@ -15,6 +15,11 @@
 #                     through the fragmentation-aware packer, gated once
 #                     a MIG baseline exists
 #   make bless-bench-mig  bless BENCH_baseline_mig.json from a local run
+#   make sweep-longtail  the CI long-tail lane: 200-1000 mostly-idle
+#                     tenants through the idle-aware monitor fast path,
+#                     gated once a long-tail baseline exists
+#   make bless-bench-longtail  bless BENCH_baseline_longtail.json from a
+#                     local run
 #   make bless-golden regenerate + overwrite the dynamic-summary golden
 #   make bless-bench  re-bless BENCH_baseline.json from a fresh local run
 #   make artifacts    AOT-lower the model zoo to artifacts/ (needs jax)
@@ -24,15 +29,16 @@ CARGO ?= cargo
 PYTHON ?= python
 
 .PHONY: verify build test test-invariants bench-build fmt-check clippy pytest \
-        sweep-quick sweep-full-smoke sweep-chaos sweep-mig bless-golden \
-        bless-bench bless-bench-chaos bless-bench-mig artifacts clean
+        sweep-quick sweep-full-smoke sweep-chaos sweep-mig sweep-longtail \
+        bless-golden bless-bench bless-bench-chaos bless-bench-mig \
+        bless-bench-longtail artifacts clean
 
 # `test` already runs every integration target (serving invariants,
 # determinism, sweep determinism, provisioner properties); `bench-build`
 # compiles every bench target (`cargo bench --no-run`), including the
 # sim-core throughput bench in benches/simulator.rs; `sweep-quick` runs
 # the same sweep + regression gate as the CI bench-sweep job.
-verify: build test bench-build fmt-check clippy pytest sweep-quick sweep-chaos sweep-mig
+verify: build test bench-build fmt-check clippy pytest sweep-quick sweep-chaos sweep-mig sweep-longtail
 	@echo "verify: OK"
 
 # Standalone pass over just the serving/provisioning invariant +
@@ -103,6 +109,22 @@ sweep-mig: build
 		echo "MIG lane ungated — run 'make bless-bench-mig' and commit BENCH_baseline_mig.json"; \
 	fi
 
+# The CI long-tail lane: the 200-1000-tenant mostly-idle scenario space
+# (~90% of tenants at 0.1-2 rps, spiky/diurnal traces) through the
+# idle-aware monitor fast path.  The binary enforces the structural bar
+# (mean near-idle tenant fraction >= 0.75); the run-over-run throughput
+# gate (`wall.sim_throughput_rps` is the headline) engages once a
+# long-tail baseline is blessed (bless-bench-longtail, or commit a
+# green CI run's artifact).
+sweep-longtail: build
+	$(CARGO) run --release -- sweep --longtail --scenarios 12 --seeds 2 --parallel 8 \
+		--out BENCH_longtail.json
+	@if [ -f BENCH_baseline_longtail.json ]; then \
+		$(PYTHON) scripts/check_bench_regression.py BENCH_baseline_longtail.json BENCH_longtail.json; \
+	else \
+		echo "longtail lane ungated — run 'make bless-bench-longtail' and commit BENCH_baseline_longtail.json"; \
+	fi
+
 # Regenerate the dynamic-summary golden and the pinned sweep-fingerprint
 # digest from this machine's run, overwriting the checked-in files
 # (commit the result; see rust/tests/golden/README.md for when
@@ -133,6 +155,13 @@ bless-bench-mig: build
 		--out BENCH_baseline_mig.json
 	@echo "BENCH_baseline_mig.json blessed from this run — review and commit it"
 
+# Promote a fresh long-tail sweep to the long-tail baseline (same shape
+# as the sweep-longtail lane so the gate's config check matches).
+bless-bench-longtail: build
+	$(CARGO) run --release -- sweep --longtail --scenarios 12 --seeds 2 --parallel 8 \
+		--out BENCH_baseline_longtail.json
+	@echo "BENCH_baseline_longtail.json blessed from this run — review and commit it"
+
 pytest:
 	$(PYTHON) -m pytest python/tests -q
 
@@ -141,4 +170,4 @@ artifacts:
 
 clean:
 	$(CARGO) clean
-	rm -rf results BENCH_sweep.json BENCH_full_smoke.json BENCH_chaos.json BENCH_mig.json
+	rm -rf results BENCH_sweep.json BENCH_full_smoke.json BENCH_chaos.json BENCH_mig.json BENCH_longtail.json

@@ -13,6 +13,12 @@ must have feasible MIG tasks and a packer-vs-FFD cost ratio at or below
 1 (structural — the packer carries an FFD portfolio fallback), and
 ``mean_stranded_pct`` / ``packer_vs_ffd_cost_ratio`` gate against the
 baseline with skip notices when the baseline predates the metrics.
+
+The long-tail lane (``config.longtail: true``) adds no ratio gates of
+its own — its headline is the generic ``wall.sim_throughput_rps`` —
+but is structurally validated: at least one long-tail task must have
+run and the mean near-idle tenant fraction must be present and at
+least 0.75, else the lane is not measuring the long-tail regime.
 """
 
 import json
@@ -37,6 +43,9 @@ def report(
     mig_tasks=None,
     mean_stranded_pct=None,
     packer_vs_ffd_cost_ratio=None,
+    longtail=None,
+    longtail_tasks=None,
+    mean_near_idle_fraction=None,
 ):
     """A minimal structurally-valid sweep report."""
     agg = {
@@ -63,6 +72,9 @@ def report(
         ("mig_tasks", mig_tasks),
         ("mean_stranded_pct", mean_stranded_pct),
         ("packer_vs_ffd_cost_ratio", packer_vs_ffd_cost_ratio),
+        # long-tail keys follow the same conditional-serialization pattern
+        ("longtail_tasks", longtail_tasks),
+        ("mean_near_idle_fraction", mean_near_idle_fraction),
     ):
         if val is not None:
             agg[key] = val
@@ -81,6 +93,8 @@ def report(
         config["faults"] = faults
     if mig is not None:
         config["mig"] = mig
+    if longtail is not None:
+        config["longtail"] = longtail
     return {
         "config": config,
         "scenarios": [{"scenario": 0, "feasible": True}],
@@ -113,6 +127,16 @@ def mig_report(**overrides):
         mig_tasks=8,
         mean_stranded_pct=12.0,
         packer_vs_ffd_cost_ratio=0.93,
+    )
+    kwargs.update(overrides)
+    return report(**kwargs)
+
+
+def longtail_report(**overrides):
+    kwargs = dict(
+        longtail=True,
+        longtail_tasks=10,
+        mean_near_idle_fraction=0.9,
     )
     kwargs.update(overrides)
     return report(**kwargs)
@@ -279,3 +303,51 @@ def test_mig_config_shape_mismatch_fails(tmp_path):
     r = run_gate(tmp_path, report(), mig_report())
     assert r.returncode != 0
     assert "does not match the baseline" in r.stderr
+
+
+def test_longtail_candidate_passes(tmp_path):
+    r = run_gate(tmp_path, longtail_report(), longtail_report())
+    assert r.returncode == 0, r.stderr
+    assert "bench gate: PASS" in r.stdout
+
+
+def test_non_longtail_run_mentions_no_longtail(tmp_path):
+    r = run_gate(tmp_path, report(), report())
+    assert r.returncode == 0, r.stderr
+    assert "longtail" not in r.stdout.lower()
+
+
+def test_longtail_config_shape_mismatch_fails(tmp_path):
+    # long-tail candidate vs plain baseline: a 200–1000-tenant mostly-idle
+    # population has nothing in common with the 12–40-workload quick lane —
+    # the shape check must refuse to ratio-gate them (the lane needs its
+    # own blessed BENCH_longtail.json baseline)
+    r = run_gate(tmp_path, report(), longtail_report())
+    assert r.returncode != 0
+    assert "does not match the baseline" in r.stderr
+
+
+def test_longtail_run_without_longtail_tasks_fails(tmp_path):
+    r = run_gate(tmp_path, longtail_report(), longtail_report(longtail_tasks=0))
+    assert r.returncode != 0
+    assert "no longtail task" in r.stderr
+
+
+def test_longtail_run_missing_idle_fraction_fails(tmp_path):
+    r = run_gate(
+        tmp_path, longtail_report(), longtail_report(mean_near_idle_fraction=None)
+    )
+    assert r.returncode != 0
+    assert "mean_near_idle_fraction" in r.stderr
+
+
+def test_longtail_mostly_active_population_fails_structurally(tmp_path):
+    # an "idle" lane whose tenants are mostly active measures nothing —
+    # this fails even against a matching baseline, before any ratio-gating
+    r = run_gate(
+        tmp_path,
+        longtail_report(mean_near_idle_fraction=0.5),
+        longtail_report(mean_near_idle_fraction=0.5),
+    )
+    assert r.returncode != 0
+    assert "not long-tailed" in r.stderr

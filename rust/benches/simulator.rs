@@ -153,4 +153,66 @@ fn main() {
         fplan.len(),
         (ns_chaos / ns - 1.0) * 100.0
     );
+
+    // Long-tail closed loop: mostly-idle tenant populations at 100/500/
+    // 1000, served twice — idle-aware fast path vs. the reference full
+    // walk (`set_idle_fast_path(false)`).  The ratio is the number the
+    // tentpole claims: per-tick monitor cost proportional to activity,
+    // not tenancy, at bitwise-identical results (pinned by the forall
+    // property in `coordinator/server.rs`).
+    println!("\n== long-tail closed loop (fast path vs reference walk) ==");
+    for &tenants in &[100usize, 500, 1000] {
+        let specs: Vec<igniter::provisioner::WorkloadSpec> = (0..tenants)
+            .map(|i| {
+                let model = igniter::gpu::ALL_MODELS[i % igniter::gpu::ALL_MODELS.len()];
+                let (slo_lo, slo_hi, _rate_lo, rate_hi) = igniter::workload::envelope(model);
+                // one heavy hitter per ten tenants; the rest near-idle
+                let rate = if i % 10 == 0 { (rate_hi * 0.5).max(1.0) } else { 0.5 };
+                igniter::provisioner::WorkloadSpec::new(i, model, 0.5 * (slo_lo + slo_hi), rate)
+            })
+            .collect();
+        let lt_plan = provisioner::provision(&sys, &specs);
+        let lt_epochs = 4;
+        let lt_epoch_ms = 1_500.0;
+        let lt_trace = RateTrace::generate(
+            TraceKind::Diurnal {
+                period_epochs: lt_epochs,
+                floor: 0.35,
+            },
+            lt_epochs,
+            specs.len(),
+            42,
+        );
+        let mut run = |fast: bool, label: &str| {
+            bench_once(label, || {
+                let mut sim = ClusterSim::new(
+                    kind,
+                    &lt_plan,
+                    &specs,
+                    Policy::Static,
+                    ArrivalKind::Poisson,
+                    42,
+                    &[],
+                );
+                sim.set_idle_fast_path(fast);
+                sim.set_serving_policy(Box::new(Reprovisioner::new(
+                    sys.clone(),
+                    specs.clone(),
+                    lt_plan.clone(),
+                )));
+                sim.set_rate_trace(&lt_trace, lt_epoch_ms);
+                sim.set_horizon(lt_epochs as f64 * lt_epoch_ms, 500.0);
+                sim.run().iter().map(|s| s.served).sum::<u64>()
+            })
+        };
+        let (served_fast, ns_fast) = run(true, &format!("longtail {tenants} tenants, fast path"));
+        let (served_ref, ns_ref) = run(false, &format!("longtail {tenants} tenants, full walk"));
+        assert_eq!(served_fast, served_ref, "fast path changed serving");
+        println!(
+            "  -> {tenants} tenants: sim_throughput_rps {:.0} fast / {:.0} walk ({:.1}x)",
+            served_fast as f64 / (ns_fast / 1e9),
+            served_ref as f64 / (ns_ref / 1e9),
+            ns_ref / ns_fast
+        );
+    }
 }

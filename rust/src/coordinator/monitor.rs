@@ -148,6 +148,7 @@ impl ShadowFailover {
         // shadow takes over under the same tag with the grown partition
         ctx.devices[gpu].launch_unchecked(tag, reps.spec[p].model, new_r, reps.batch[p]);
         reps.resources[p] = new_r;
+        reps.resources_dirty.push(p);
         reps.shadow_active[p] = true;
         reps.switches[p] += 1;
         // restart the latency records: the new process starts clean, so
@@ -216,10 +217,12 @@ impl ServingPolicy for GsliceTuner {
                 // interference-unaware: force the grow regardless of room
                 ctx.devices[gpu].force_resources(tag, r);
                 ctx.replicas.resources[p] = r;
+                ctx.replicas.resources_dirty.push(p);
             } else if avg < half * (1.0 - crate::provisioner::gslice::TUNING_THRESHOLD) {
                 let r = (ctx.replicas.resources[p] - step).max(ctx.devices[gpu].spec.r_unit);
                 ctx.devices[gpu].force_resources(tag, r);
                 ctx.replicas.resources[p] = r;
+                ctx.replicas.resources_dirty.push(p);
             }
         }
     }
@@ -292,6 +295,26 @@ pub struct Reprovisioner {
     /// Devices whose death has already been failed over (the sim keeps a
     /// dead device in `ctx.devices` forever; react exactly once).
     dead_seen: Vec<bool>,
+    /// Memoized `capacity_rps` results (workload -> Some(result)).
+    /// `predict` is a pure function of the planner's plan and model, so
+    /// the cache is flushed whenever either can change (every respec /
+    /// rebalance / fail_device; every tick when calibrating, since the
+    /// model itself then moves) plus a periodic full-recompute backstop —
+    /// pure memoization, bitwise inert, and the reason a quiet workload's
+    /// step-2 pass is O(1) instead of a `predict_full` per tick.
+    cap_cache: Vec<Option<Option<f64>>>,
+    /// Monitor ticks seen (drives the periodic cache-flush backstop).
+    ticks: u64,
+    /// Append-only workload -> replica-ids index (ascending; `ReplicaSet`
+    /// never removes entries, so it only ever extends).  Replaces the
+    /// per-workload full-set scans in `observed_exec_ms` — same members,
+    /// same order, O(group) instead of O(replicas) per workload.
+    members_of: Vec<Vec<usize>>,
+    /// Replicas already absorbed into `members_of`.
+    members_seen: usize,
+    /// Scratch: per-workload migration-in-flight flags, rebuilt in one
+    /// O(replicas) pass per tick instead of one scan per workload.
+    in_flight_scratch: Vec<bool>,
     /// Resilience switches granted to every workload (see `Resilience`;
     /// `OFF` keeps fault-free serving bit-identical).
     resilience: Resilience,
@@ -325,6 +348,11 @@ impl Reprovisioner {
             plan_scratch,
             plan_wall_ms: 0.0,
             dead_seen: Vec::new(),
+            cap_cache: vec![None; n],
+            ticks: 0,
+            members_of: vec![Vec::new(); n],
+            members_seen: 0,
+            in_flight_scratch: Vec::new(),
             resilience: Resilience::OFF,
             safety: DEFAULT_SAFETY,
             // three monitor ticks: short enough to track a steep diurnal
@@ -381,11 +409,39 @@ impl Reprovisioner {
         self.estimators[workload].rate_rps()
     }
 
-    /// Predicted capacity (req/s) of a workload's current allocation.
-    fn capacity_rps(&self, workload: usize) -> Option<f64> {
+    /// Predicted capacity (req/s) of a workload's current allocation,
+    /// memoized against the plan/model state (see `cap_cache`).
+    fn capacity_rps(&mut self, workload: usize) -> Option<f64> {
+        if let Some(cached) = self.cap_cache[workload] {
+            return cached;
+        }
         let id = self.live_ids[workload];
-        let (_, thpt) = self.planner.predict(id)?;
-        Some(thpt * self.planner.plan().replica_count(id).max(1) as f64)
+        let val = self
+            .planner
+            .predict(id)
+            .map(|(_, thpt)| thpt * self.planner.plan().replica_count(id).max(1) as f64);
+        self.cap_cache[workload] = Some(val);
+        val
+    }
+
+    /// Drop every memoized capacity: the plan or the model is about to
+    /// change (or just did), so cached predictions are no longer provably
+    /// equal to fresh ones.
+    fn flush_capacity_cache(&mut self) {
+        self.cap_cache.fill(None);
+    }
+
+    /// Extend the append-only workload->members index over freshly
+    /// launched replicas (`ReplicaSet` only ever appends).
+    fn refresh_member_index(&mut self, reps: &ReplicaSet) {
+        while self.members_seen < reps.len() {
+            let p = self.members_seen;
+            let w = reps.workload[p];
+            if w < self.members_of.len() {
+                self.members_of[w].push(p);
+            }
+            self.members_seen += 1;
+        }
     }
 
     fn migration_in_flight(ctx: &PolicyCtx, workload: Option<usize>) -> bool {
@@ -399,15 +455,25 @@ impl Reprovisioner {
     /// Recent observed execution latency of workload `w` (ms): mean over
     /// its Active replicas' exec windows (dispatch -> completion + load,
     /// queueing excluded — directly comparable to predicted t_inf).
-    fn observed_exec_ms(ctx: &PolicyCtx, w: usize, now: f64) -> Option<f64> {
+    /// Iterates only `w`'s members (same set, same ascending order as the
+    /// full-set scan it replaced) and proves empty windows in O(1) via
+    /// the newest-sample epoch, so a quiet workload costs O(members).
+    fn observed_exec_ms(&self, ctx: &PolicyCtx, w: usize, now: f64) -> Option<f64> {
         let reps = &*ctx.replicas;
+        let since = now - EXEC_OBS_SPAN_MS;
         let mut sum = 0.0;
         let mut n = 0u32;
-        for p in 0..reps.len() {
-            if reps.workload[p] != w || reps.phase[p] != ReplicaPhase::Active {
+        for &p in &self.members_of[w] {
+            if p >= reps.len() {
+                break; // index ran ahead of a test-harness replica set
+            }
+            if reps.phase[p] != ReplicaPhase::Active {
                 continue;
             }
-            if let Some(m) = reps.exec_window[p].mean_since(now - EXEC_OBS_SPAN_MS, 1) {
+            if reps.exec_window[p].latest_t() < since {
+                continue; // O(1): the since-filtered view is empty
+            }
+            if let Some(m) = reps.exec_window[p].mean_since(since, 1) {
                 sum += m;
                 n += 1;
             }
@@ -427,6 +493,7 @@ impl Reprovisioner {
         let t0 = std::time::Instant::now();
         let res = self.planner.respec(self.live_ids[w], target);
         self.plan_wall_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.flush_capacity_cache();
         self.last_migration_ms[w] = now;
         let Ok((new_id, _)) = res else {
             return Vec::new();
@@ -463,6 +530,7 @@ impl Reprovisioner {
             let t0 = std::time::Instant::now();
             let victims = self.planner.fail_device(g);
             self.plan_wall_ms += t0.elapsed().as_secs_f64() * 1e3;
+            self.flush_capacity_cache();
             for id in victims {
                 if let Some(w) = self.live_ids.iter().position(|&v| v == id) {
                     deltas.extend(self.respec_workload(now, w));
@@ -509,6 +577,9 @@ impl Reprovisioner {
                 }
                 continue;
             }
+            if ctx.replicas.exec_window[p].latest_t() < now - EXEC_OBS_SPAN_MS {
+                continue; // O(1) proof the window scan below would find nothing
+            }
             let Some(obs) = ctx.replicas.exec_window[p].mean_since(now - EXEC_OBS_SPAN_MS, 2)
             else {
                 continue;
@@ -536,6 +607,17 @@ impl ServingPolicy for Reprovisioner {
     }
 
     fn reprovision(&mut self, now: f64, ctx: &mut PolicyCtx) -> Vec<PlanDelta> {
+        // Extend the append-only member index over replicas launched since
+        // the last tick, and refresh the capacity memo: under calibration
+        // the model absorbs observations every tick (predictions move), and
+        // a periodic unconditional flush backstops any mutation path the
+        // explicit flush sites might miss.
+        self.refresh_member_index(ctx.replicas);
+        self.ticks = self.ticks.wrapping_add(1);
+        if self.calibrate || self.ticks % 16 == 0 {
+            self.flush_capacity_cache();
+        }
+
         // 0'. fault lane first: unplanned failover for freshly dead
         //     devices (always on — an outage is not drift and skips the
         //     cooldown), then breaker maintenance when granted.  Both are
@@ -559,7 +641,7 @@ impl ServingPolicy for Reprovisioner {
         predicted_violation.clear();
         predicted_violation.resize(self.estimators.len(), false);
         for w in 0..self.estimators.len() {
-            let observed = Self::observed_exec_ms(ctx, w, now);
+            let observed = self.observed_exec_ms(ctx, w, now);
             if observed.is_none() && !self.calibrate {
                 continue; // nothing to record, no trigger to arm
             }
@@ -611,6 +693,26 @@ impl ServingPolicy for Reprovisioner {
         }
         let mut deltas = fault_deltas;
 
+        // One O(replicas) pass computes every workload's in-flight flag —
+        // the exact predicate `migration_in_flight` evaluates, hoisted out
+        // of the per-workload loop below (which paid O(W x R) per tick).
+        let mut in_flight = std::mem::take(&mut self.in_flight_scratch);
+        in_flight.clear();
+        in_flight.resize(self.estimators.len(), false);
+        let mut any_in_flight = false;
+        {
+            let reps = &*ctx.replicas;
+            for p in 0..reps.len() {
+                if matches!(reps.phase[p], ReplicaPhase::Warming | ReplicaPhase::Draining) {
+                    any_in_flight = true;
+                    let w = reps.workload[p];
+                    if w < in_flight.len() {
+                        in_flight[w] = true;
+                    }
+                }
+            }
+        }
+
         // 2. drift / headroom triggers, one workload at a time
         for w in 0..self.estimators.len() {
             let observed = self.estimators[w].rate_rps();
@@ -627,7 +729,7 @@ impl ServingPolicy for Reprovisioner {
             if now - self.last_migration_ms[w] < self.min_gap_ms {
                 continue;
             }
-            if Self::migration_in_flight(ctx, Some(w)) {
+            if in_flight[w] {
                 continue; // one migration per workload at a time
             }
             let drift = self.estimators[w].sustained_drift();
@@ -669,6 +771,7 @@ impl ServingPolicy for Reprovisioner {
                 let t0 = std::time::Instant::now();
                 let res = self.planner.respec(self.live_ids[w], target);
                 self.plan_wall_ms += t0.elapsed().as_secs_f64() * 1e3;
+                self.flush_capacity_cache();
                 if let Ok((new_id, _)) = res {
                     adopted = Some((new_id, target));
                     break;
@@ -699,13 +802,14 @@ impl ServingPolicy for Reprovisioner {
         if self.rebalance_period_ms > 0.0
             && now - self.last_rebalance_ms >= self.rebalance_period_ms
             && deltas.is_empty()
-            && !Self::migration_in_flight(ctx, None)
+            && !any_in_flight
         {
             self.last_rebalance_ms = now;
             self.plan_scratch.copy_from(self.planner.plan());
             let t0 = std::time::Instant::now();
             let rebalanced = self.planner.rebalance();
             self.plan_wall_ms += t0.elapsed().as_secs_f64() * 1e3;
+            self.flush_capacity_cache();
             if rebalanced.is_some() {
                 let moved = diff_plans(
                     &self.plan_scratch,
@@ -724,8 +828,9 @@ impl ServingPolicy for Reprovisioner {
                 deltas.extend(moved);
             }
         }
-        // park the violation flags for next tick's reuse
+        // park the scratch buffers for next tick's reuse
         self.violation_scratch = predicted_violation;
+        self.in_flight_scratch = in_flight;
         deltas
     }
 

@@ -99,6 +99,13 @@ pub struct ReplicaSet {
     /// the sim force-retires it and re-queues its requests on the next
     /// breaker-enforcement pass.
     pub condemned: Vec<bool>,
+    /// Set-level change log (NOT per-replica): replica ids whose
+    /// `resources`/`batch` a policy wrote directly through `PolicyCtx`
+    /// (shadow activation, GSLICE tuning) instead of via a plan-delta.
+    /// The serving loop drains it after every policy hook and refreshes
+    /// the affected groups' cached aggregates, keeping the idle-monitor
+    /// fast path bitwise-identical to the full member walk.
+    pub resources_dirty: Vec<usize>,
 }
 
 impl ReplicaSet {

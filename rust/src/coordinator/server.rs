@@ -156,6 +156,21 @@ struct WorkloadGroup {
     timeline: Vec<TimelinePoint>,
     served_since_sample: u64,
     last_sample_ms: f64,
+    /// Activity epoch: completion time of the newest *recorded* latency
+    /// sample pushed into any member's sliding window (`-inf` before the
+    /// first).  Monotone by event order.  Together with
+    /// `served_since_sample == 0` it proves the monitor's 1 s lookback
+    /// would pool zero samples, admitting the O(1) idle fast path in
+    /// `sample_timeline` (see DESIGN.md "Idle-aware monitor").
+    last_window_push_ms: f64,
+    /// Cached non-`Retired` member aggregates — the `resources` sum and
+    /// `batch` max the full timeline walk would compute.  Refreshed by
+    /// `refresh_group_aggregates` at every phase/partition mutation
+    /// (launch, resize, retire, switch-over, device death, policy-side
+    /// writes via `ReplicaSet::resources_dirty`), so quiet ticks read
+    /// them in O(1) bitwise-identically to the re-summed walk.
+    agg_resources: f64,
+    agg_batch: u32,
 }
 
 /// Timeline samples for Figs. 15-17, aggregated over the replica group.
@@ -259,6 +274,17 @@ pub struct ClusterSim {
     /// pooled latency scratch reused by `sample_timeline` (one buffer for
     /// the whole sim instead of one allocation per group per tick)
     lat_scratch: Vec<f64>,
+    /// Idle-group monitor fast path (on by default): quiet groups take an
+    /// O(1) timeline sample instead of the full member walk.  The off
+    /// position runs the reference walk every tick — provably bitwise
+    /// identical; the switch exists so the property tests and the
+    /// long-tail bench can compare the two on the same build.
+    idle_fast_path: bool,
+    /// `false` when no breaker/hang/loss state can ever arise this run
+    /// (every group's `Resilience` is off and the fault plan is empty):
+    /// `enforce_breakers` then returns in O(1) instead of scanning every
+    /// replica's flags each tick.  Computed once in `run`.
+    breakers_armed: bool,
 }
 
 impl ClusterSim {
@@ -319,6 +345,9 @@ impl ClusterSim {
                 timeline: Vec::new(),
                 served_since_sample: 0,
                 last_sample_ms: 0.0,
+                last_window_push_ms: f64::NEG_INFINITY,
+                agg_resources: 0.0,
+                agg_batch: 0,
             });
         }
         let group_sizes: Vec<usize> = groups.iter().map(|g| g.members.len()).collect();
@@ -329,7 +358,7 @@ impl ClusterSim {
             }
         }
         let num_devices = devices.len();
-        ClusterSim {
+        let mut sim = ClusterSim {
             kind,
             seed,
             arrival_kind: arrival,
@@ -352,7 +381,13 @@ impl ClusterSim {
             faults_injected: 0,
             recovery_ms: Vec::new(),
             lat_scratch: Vec::new(),
+            idle_fast_path: true,
+            breakers_armed: true,
+        };
+        for g in 0..sim.groups.len() {
+            sim.refresh_group_aggregates(g);
         }
+        sim
     }
 
     pub fn set_horizon(&mut self, horizon_ms: f64, warmup_ms: f64) {
@@ -424,6 +459,45 @@ impl ClusterSim {
     /// Injected faults that landed on a live target.
     pub fn faults_injected(&self) -> u64 {
         self.faults_injected
+    }
+
+    /// Toggle the idle-group monitor fast path (default on).  `false`
+    /// runs the reference full-walk `sample_timeline` every tick; both
+    /// positions produce bitwise-identical runs — the switch exists so
+    /// tests and benches can prove exactly that.
+    pub fn set_idle_fast_path(&mut self, on: bool) {
+        self.idle_fast_path = on;
+    }
+
+    /// Recompute group `g`'s cached non-`Retired` aggregates with the
+    /// exact walk `sample_timeline`'s reference path performs (same
+    /// member order, same accumulation expressions), so the cached values
+    /// are bitwise what the walk would re-derive.  Called at every
+    /// mutation of a member's phase, resources, or batch; mutations are
+    /// rare (plan deltas, retirements, faults), so quiet monitor ticks
+    /// never pay this.
+    fn refresh_group_aggregates(&mut self, g: usize) {
+        let mut resources = 0.0;
+        let mut batch = 0u32;
+        for &p in &self.groups[g].members {
+            if self.replicas.phase[p] != ReplicaPhase::Retired {
+                resources += self.replicas.resources[p];
+                batch = batch.max(self.replicas.batch[p]);
+            }
+        }
+        let grp = &mut self.groups[g];
+        grp.agg_resources = resources;
+        grp.agg_batch = batch;
+    }
+
+    /// Absorb policy-side direct writes to `replicas.resources` (shadow
+    /// activation, GSLICE tuning): drain the change log and refresh the
+    /// touched groups' aggregates.  Runs after every policy hook.
+    fn drain_resources_dirty(&mut self) {
+        while let Some(p) = self.replicas.resources_dirty.pop() {
+            let g = self.group_of[p];
+            self.refresh_group_aggregates(g);
+        }
     }
 
     /// Recovery-time samples (ms): device-death instant to the first
@@ -526,6 +600,8 @@ impl ClusterSim {
         self.devices[gpu].kill(tag);
         self.replicas.phase[p] = ReplicaPhase::Retired;
         self.replicas.resources[p] = 0.0;
+        let g = self.group_of[p];
+        self.refresh_group_aggregates(g);
     }
 
     /// Recompute group `g`'s routable set: `Active` members whose breaker
@@ -616,6 +692,7 @@ impl ClusterSim {
         self.replicas.lost[p] = true;
         self.replicas.busy[p] = true; // keep the batcher off the corpse
         let g = self.group_of[p];
+        self.refresh_group_aggregates(g);
         self.rebuild_routable(g);
         self.requeue_orphans(p, g);
         self.refresh_degraded(g);
@@ -671,6 +748,7 @@ impl ClusterSim {
         }
         for &g in &hit {
             self.groups[g].fault_at = Some(now);
+            self.refresh_group_aggregates(g);
             self.rebuild_routable(g);
         }
         // re-home orphans only after every loss on the device is marked,
@@ -737,6 +815,20 @@ impl ClusterSim {
     /// flag are rebuilt against the current breaker state.  Early-outs to
     /// a flag scan when no fault state exists anywhere.
     fn enforce_breakers(&mut self, now: f64) {
+        if !self.breakers_armed {
+            // with every group's resilience off and no fault plan,
+            // nothing can ever set these flags (they are only written by
+            // breaker-granted policies and injected faults) — skip even
+            // the O(replicas) flag scan.  Debug builds verify the claim.
+            debug_assert!(
+                !(0..self.replicas.len()).any(|p| {
+                    let r = &self.replicas;
+                    r.condemned[p] || r.breaker_open[p] || r.hung[p] || r.lost[p]
+                }),
+                "fault state arose with breakers unarmed"
+            );
+            return;
+        }
         let reps = &self.replicas;
         let any = (0..reps.len())
             .any(|p| reps.condemned[p] || reps.breaker_open[p] || reps.hung[p] || reps.lost[p]);
@@ -831,6 +923,8 @@ impl ClusterSim {
                     let tag = self.replicas.tag[p];
                     self.devices[gpu].force_resources(tag, resources);
                     self.replicas.resources[p] = resources;
+                    let g = self.group_of[p];
+                    self.refresh_group_aggregates(g);
                 }
             }
             PlanDelta::Migrate(m) => {
@@ -880,6 +974,7 @@ impl ClusterSim {
                 }
                 self.migrations += 1;
                 self.groups[g].fresh_batches.push_back(fresh);
+                self.refresh_group_aggregates(g);
                 self.events
                     .schedule_in(MIGRATION_WARMUP_MS, Event::SwitchOver { g });
             }
@@ -895,6 +990,38 @@ impl ClusterSim {
         let mut lat = std::mem::take(&mut self.lat_scratch);
         for g in 0..self.groups.len() {
             let since = now - 1_000.0;
+            // Idle fast path: `served_since_sample == 0` rules out any
+            // completion since the last tick, and the activity epoch
+            // proves every *recorded* window push predates the lookback
+            // (`values_since_into` keeps `t >= since`, so a strictly
+            // older newest-push means the pooled walk returns nothing).
+            // The emitted point uses the same expressions as the walk
+            // below over an empty pool — NaN p99 (below MIN_P99_SAMPLES),
+            // `mean(&[])`, exactly-zero rps — and the cached aggregates,
+            // which `refresh_group_aggregates` keeps bitwise equal to
+            // the re-summed member walk.  A conservatively-new epoch only
+            // forces an unnecessary full walk, never a wrong skip.
+            if self.idle_fast_path {
+                let grp = &mut self.groups[g];
+                if grp.served_since_sample == 0 && grp.last_window_push_ms < since {
+                    lat.clear();
+                    let p99 = f64::NAN;
+                    let mean_ms = mean(&lat);
+                    let dt = (now - grp.last_sample_ms).max(1e-9);
+                    let rps = grp.served_since_sample as f64 / dt * 1000.0;
+                    grp.timeline.push(TimelinePoint {
+                        t_ms: now,
+                        p99_ms: p99,
+                        mean_ms,
+                        rps,
+                        resources: grp.agg_resources,
+                        batch: grp.agg_batch,
+                    });
+                    grp.served_since_sample = 0;
+                    grp.last_sample_ms = now;
+                    continue;
+                }
+            }
             lat.clear();
             let mut resources = 0.0;
             let mut batch = 0u32;
@@ -950,6 +1077,12 @@ impl ClusterSim {
             let w = self.groups[g].spec.id;
             self.groups[g].resilience = self.policy.resilience(w);
         }
+        // O(1) breaker-maintenance guard: resilience grants are cached
+        // once per run (just above) and the fault plan is fixed, so a
+        // run with everything off provably never raises fault state —
+        // `enforce_breakers` then skips even its per-replica flag scan.
+        self.breakers_armed = !self.fault_plan.is_empty()
+            || self.groups.iter().any(|g| g.resilience != Resilience::OFF);
 
         while let Some(t) = self.events.peek_time() {
             if t > self.horizon_ms {
@@ -1022,6 +1155,11 @@ impl ClusterSim {
                     reps.busy[p] = false;
                     let g = self.group_of[p];
                     self.groups[g].served_since_sample += n as u64;
+                    if record {
+                        // activity epoch: this batch pushed recorded
+                        // latency samples at `now`
+                        self.groups[g].last_window_push_ms = now;
+                    }
                     // recovery clock: the first batch served by a replica
                     // launched after the group's fault closes the sample
                     if let Some(t0) = self.groups[g].fault_at {
@@ -1051,6 +1189,9 @@ impl ClusterSim {
                         self.policy.on_monitor(now, &mut ctx);
                         self.policy.reprovision(now, &mut ctx)
                     };
+                    // absorb any direct resource writes the hooks made
+                    // (shadow activation) into the group aggregates
+                    self.drain_resources_dirty();
                     // realize any breaker verdicts the policy just made
                     // (condemnations retire + re-home before the deltas
                     // launch replacements)
@@ -1066,6 +1207,7 @@ impl ClusterSim {
                         replicas: &mut self.replicas,
                     };
                     self.policy.on_tune(now, &mut ctx);
+                    self.drain_resources_dirty();
                     if let Some(period) = self.policy.tune_period_ms() {
                         self.events.schedule_in(period, Event::Tune);
                     }
@@ -1102,6 +1244,12 @@ impl ClusterSim {
                         self.replicas.busy[p] = false;
                     }
                     // rebuild the routing cache for the new Active set
+                    // (the aggregate refresh is belt-and-braces: phase
+                    // flips among non-Retired members leave the cached
+                    // sum/max unchanged, and any retire() above already
+                    // refreshed — but switch-overs are rare and the
+                    // refresh is bitwise a no-op when nothing changed)
+                    self.refresh_group_aggregates(g);
                     self.rebuild_routable(g);
                     for p in fresh {
                         self.try_dispatch(p);
@@ -1371,6 +1519,129 @@ mod tests {
         };
         assert_eq!(run(3), run(3));
         assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn idle_skip_point_equals_the_computed_one_at_the_boundary() {
+        // A group whose only recorded sample has aged out of the 1 s
+        // lookback is skip-admissible; the emitted O(1) point must be
+        // bit-identical to the full walk's at the same instant.
+        let (mut sim, _) = one_workload_sim(0.5, 4);
+        sim.replicas.window[0].push(300.0, 12.0);
+        sim.groups[0].last_window_push_ms = 300.0;
+        sim.groups[0].served_since_sample = 0;
+        // advance the clock to 1 500 ms: the sample is 1 200 ms old
+        sim.events.schedule_at(1_500.0, Event::Monitor);
+        let _ = sim.events.pop();
+        sim.sample_timeline();
+        let fast = *sim.groups[0].timeline.last().unwrap();
+        // recompute with the walk at the identical instant
+        sim.groups[0].timeline.clear();
+        sim.groups[0].last_sample_ms = 0.0;
+        sim.set_idle_fast_path(false);
+        sim.sample_timeline();
+        let slow = *sim.groups[0].timeline.last().unwrap();
+        let bits = |p: &TimelinePoint| {
+            (
+                p.t_ms.to_bits(),
+                p.p99_ms.to_bits(),
+                p.mean_ms.to_bits(),
+                p.rps.to_bits(),
+                p.resources.to_bits(),
+                p.batch,
+            )
+        };
+        assert_eq!(bits(&fast), bits(&slow), "fast {fast:?} != slow {slow:?}");
+        assert!(fast.p99_ms.is_nan() && fast.rps == 0.0);
+        assert_eq!(fast.resources, 0.5);
+        assert_eq!(fast.batch, 4);
+        // ...and a sample still inside the lookback denies the skip: the
+        // walk pools it (mean = the sample), proving the predicate sits
+        // exactly at the window edge rather than merely near it
+        let (mut live, _) = one_workload_sim(0.5, 4);
+        live.replicas.window[0].push(800.0, 12.0);
+        live.groups[0].last_window_push_ms = 800.0;
+        live.events.schedule_at(1_500.0, Event::Monitor);
+        let _ = live.events.pop();
+        live.sample_timeline();
+        let point = *live.groups[0].timeline.last().unwrap();
+        assert_eq!(point.mean_ms, 12.0, "in-window sample was skipped: {point:?}");
+    }
+
+    #[test]
+    fn property_idle_fast_path_is_bitwise_identical_to_the_full_walk() {
+        // Long-tail-shaped mixes (one heavy hitter, eleven near-idle
+        // tenants): for random seeds and tail rates, serving with the
+        // idle fast path must be bit-for-bit the full-walk run —
+        // timelines, latency stats, and final partitions all compared
+        // through `to_bits` (NaN p99 points included).
+        let s = sys();
+        crate::util::quick::forall(
+            77,
+            3,
+            |r| (r.next_u64(), r.range_f64(0.1, 2.0)),
+            |&(seed, tail)| {
+                let tail = tail.clamp(0.1, 2.0);
+                let mut specs = app_workloads();
+                for w in specs.iter_mut().skip(1) {
+                    w.rate_rps = tail;
+                }
+                let plan = provisioner::provision(&s, &specs);
+                let run = |fast: bool| {
+                    let mut sim = ClusterSim::new(
+                        GpuKind::V100,
+                        &plan,
+                        &specs,
+                        Policy::IgniterShadow,
+                        ArrivalKind::Poisson,
+                        seed,
+                        &[],
+                    );
+                    sim.set_idle_fast_path(fast);
+                    sim.set_horizon(4_000.0, 500.0);
+                    let stats = sim.run();
+                    stats
+                        .iter()
+                        .map(|st| {
+                            (
+                                st.served,
+                                st.arrivals,
+                                st.p99_ms.to_bits(),
+                                st.mean_ms.to_bits(),
+                                st.final_resources.to_bits(),
+                                st.final_batch,
+                                st.timeline
+                                    .iter()
+                                    .map(|t| {
+                                        (
+                                            t.t_ms.to_bits(),
+                                            t.p99_ms.to_bits(),
+                                            t.mean_ms.to_bits(),
+                                            t.rps.to_bits(),
+                                            t.resources.to_bits(),
+                                            t.batch,
+                                        )
+                                    })
+                                    .collect::<Vec<_>>(),
+                            )
+                        })
+                        .collect::<Vec<_>>()
+                };
+                let fast = run(true);
+                if fast != run(false) {
+                    return Err(format!("fast path diverged (seed {seed}, tail {tail})"));
+                }
+                // the tail must actually go quiet — otherwise the
+                // property never exercised the skip
+                let quiet = fast[1..].iter().any(|(_, _, _, _, _, _, tl)| {
+                    tl.iter().any(|&(_, _, _, rps, _, _)| rps == 0.0_f64.to_bits())
+                });
+                if !quiet {
+                    return Err(format!("no quiet tick at tail rate {tail}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -36,6 +36,7 @@ fn main() {
         "full",
         "calibrate",
         "mismatch",
+        "longtail",
     ]);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
@@ -135,8 +136,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20             [--faults [deaths=N,stragglers=N,hangs=N,factor=F,span_ms=S]]\n\
                  \x20 sweep       [--scenarios N] [--seeds K] [--parallel M] [--master-seed S]\n\
                  \x20             [--out BENCH_sweep.json] [--full] [--mismatch] [--calibrate] [--faults [spec]]\n\
-                 \x20             [--fleet mig] — fleet-scale scenario sweep (mismatch = model-error lane,\n\
-                 \x20             faults = chaos lane, fleet mig = A100/H100 discrete-slice lane)\n\
+                 \x20             [--fleet mig] [--longtail] — fleet-scale scenario sweep (mismatch = model-error\n\
+                 \x20             lane, faults = chaos lane, fleet mig = A100/H100 discrete-slice lane,\n\
+                 \x20             longtail = 200-1000 mostly-idle tenants)\n\
                  \x20 deploy      [--strategy ...] [--script] — emit the launcher manifest\n\
                  \x20 verify\n\
                  \x20 experiment  [fig3..fig21|table1|overhead|all]"
@@ -400,7 +402,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// non-wall sections are bit-identical for any `--parallel` width.
 fn cmd_sweep(args: &Args) -> Result<()> {
     use igniter::sweep::{run_sweep, Fleet, ScenarioSpace, SweepConfig};
-    let mut space = if args.flag("full") {
+    let mut space = if args.flag("longtail") {
+        // --longtail: the long-tail lane — 200-1000-tenant mixes, ~90%
+        // near-idle, bursty traces; the regime the idle-aware monitor
+        // fast path is gated on.  Takes precedence over --full (both set
+        // a workload-count band).
+        ScenarioSpace::longtail()
+    } else if args.flag("full") {
         ScenarioSpace::full()
     } else {
         ScenarioSpace::quick()
@@ -444,7 +452,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             "fleet-scale sweep: {} scenarios x {} seeds ({} mode, parallel {})",
             cfg.scenarios,
             cfg.seeds,
-            if args.flag("full") { "full" } else { "quick" },
+            if args.flag("longtail") {
+                "longtail"
+            } else if args.flag("full") {
+                "full"
+            } else {
+                "quick"
+            },
             cfg.parallel
         ),
         &["metric", "value"],
@@ -489,6 +503,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         t.row(&[
             "packer vs FFD cost ratio".into(),
             f(agg.packer_vs_ffd_cost_ratio, 4),
+        ]);
+    }
+    if agg.longtail_tasks > 0 {
+        t.row(&["longtail tasks".into(), agg.longtail_tasks.to_string()]);
+        t.row(&[
+            "mean near-idle tenant fraction".into(),
+            format!("{:.1}%", agg.mean_near_idle_fraction * 100.0),
         ]);
     }
     t.row(&["wall (s)".into(), f(report.wall_s, 2)]);
@@ -549,6 +570,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .count();
     if packer_losses > 0 {
         bail!("MIG packer lost to FFD on {packer_losses} task(s) — portfolio fallback broken");
+    }
+    // Long-tail lane structural bar: the lane measures the mostly-idle
+    // regime — if the drawn mixes are not actually dominated by near-idle
+    // tenants, the headline throughput number is measuring something else.
+    if cfg.space.longtail && agg.feasible > 0 && agg.mean_near_idle_fraction < 0.75 {
+        bail!(
+            "longtail sweep near-idle fraction {:.2} < 0.75 — lane is not long-tailed",
+            agg.mean_near_idle_fraction
+        );
     }
     Ok(())
 }

@@ -67,6 +67,15 @@ pub struct Aggregate {
     /// packer-quality gate metric (<= 1.0 by construction: the packer
     /// adopts the FFD packing whenever FFD lands on fewer devices).
     pub packer_vs_ffd_cost_ratio: f64,
+    /// Long-tail lane: tasks that ran under the long-tail space (0
+    /// outside it — the key below is then omitted from the JSON so
+    /// non-longtail reports stay byte-identical to pre-longtail ones).
+    pub longtail_tasks: usize,
+    /// Mean over feasible long-tail tasks of each mix's near-idle tenant
+    /// fraction — the structural number the bench gate's active-fraction
+    /// bar checks (a lane whose "idle" tenants are not actually the
+    /// majority is not measuring the long-tail regime).
+    pub mean_near_idle_fraction: f64,
 }
 
 /// Mean of `f` over the tasks that actually recorded prediction-error
@@ -102,6 +111,7 @@ impl Aggregate {
         };
         let packed_total: f64 = mig.iter().map(|r| r.mig_cost_packed).sum();
         let ffd_total: f64 = mig.iter().map(|r| r.mig_cost_ffd).sum();
+        let lt: Vec<&&ScenarioResult> = feasible.iter().filter(|r| r.longtail).collect();
         Aggregate {
             tasks: results.len(),
             feasible: n,
@@ -132,6 +142,15 @@ impl Aggregate {
                 packed_total / ffd_total
             } else {
                 0.0
+            },
+            longtail_tasks: results.iter().filter(|r| r.longtail).count(),
+            mean_near_idle_fraction: if lt.is_empty() {
+                0.0
+            } else {
+                lt.iter()
+                    .map(|r| r.near_idle_workloads as f64 / r.workloads.max(1) as f64)
+                    .sum::<f64>()
+                    / lt.len() as f64
             },
         }
     }
@@ -170,6 +189,13 @@ impl Aggregate {
                 .set("mean_mig_cost_ffd", self.mean_mig_cost_ffd)
                 .set("mean_mig_cost_igniter", self.mean_mig_cost_igniter)
                 .set("packer_vs_ffd_cost_ratio", self.packer_vs_ffd_cost_ratio);
+        }
+        // long-tail keys only when the lane ran: non-longtail reports
+        // (and the committed fingerprint golden) stay byte-identical
+        if self.longtail_tasks > 0 {
+            j = j
+                .set("longtail_tasks", self.longtail_tasks)
+                .set("mean_near_idle_fraction", self.mean_near_idle_fraction);
         }
         j
     }
@@ -224,6 +250,13 @@ fn result_json(r: &ScenarioResult, with_wall: bool) -> Json {
             .set("mig_cost_ffd", r.mig_cost_ffd)
             .set("mig_cost_igniter", r.mig_cost_igniter);
     }
+    if r.longtail {
+        // long-tail keys only on long-tail tasks: other lanes serialize
+        // exactly as they did pre-longtail
+        j = j
+            .set("longtail", true)
+            .set("near_idle_workloads", r.near_idle_workloads);
+    }
     if with_wall {
         // `placements` is deterministic, but it is a work count feeding
         // `plan_throughput_pps`, not a scenario outcome — it stays in the
@@ -270,6 +303,11 @@ impl SweepReport {
         // treats a missing key as `false` so pre-MIG baselines shape-match
         if self.config.space.needs_mig() {
             j = j.set("mig", true);
+        }
+        // written only in the long-tail lane; the bench gate treats a
+        // missing key as `false` so older baselines still shape-match
+        if self.config.space.longtail {
+            j = j.set("longtail", true);
         }
         j
     }
@@ -374,6 +412,8 @@ mod tests {
             recovery_ms_p95: 0.0,
             gpu_seconds: 33.0,
             mismatch_pct: 0.0,
+            longtail: false,
+            near_idle_workloads: 0,
             pred_err_mean: 0.2,
             pred_err_p95: 0.5,
             pred_err_samples: 40,
@@ -551,6 +591,43 @@ mod tests {
         assert_eq!(agg.mig_tasks, 1);
         assert_eq!(agg.mean_mig_cost_packed, 4.1);
         assert_eq!(agg.packer_vs_ffd_cost_ratio, 0.5);
+    }
+
+    #[test]
+    fn longtail_keys_appear_only_when_the_lane_ran() {
+        // non-longtail: no long-tail keys anywhere (byte-compat with the
+        // pre-longtail report shape and the committed fingerprint golden)
+        let clean = SweepReport::new(config(), vec![result(0, 10.0, 1.0)], 1.0);
+        let text = clean.fingerprint();
+        for key in ["\"longtail\"", "near_idle", "longtail_tasks"] {
+            assert!(!text.contains(key), "plain report leaked {key}: {text}");
+        }
+        // long-tail lane: per-task + aggregate keys and the config marker
+        let mut lt = clean.clone();
+        lt.config.space = crate::sweep::ScenarioSpace::longtail();
+        lt.results[0].longtail = true;
+        lt.results[0].workloads = 400;
+        lt.results[0].near_idle_workloads = 360;
+        let parsed = Json::parse(&lt.fingerprint()).unwrap();
+        assert_eq!(parsed.path("config.longtail").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.path("scenarios.0.longtail").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            parsed.path("scenarios.0.near_idle_workloads").unwrap().as_usize(),
+            Some(360)
+        );
+        assert_eq!(parsed.path("aggregate.longtail_tasks").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            parsed.path("aggregate.mean_near_idle_fraction").unwrap().as_f64(),
+            Some(0.9)
+        );
+        // a mixed set averages the fraction over long-tail tasks only,
+        // and infeasible tasks do not dilute it
+        let mut infeasible = lt.results[0].clone();
+        infeasible.feasible = false;
+        infeasible.near_idle_workloads = 0;
+        let agg = Aggregate::of(&[result(0, 10.0, 1.0), lt.results[0].clone(), infeasible]);
+        assert_eq!(agg.longtail_tasks, 2);
+        assert!((agg.mean_near_idle_fraction - 0.9).abs() < 1e-12);
     }
 
     #[test]

@@ -17,6 +17,11 @@ use crate::util::rng::Rng;
 use crate::workload::envelope;
 use crate::workload::trace::TraceKind;
 
+/// Near-idle band of the long-tail lane (req/s, inclusive): tenants drawn
+/// inside it count as the tail in the report's structural metrics.
+pub const NEAR_IDLE_RPS_MIN: f64 = 0.1;
+pub const NEAR_IDLE_RPS_MAX: f64 = 2.0;
+
 /// Derive the independent deterministic RNG stream `(a, b)` under
 /// `master`: a fresh SplitMix64 root split twice, so distinct `(a, b)`
 /// pairs never share state and the result is order-independent.
@@ -120,6 +125,13 @@ pub struct ScenarioSpace {
     /// every non-chaos space — generates empty plans, which the serving
     /// loop treats as a bitwise no-op.
     pub faults: FaultSpace,
+    /// Long-tail lane: ~90% of each mix's tenants are drawn near-idle
+    /// (0.1-2 req/s, **unrounded** — integer rounding would zero them)
+    /// with the rest heavy hitters from the full rate envelope, and
+    /// traces are restricted to the bursty shapes (diurnal / spiky).
+    /// Every extra RNG draw is gated behind this flag, so non-longtail
+    /// spaces generate byte-identical scenarios.
+    pub longtail: bool,
 }
 
 impl ScenarioSpace {
@@ -135,6 +147,7 @@ impl ScenarioSpace {
             fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
             mismatch: false,
             faults: FaultSpace::OFF,
+            longtail: false,
         }
     }
 
@@ -150,6 +163,7 @@ impl ScenarioSpace {
             fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
             mismatch: false,
             faults: FaultSpace::OFF,
+            longtail: false,
         }
     }
 
@@ -180,6 +194,21 @@ impl ScenarioSpace {
     pub fn mig() -> ScenarioSpace {
         ScenarioSpace {
             fleets: vec![Fleet::MigA100, Fleet::MigH100],
+            ..ScenarioSpace::quick()
+        }
+    }
+
+    /// The long-tail lane (`igniter sweep --longtail`): the "millions of
+    /// users, most of them idle" regime — 200-1000-tenant mixes where
+    /// ~90% of tenants sit near-idle (0.1-2 req/s) under bursty
+    /// diurnal/spiky traces while a handful of heavy hitters carry the
+    /// load.  This is the shape the idle-aware monitor fast path exists
+    /// for: per-tick cost proportional to *activity*, not *tenancy*.
+    pub fn longtail() -> ScenarioSpace {
+        ScenarioSpace {
+            min_workloads: 200,
+            max_workloads: 1_000,
+            longtail: true,
             ..ScenarioSpace::quick()
         }
     }
@@ -224,19 +253,34 @@ impl Scenario {
             1 => SloTier::Nominal,
             _ => SloTier::Relaxed,
         };
-        let trace = match rng.below(3) {
-            0 => TraceKind::Diurnal {
-                period_epochs: space.epochs.max(1),
-                floor: rng.range_f64(0.25, 0.45),
-            },
-            1 => TraceKind::Spiky {
-                base: rng.range_f64(0.25, 0.5),
-                p: rng.range_f64(0.15, 0.35),
-            },
-            _ => TraceKind::Ramp {
-                from: rng.range_f64(0.2, 0.5),
-                to: rng.range_f64(0.8, 1.0),
-            },
+        let trace = if space.longtail {
+            // long-tail lane: bursty shapes only — a ramp never goes
+            // quiet, which defeats the regime the lane exists to probe
+            match rng.below(2) {
+                0 => TraceKind::Diurnal {
+                    period_epochs: space.epochs.max(1),
+                    floor: rng.range_f64(0.25, 0.45),
+                },
+                _ => TraceKind::Spiky {
+                    base: rng.range_f64(0.25, 0.5),
+                    p: rng.range_f64(0.15, 0.35),
+                },
+            }
+        } else {
+            match rng.below(3) {
+                0 => TraceKind::Diurnal {
+                    period_epochs: space.epochs.max(1),
+                    floor: rng.range_f64(0.25, 0.45),
+                },
+                1 => TraceKind::Spiky {
+                    base: rng.range_f64(0.25, 0.5),
+                    p: rng.range_f64(0.15, 0.35),
+                },
+                _ => TraceKind::Ramp {
+                    from: rng.range_f64(0.2, 0.5),
+                    to: rng.range_f64(0.8, 1.0),
+                },
+            }
         };
         let specs = (0..n)
             .map(|i| {
@@ -251,7 +295,18 @@ impl Scenario {
                     SloTier::Relaxed => (slo_lo + 0.65 * span, slo_hi),
                 };
                 let slo_ms = rng.range_f64(lo, hi);
-                let rate = rng.range_f64(rate_lo, rate_hi).round();
+                let rate = if space.longtail {
+                    // ~90% near-idle (unrounded — integer rounding would
+                    // zero the tail), ~10% heavy hitters from the full
+                    // envelope
+                    if rng.below(10) == 0 {
+                        rng.range_f64(rate_lo, rate_hi).round().max(1.0)
+                    } else {
+                        rng.range_f64(NEAR_IDLE_RPS_MIN, NEAR_IDLE_RPS_MAX)
+                    }
+                } else {
+                    rng.range_f64(rate_lo, rate_hi).round()
+                };
                 WorkloadSpec::new(i, model, slo_ms, rate)
             })
             .collect();
@@ -287,6 +342,16 @@ impl Scenario {
 
     pub fn horizon_ms(&self) -> f64 {
         self.epochs as f64 * self.epoch_ms
+    }
+
+    /// How many of this scenario's tenants sit in the near-idle band —
+    /// the long-tail lane's structural metric (reported per scenario and
+    /// checked by the bench gate's active-fraction bar).
+    pub fn near_idle_workloads(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|w| w.rate_rps <= NEAR_IDLE_RPS_MAX)
+            .count()
     }
 
     /// Worst-case believed-coefficient error of this scenario (0 when the
@@ -469,6 +534,55 @@ mod tests {
         assert_eq!(
             Scenario::generate(&space, 11, 3),
             Scenario::generate(&space, 11, 3)
+        );
+    }
+
+    #[test]
+    fn longtail_space_draws_a_near_idle_majority() {
+        let space = ScenarioSpace::longtail();
+        assert!(space.longtail && !ScenarioSpace::quick().longtail);
+        let scenarios: Vec<Scenario> =
+            (0..8).map(|id| Scenario::generate(&space, 7, id)).collect();
+        let (mut tail, mut total, mut heavy) = (0usize, 0usize, 0usize);
+        for s in &scenarios {
+            assert!(
+                (space.min_workloads..=space.max_workloads).contains(&s.specs.len()),
+                "scenario {}: {} tenants",
+                s.id,
+                s.specs.len()
+            );
+            // bursty shapes only — a ramp never goes quiet
+            assert!(
+                matches!(s.trace, TraceKind::Diurnal { .. } | TraceKind::Spiky { .. }),
+                "{:?}",
+                s.trace
+            );
+            for w in &s.specs {
+                if w.rate_rps <= NEAR_IDLE_RPS_MAX {
+                    tail += 1;
+                    assert!(w.rate_rps >= NEAR_IDLE_RPS_MIN, "{}", w.rate_rps);
+                } else {
+                    heavy += 1;
+                    assert_eq!(w.rate_rps, w.rate_rps.round(), "heavy rates stay integral");
+                }
+            }
+            total += s.specs.len();
+            assert_eq!(s.near_idle_workloads(), s.specs.iter()
+                .filter(|w| w.rate_rps <= NEAR_IDLE_RPS_MAX).count());
+        }
+        // ~90% of the population is the tail; heavy hitters exist
+        let frac = tail as f64 / total as f64;
+        assert!(frac > 0.80 && frac < 0.97, "near-idle fraction {frac}");
+        assert!(heavy > 0, "no heavy hitters drawn");
+        // the tail is genuinely fractional (rounding would have zeroed it)
+        assert!(scenarios.iter().any(|s| s
+            .specs
+            .iter()
+            .any(|w| w.rate_rps > 0.0 && w.rate_rps != w.rate_rps.round())));
+        // generation stays pure
+        assert_eq!(
+            Scenario::generate(&space, 7, 2),
+            Scenario::generate(&space, 7, 2)
         );
     }
 

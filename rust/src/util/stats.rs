@@ -192,6 +192,15 @@ impl SlidingWindow {
         }
     }
 
+    /// Timestamp of the newest retained sample, `-inf` when empty — an
+    /// O(1) emptiness proof for the `*_since` queries: `latest_t() <
+    /// since` holds iff the since-filtered view is empty (timestamps are
+    /// monotone, so the newest sample bounds them all).  The idle-aware
+    /// monitor gates its per-replica window walks on this.
+    pub fn latest_t(&self) -> f64 {
+        self.buf.back().map_or(f64::NEG_INFINITY, |&(t, _)| t)
+    }
+
     /// Number of samples recorded at `t >= since` (no allocation — the
     /// rate estimator counts arrivals in its window every monitor tick).
     pub fn count_since(&self, since: f64) -> usize {
@@ -366,6 +375,21 @@ mod tests {
         xs.iter().for_each(|&x| all.push(x));
         assert!((a.mean() - all.mean()).abs() < 1e-9);
         assert!((a.std() - all.std()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latest_t_tracks_the_newest_sample_and_survives_expiry() {
+        let mut w = SlidingWindow::new(100.0);
+        // empty window: NEG_INFINITY is strictly below any `since`, so
+        // the idle-skip `latest_t() < since` proof holds vacuously
+        assert_eq!(w.latest_t(), f64::NEG_INFINITY);
+        w.push(10.0, 1.0);
+        w.push(50.0, 2.0);
+        assert_eq!(w.latest_t(), 50.0);
+        // pushing past the span expires the old samples but the newest
+        // timestamp is by construction the back of the buffer
+        w.push(500.0, 3.0);
+        assert_eq!(w.latest_t(), 500.0);
     }
 
     #[test]

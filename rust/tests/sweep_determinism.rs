@@ -21,6 +21,7 @@ fn tiny_space() -> ScenarioSpace {
         fleets: vec![Fleet::V100Only, Fleet::T4Only, Fleet::Heterogeneous],
         mismatch: false,
         faults: igniter::sim::faults::FaultSpace::OFF,
+        longtail: false,
     }
 }
 
@@ -54,6 +55,17 @@ fn chaos_cfg(master_seed: u64, parallel: usize) -> SweepConfig {
 fn mig_cfg(master_seed: u64, parallel: usize) -> SweepConfig {
     let mut c = cfg(master_seed, parallel);
     c.space.fleets = vec![Fleet::MigA100, Fleet::MigH100];
+    c
+}
+
+/// The long-tail lane (`--longtail`) under the same determinism contract
+/// — scaled down from the real 200-1000-tenant band so the test stays
+/// fast while exercising every longtail-gated draw path.
+fn longtail_cfg(master_seed: u64, parallel: usize) -> SweepConfig {
+    let mut c = cfg(master_seed, parallel);
+    c.space.min_workloads = 20;
+    c.space.max_workloads = 40;
+    c.space.longtail = true;
     c
 }
 
@@ -175,6 +187,37 @@ fn mig_lane_is_deterministic_and_distinct() {
     // (pinned below in `quick_sweep_fingerprint_pinned_across_refactors`)
     // is the authoritative bit-identity check.
     assert!(!run_sweep(&cfg(7, 1)).fingerprint().contains("mig"));
+}
+
+#[test]
+fn longtail_lane_is_deterministic_and_distinct() {
+    // The long-tail lane rides the idle-aware monitor fast path for most
+    // of its tenants — the exact code whose bitwise identity the epochs
+    // argument guarantees.  Parallel must equal sequential, the lane must
+    // differ from the plain sweep, and the structural numbers must show a
+    // genuinely long-tailed population.
+    let seq = run_sweep(&longtail_cfg(7, 1));
+    let par = run_sweep(&longtail_cfg(7, 8));
+    assert_eq!(seq.fingerprint(), par.fingerprint(), "longtail lane diverged");
+    assert_ne!(
+        seq.fingerprint(),
+        run_sweep(&cfg(7, 1)).fingerprint(),
+        "longtail lane produced the plain sweep"
+    );
+    let agg = seq.aggregate();
+    assert!(agg.longtail_tasks > 0, "longtail lane ran no longtail task");
+    assert!(
+        agg.mean_near_idle_fraction > 0.5,
+        "near-idle fraction {} — lane is not long-tailed",
+        agg.mean_near_idle_fraction
+    );
+    for r in &seq.results {
+        assert_eq!(r.dropped, 0, "{r:?}");
+    }
+    // ...and the plain sweep never carries long-tail keys: its pinned
+    // fingerprint (quick_sweep_fingerprint_pinned_across_refactors) is
+    // the authoritative bit-identity check.
+    assert!(!run_sweep(&cfg(7, 1)).fingerprint().contains("longtail"));
 }
 
 #[test]

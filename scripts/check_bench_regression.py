@@ -69,6 +69,20 @@ the lane gates nothing.  Baselines blessed before the MIG lane existed
 shape-match non-MIG candidates via the ``mig: false`` default and skip
 the MIG metric gates with a printed notice.
 
+Long-tail-lane runs (``igniter sweep --longtail``; ``config.longtail:
+true`` in the report) have no extra ratio gates — their headline number
+is the generic ``wall.sim_throughput_rps`` (the idle-aware monitor fast
+path is exactly what a mostly-idle tenant population measures) — but
+they carry a structural bar: at least one long-tail task must have run,
+``aggregate.mean_near_idle_fraction`` must be present, and the mean
+near-idle tenant fraction must be at least 0.75 (a lane whose "idle"
+tenants are mostly active is not measuring the long-tail regime).
+Baselines blessed before the lane existed shape-match non-longtail
+candidates via the ``longtail: false`` default; a longtail candidate
+gated against a pre-longtail baseline fails the shape check and needs
+its own blessed ``BENCH_longtail.json`` baseline (``make
+bless-bench-longtail``).
+
 ``tol`` defaults to 0.20 (the 20% CI gate) and can be overridden with
 ``BENCH_TOLERANCE``; ``wall_tol`` defaults to 0.50 and can be
 overridden with ``BENCH_WALL_TOLERANCE``.  A baseline marked ``"provisional": true`` (one that
@@ -190,6 +204,26 @@ def main() -> None:
                 f"packer_vs_ffd_cost_ratio {ratio:.4f} > 1 — the packer's FFD "
                 "portfolio fallback is broken"
             )
+    # Long-tail lane: the run must actually have drawn long-tail mixes, and
+    # the population must be dominated by near-idle tenants — the lane's
+    # headline `wall.sim_throughput_rps` measures the idle-aware monitor
+    # fast path, which a mostly-active population would not exercise.
+    longtail_on = bool(cand.get("config", {}).get("longtail", False))
+    if longtail_on:
+        lt_tasks = metric_opt(cand, "aggregate.longtail_tasks")
+        if lt_tasks is None or lt_tasks <= 0:
+            die("longtail sweep ran no longtail task (the longtail lane gates nothing)")
+        idle_frac = metric_opt(cand, "aggregate.mean_near_idle_fraction")
+        if idle_frac is None:
+            die(
+                "longtail sweep lacks 'aggregate.mean_near_idle_fraction' "
+                "(active-fraction telemetry broken)"
+            )
+        if idle_frac < 0.75:
+            die(
+                f"longtail sweep near-idle fraction {idle_frac:.2f} < 0.75 — the "
+                "lane is not long-tailed, so its throughput number is meaningless"
+            )
 
     # -- comparability: the sweep shape must match the baseline's --------
     # (a different scenario count / seed count / master seed / space draws
@@ -208,6 +242,7 @@ def main() -> None:
         cfg.setdefault("calibrate", False)
         cfg.setdefault("faults", False)
         cfg.setdefault("mig", False)
+        cfg.setdefault("longtail", False)
     mismatched = sorted(
         k for k in set(base_cfg) | set(cand_cfg) if base_cfg.get(k) != cand_cfg.get(k)
     )
